@@ -1,0 +1,51 @@
+"""Paper Table 6: estimation (selection) time overhead vs SZ/ZFP compression
+time, per sampling rate."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import select, sz_compress, zfp_compress
+from .common import SUITES, csv_row, timer
+
+
+def run(rates=(0.01, 0.05, 0.10), eb_rel: float = 1e-3, suites=("ATM", "Hurricane", "NYX")):
+    rows = [csv_row("suite", "r_sp", "est_seconds_per_field",
+                    "pct_of_sz_time", "pct_of_zfp_time")]
+    for suite_name in suites:
+        fields = dict(list(SUITES[suite_name]().items())[:6])
+        # compression baselines
+        t_sz = t_zfp = 0.0
+        for f in fields.values():
+            eb = eb_rel * float(f.max() - f.min())
+            _, dt = timer(sz_compress, f, eb)
+            t_sz += dt
+            _, dt = timer(zfp_compress, f, eb)
+            t_zfp += dt
+        t_sz /= len(fields)
+        t_zfp /= len(fields)
+        for r_sp in rates:
+            # warm-up: in the paper's in-situ model the same fields recur
+            # every timestep, so the one-time jit compile is amortized away
+            f0 = next(iter(fields.values()))
+            select(f0, eb_abs=eb_rel * float(f0.max() - f0.min()), r_sp=r_sp)
+            t_est = 0.0
+            for f in fields.values():
+                eb = eb_rel * float(f.max() - f.min())
+                _, dt = timer(lambda: select(f, eb_abs=eb, r_sp=r_sp))
+                t_est += dt
+            t_est /= len(fields)
+            rows.append(csv_row(
+                suite_name, r_sp, f"{t_est:.4f}",
+                f"{100 * t_est / t_sz:.1f}", f"{100 * t_est / t_zfp:.1f}",
+            ))
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json and prints, per (arch x shape x mesh):
+compute/memory/collective terms (seconds), dominant term, MODEL_FLOPS,
+useful-compute ratio."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import csv_row
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run(dryrun_dir: str = DEFAULT_DIR, mesh: str | None = "single"):
+    rows = [csv_row("arch", "shape", "mesh", "status", "t_compute_s", "t_memory_s",
+                    "t_collective_s", "dominant", "model_flops", "useful_ratio",
+                    "hbm_args_MB", "compile_s")]
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skip":
+            rows.append(csv_row(rec["arch"], rec["shape"], rec["mesh"], rec["reason"],
+                                "-", "-", "-", "-", "-", "-", "-", "-"))
+            continue
+        if rec.get("status") != "ok":
+            rows.append(csv_row(rec["arch"], rec["shape"], rec["mesh"], "ERROR",
+                                "-", "-", "-", "-", "-", "-", "-", "-"))
+            continue
+        rl = rec["roofline"]
+        rows.append(csv_row(
+            rec["arch"], rec["shape"], rec["mesh"], "ok",
+            f"{rl['t_compute_s']:.4g}", f"{rl['t_memory_s']:.4g}",
+            f"{rl['t_collective_s']:.4g}", rl["dominant"].replace("t_", "").replace("_s", ""),
+            f"{rec['model_flops']:.3g}", f"{rl['useful_flops_ratio']:.3f}",
+            f"{rec['memory']['argument_bytes'] / 1e6:.0f}",
+            rec.get("compile_seconds", "-"),
+        ))
+    return rows
+
+
+def main() -> None:
+    for r in run(mesh=None):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper §6.2 + Figs 6-7: selection accuracy, compression-ratio improvement
+at iso-PSNR, and the fixed-eb (Lu et al.) vs fixed-PSNR comparison."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import select, sz_compress, zfp_compress
+from .common import SUITES, csv_row
+
+
+def run(eb_rels=(1e-3, 1e-4), suites=("ATM", "Hurricane", "NYX")):
+    rows = [csv_row("suite", "eb_rel", "n_fields", "accuracy",
+                    "cr_sz_only", "cr_zfp_only", "cr_ours", "cr_optimum",
+                    "improve_vs_worst_pct", "degradation_pct", "fixed_eb_picks_sz_pct")]
+    for suite_name in suites:
+        fields = SUITES[suite_name]()
+        for eb_rel in eb_rels:
+            n_ok = 0
+            bits = {"sz": 0.0, "zfp": 0.0, "ours": 0.0, "opt": 0.0}
+            raw_bits = 0.0
+            degr = []
+            fixed_eb_sz = 0
+            for name, f in fields.items():
+                vr = float(f.max() - f.min())
+                eb = eb_rel * vr
+                sel = select(f, eb_abs=eb)
+                # iso-PSNR actuals (SZ run at the matched bin size)
+                b_sz = 8 * len(sz_compress(f, sel.eb_sz))
+                b_zfp = 8 * len(zfp_compress(f, eb))
+                best = "sz" if b_sz < b_zfp else "zfp"
+                pick = sel.codec if sel.codec in ("sz", "zfp") else best
+                n_ok += pick == best
+                bits["sz"] += b_sz
+                bits["zfp"] += b_zfp
+                bits["ours"] += b_sz if pick == "sz" else b_zfp
+                bits["opt"] += min(b_sz, b_zfp)
+                if pick != best:
+                    degr.append(max(b_sz, b_zfp) / min(b_sz, b_zfp) - 1)
+                # Lu-et-al-style fixed-eb selection: larger CR at the SAME eb
+                b_sz_fixed = 8 * len(sz_compress(f, eb))
+                fixed_eb_sz += b_sz_fixed < b_zfp
+                raw_bits += f.size * 32
+            n = len(fields)
+            crs = {k: raw_bits / v for k, v in bits.items()}
+            worst = min(crs["sz"], crs["zfp"])
+            rows.append(csv_row(
+                suite_name, eb_rel, n, f"{n_ok / n:.3f}",
+                f"{crs['sz']:.2f}", f"{crs['zfp']:.2f}", f"{crs['ours']:.2f}",
+                f"{crs['opt']:.2f}",
+                f"{100 * (crs['ours'] / worst - 1):.1f}",
+                f"{100 * float(np.mean(degr)) if degr else 0:.2f}",
+                f"{100 * fixed_eb_sz / n:.0f}",
+            ))
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

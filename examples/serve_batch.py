@@ -1,0 +1,16 @@
+"""Batched serving example: prefill + greedy decode with a KV cache on the
+smoke-size smollm config.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    serve_mod.main(["--arch", "smollm-360m", "--smoke", "--batch", "4",
+                    "--prompt-len", "64", "--gen", "32"])
+
+
+if __name__ == "__main__":
+    main()

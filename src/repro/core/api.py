@@ -1,0 +1,90 @@
+"""Public compression API: fields and pytrees (DESIGN.md §2).
+
+A "field" (paper's unit of selection — one simulation variable) maps to one
+named tensor. `compress_pytree` runs Algorithm 1 per leaf and returns the
+compressed fields + the selection-bit stream, exactly the paper's
+{C_i, s_i} output.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from .selector import CompressedField, compression_ratio, decompress, select_and_compress
+
+
+@dataclass
+class CompressedTree:
+    fields: dict[str, CompressedField]
+    treedef: Any
+
+    @property
+    def selection_bits(self) -> dict[str, str]:
+        return {k: v.codec for k, v in self.fields.items()}
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(v.data) for v in self.fields.values())
+
+    @property
+    def raw_nbytes(self) -> int:
+        return sum(int(np.prod(v.shape)) * 4 for v in self.fields.values())
+
+    @property
+    def ratio(self) -> float:
+        return self.raw_nbytes / max(self.nbytes, 1)
+
+
+def _leaf_name(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def compress_pytree(
+    tree: Any,
+    eb_rel: float = 1e-4,
+    eb_abs: float | None = None,
+    r_sp: float = 0.05,
+    predicate: Callable[[str, np.ndarray], bool] | None = None,
+) -> CompressedTree:
+    """Run Algorithm 1 independently on every float leaf of `tree`."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    fields: dict[str, CompressedField] = {}
+    for path, leaf in leaves:
+        name = _leaf_name(path)
+        arr = np.asarray(leaf)
+        if predicate is not None and not predicate(name, arr):
+            fields[name] = CompressedField("raw", arr.tobytes(), arr.shape, str(arr.dtype))
+            continue
+        if not np.issubdtype(arr.dtype, np.floating):
+            fields[name] = CompressedField("raw", arr.tobytes(), arr.shape, str(arr.dtype))
+            continue
+        fields[name] = select_and_compress(
+            arr.astype(np.float32), eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp
+        )
+    return CompressedTree(fields=fields, treedef=treedef)
+
+
+def decompress_pytree(ct: CompressedTree) -> Any:
+    leaves = []
+    for name, cf in ct.fields.items():
+        if cf.codec == "raw" and cf.selection is None:
+            arr = np.frombuffer(cf.data, dtype=np.dtype(cf.dtype)).reshape(cf.shape)
+        else:
+            arr = decompress(cf)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(ct.treedef, leaves)
+
+
+__all__ = [
+    "CompressedField",
+    "CompressedTree",
+    "compress_pytree",
+    "decompress_pytree",
+    "compression_ratio",
+    "select_and_compress",
+    "decompress",
+]

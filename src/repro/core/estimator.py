@@ -1,0 +1,266 @@
+"""Online compression-quality estimation (paper §4.3, §5 — Steps 1 & 2).
+
+Per field, from a small blockwise sample (default r_sp = 5%):
+
+* SZ  (PBT + linear quantization + Huffman):
+    - PSNR via Eq. (11)  — closed form in the bin size, data-independent.
+    - bit-rate via Eq. (9): Shannon entropy of the delta-binned PDF of the
+      Lorenzo prediction errors (original-neighbor prediction, §4.3)
+      + the +0.5 bits/value Huffman-suboptimality offset (§6.2)
+* ZFP (BOT + embedded coding):
+    - bit-rate via the mean significant-bit count n_sb-bar of r_sp_ec-sampled
+      points of sampled blocks (staircase property, §5.2.1) + coder overhead.
+    - PSNR via the truncation errors of the sampled points (§5.2.2); valid in
+      the original space by the L2 invariance of Theorem 3.
+
+All functions are jnp and jit-compatible so the estimator can also run
+in-graph (gradient/KV compression); the checkpoint writer calls them on host.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .embedded import BLOCK_HEADER_BITS, plane_step, significant_bits
+from .transforms import bot_linf_gain, bot_matrix, block_transform_nd
+
+DEFAULT_SAMPLING_RATE = 0.05  # paper default
+PDF_BINS = 65535  # paper §6.3.2
+SZ_BITRATE_OFFSET = 0.5  # paper §6.2
+#: points sampled per block for embedded-coding estimation (paper §5.2.2)
+EC_POINTS = {1: 3, 2: 9, 3: 16}
+
+
+# ---------------------------------------------------------------------------
+# Step 1 — blockwise sampling
+# ---------------------------------------------------------------------------
+
+
+def _split_strides(target: int, nd: int) -> tuple[int, ...]:
+    """Split 1/r_sp into nd per-dimension block strides, 'fixed in the same
+    dimension and different across dimensions' (paper §4.3)."""
+    strides = []
+    rem = max(target, 1)
+    for i in range(nd - 1, 0, -1):
+        f = max(1, int(round(rem ** (1.0 / (i + 1)))))
+        # nudge successive dims apart so sample lattices don't alias
+        if strides and f == strides[-1] and f > 1:
+            f -= 1
+        strides.append(f)
+        rem = max(1, int(round(rem / f)))
+    strides.append(max(rem, 1))
+    return tuple(strides)
+
+
+def block_starts(shape: tuple[int, ...], r_sp: float) -> np.ndarray:
+    """(n_s, nd) int array of sampled 4^n block origins (static, host-side)."""
+    nd = len(shape)
+    strides = _split_strides(int(round(1.0 / max(r_sp, 1e-6))), nd)
+    axes = []
+    for d, s in zip(shape, strides):
+        nb = max(d // 4, 1)
+        axes.append(np.arange(0, nb, s, dtype=np.int64) * 4)
+    grids = np.meshgrid(*axes, indexing="ij")
+    return np.stack([g.reshape(-1) for g in grids], axis=1)
+
+
+def gather_blocks(x: jax.Array, starts: np.ndarray, halo: bool = False) -> jax.Array:
+    """Gather sampled blocks (n_s, 4, ..) — or (n_s, 5, ..) with a leading
+    halo of *original real neighbors* (zero outside the domain, matching
+    `lorenzo_forward`'s boundary convention)."""
+    nd = x.ndim
+    lo = -1 if halo else 0
+    offs = jnp.arange(lo, 4)
+    idx = []
+    masks = []
+    for d in range(nd):
+        i = jnp.asarray(starts[:, d])[:, None] + offs[None, :]
+        masks.append(i >= 0)
+        idx.append(jnp.clip(i, 0, x.shape[d] - 1))
+    ns = starts.shape[0]
+    w = 4 - lo
+    # broadcasted advanced indexing: (n_s, w, w, ...)
+    bidx = []
+    for d in range(nd):
+        sh = [ns] + [1] * nd
+        sh[1 + d] = w
+        bidx.append(idx[d].reshape(sh))
+    out = x[tuple(bidx)]
+    if halo:
+        for d in range(nd):
+            sh = [ns] + [1] * nd
+            sh[1 + d] = w
+            out = out * masks[d].reshape(sh).astype(out.dtype)
+    return out
+
+
+def lorenzo_residual_samples(
+    x: jax.Array, starts: np.ndarray, delta: jax.Array | float | None = None
+) -> jax.Array:
+    """Prediction errors of the sampled points, predicted from original real
+    neighbors (§4.3 — 'the sampling process for PBT will not introduce
+    additional errors'). Returns (n_s * 4^nd,) residuals.
+
+    With `delta`, values are prequantized to integer codes first, so the
+    residual distribution exactly matches the TPU-adapted integer-Lorenzo
+    codec (DESIGN.md §3.1) including the rounding-noise inflation; without
+    it, this is the paper's original-float PBT (mode='paper').
+    """
+    nd = x.ndim
+    hal = gather_blocks(x, starts, halo=True)  # (n_s, 5, ..)
+    if delta is not None:
+        hal = jnp.round(hal / jnp.asarray(delta, hal.dtype))
+    d = hal
+    for ax in range(1, nd + 1):
+        upper = jax.lax.slice_in_dim(d, 1, d.shape[ax], axis=ax)
+        lower = jax.lax.slice_in_dim(d, 0, d.shape[ax] - 1, axis=ax)
+        d = upper - lower
+    return d.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Step 2 — SZ estimation
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Estimate:
+    bitrate: jax.Array
+    psnr: jax.Array
+
+
+def sz_psnr(eb: jax.Array | float, vr: jax.Array | float) -> jax.Array:
+    """Eq. (11): PSNR_sz = -20 log10(eb/VR) + 10 log10(3)."""
+    eb_rel = jnp.asarray(eb, jnp.float32) / jnp.asarray(vr, jnp.float32)
+    return -20.0 * jnp.log10(jnp.maximum(eb_rel, 1e-30)) + 10.0 * math.log10(3.0)
+
+
+def sz_delta_for_psnr(psnr: jax.Array, vr: jax.Array | float) -> jax.Array:
+    """Invert Eq. (10): delta = VR * sqrt(12) * 10^(-PSNR/20)."""
+    return jnp.asarray(vr, jnp.float32) * math.sqrt(12.0) * 10.0 ** (-psnr / 20.0)
+
+
+def estimate_sz(
+    x: jax.Array,
+    delta: jax.Array | float,
+    starts: np.ndarray,
+    vr: jax.Array | float,
+    n_pdf: int = PDF_BINS,
+    mode: str = "integer",
+) -> Estimate:
+    """Eq. (9) entropy bit-rate (+0.5 offset) and Eq. (11) PSNR.
+
+    mode='paper'   — PDF of float Lorenzo residuals binned by delta (§5.1).
+    mode='integer' — PDF of integer-code residuals, matching the
+                     prequantized codec exactly (default; DESIGN.md §3.1).
+    """
+    delta = jnp.asarray(delta, jnp.float32)
+    half = (n_pdf - 1) // 2
+    if mode == "integer":
+        k_raw = lorenzo_residual_samples(x, starts, delta=delta)
+    else:
+        k_raw = jnp.round(lorenzo_residual_samples(x, starts) / delta)
+    ofrac = jnp.mean((jnp.abs(k_raw) > half).astype(jnp.float32))  # escapes
+    k = jnp.clip(k_raw, -half, half)
+    hist = jnp.histogram(k, bins=n_pdf, range=(-half - 0.5, half + 0.5))[0]
+    p = hist.astype(jnp.float32) / jnp.maximum(hist.sum(), 1)
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0))
+    # Huffman-table cost: symbol richness extrapolated from the sample by
+    # the Chao1 estimator (f1 singletons / f2 doubletons), ~5 bits/symbol
+    # after the zstd'd delta+length serialization in entropy.py.
+    n_obs = jnp.sum((hist > 0).astype(jnp.float32))
+    f1 = jnp.sum((hist == 1).astype(jnp.float32))
+    f2 = jnp.sum((hist == 2).astype(jnp.float32))
+    chao1 = n_obs + f1 * jnp.maximum(f1 - 1.0, 0.0) / (2.0 * (f2 + 1.0))
+    table_bits = 5.0 * jnp.minimum(chao1, float(n_pdf))
+    # escape symbols carry a raw 64-bit residual payload (sz.py)
+    br = ent + SZ_BITRATE_OFFSET + ofrac * 64.0 + table_bits / jnp.maximum(x.size, 1)
+    return Estimate(bitrate=br, psnr=sz_psnr(delta / 2.0, vr))
+
+
+# ---------------------------------------------------------------------------
+# Step 2 — ZFP estimation
+# ---------------------------------------------------------------------------
+
+
+def _ec_point_mask(nd: int) -> np.ndarray:
+    """Fixed point pattern inside a 4^nd block (3/9/16 pts for 1/2/3-D)."""
+    m = np.zeros((4,) * nd, dtype=bool)
+    if nd == 1:
+        m[np.array([0, 1, 3])] = True
+    elif nd == 2:
+        for i in (0, 1, 3):
+            for j in (0, 2, 3):
+                m[i, j] = True
+    else:
+        # 16 of 64: a 2x2x4 lattice
+        m[np.ix_((0, 2), (1, 3), (0, 1, 2, 3))] = True
+    return m
+
+
+def estimate_zfp(
+    x: jax.Array,
+    eb: jax.Array | float,
+    starts: np.ndarray,
+    vr: jax.Array | float,
+    transform: str = "zfp",
+    mode: str = "exact",
+) -> Estimate:
+    """ZFP quality estimate from sampled blocks.
+
+    mode='paper' — n_sb-bar bit-rate from r_sp_ec-subsampled points
+                   (§5.2.1) + coder-overhead terms.
+    mode='exact' — run the exact coder bit counter on the sampled blocks
+                   (default): same sampling overhead profile, no model bias;
+                   the only estimation error left is sampling error.
+    PSNR is PSNR_sp (§5.2.2) in both modes; Theorem 3 transfers it to the
+    original space.
+    """
+    nd = x.ndim
+    blocks = gather_blocks(x, starts, halo=False).astype(jnp.float32)
+    n_s = blocks.shape[0]
+    mx = jnp.maximum(jnp.max(jnp.abs(blocks.reshape(n_s, -1)), axis=1), 1e-30)
+    e = jnp.ceil(jnp.log2(mx)).astype(jnp.int32)
+    norm = blocks * jnp.exp2(-e.astype(jnp.float32)).reshape((-1,) + (1,) * nd)
+    T = jnp.asarray(bot_matrix(transform), jnp.float32)
+    coeffs = block_transform_nd(norm, T, nd)
+    gain_n = bot_linf_gain(transform) ** nd
+    step = plane_step(jnp.asarray(eb, jnp.float32), e, gain_n)
+    nsb = significant_bits(coeffs, step)  # (n_s, 4, ..)
+    pmask = _ec_point_mask(nd)
+    flat_nsb = nsb.reshape(n_s, -1)
+    flat_co = coeffs.reshape(n_s, -1)
+    sel = np.flatnonzero(pmask.reshape(-1))  # concrete (jit-static) indices
+    samp_nsb = flat_nsb[:, sel]  # (n_s, n_ec)
+    bsz = 4**nd
+    # bit-rate: mean n_sb (staircase interpolation == mean over uniform
+    # sample) + coder overhead (header + group bits + sign bits) per value
+    if mode == "exact":
+        from .embedded import exact_coder_bits
+
+        bitrate = exact_coder_bits(coeffs, step) / (n_s * bsz)
+    else:
+        nbar = jnp.mean(samp_nsb)
+        max_planes = jnp.mean(jnp.max(samp_nsb, axis=1))
+        sig_frac = jnp.mean((samp_nsb > 0).astype(jnp.float32))
+        w = math.ceil(math.log2(bsz + 1))
+        overhead = (BLOCK_HEADER_BITS + w * max_planes) / bsz + 2.0 * sig_frac
+        bitrate = nbar + overhead
+    # PSNR: truncation error of the sampled points, de-normalized; Theorem 3
+    # makes the transformed-space MSE equal the original-space MSE
+    s = step.reshape(-1, 1).astype(jnp.float32)
+    co = flat_co[:, sel]
+    m = jnp.trunc(jnp.abs(co) / s)
+    rec = jnp.sign(co) * jnp.where(m > 0, (m + 0.5) * s, 0.0)
+    scale = jnp.exp2(e.astype(jnp.float32)).reshape(-1, 1)
+    err = (co - rec) * scale
+    mse_sp = jnp.mean(jnp.square(err))
+    vr64 = jnp.maximum(jnp.asarray(vr, jnp.float32), 1e-30)
+    psnr = -10.0 * jnp.log10(jnp.maximum(mse_sp, 1e-60)) + 20.0 * jnp.log10(vr64)
+    return Estimate(bitrate=bitrate, psnr=psnr)

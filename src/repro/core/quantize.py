@@ -1,0 +1,85 @@
+"""Stage II static vector quantization (paper §5.1).
+
+Implements the three analyzed quantizer families (§5.1.4):
+
+* linear  — SZ's equal-width bins, width delta = 2*eb (error <= eb).
+* log     — log-scale bins (finer near zero; higher PSNR, worse entropy).
+* equiprob — equal-probability bins (NUMARCK-style).
+
+All quantizers return integer codes; `dequantize_*` reconstructs the bin
+midpoint (the paper's "estimated value").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# -- linear (SZ) ------------------------------------------------------------
+
+
+def linear_quantize(x: jax.Array, eb: float) -> jax.Array:
+    """Prequantization onto the uniform grid with bin size 2*eb.
+
+    |x - dequantize(quantize(x))| <= eb by construction (Theorem 1 then
+    carries this bound through the Lorenzo PBT unchanged).
+    """
+    delta = 2.0 * eb
+    return jnp.round(x / delta).astype(jnp.int32)
+
+
+def linear_dequantize(codes: jax.Array, eb: float, dtype=jnp.float32) -> jax.Array:
+    return (codes.astype(jnp.float64) * (2.0 * eb)).astype(dtype)
+
+
+# -- log-scale (§5.1.4) ------------------------------------------------------
+
+
+def log_quantize(
+    x: jax.Array, n_bins_half: int, max_abs: float, dynamic_range: float = 1e6
+) -> tuple[jax.Array, jax.Array]:
+    """Log-scale quantization with ~2n-1 bins refining toward zero (§5.1.4):
+    bin k covers max_abs * (b^(k-1), b^k] for k in (-n+1, 0]; |x| below the
+    dynamic-range floor maps to the zero bin. Returns (codes, [b, max])."""
+    n = n_bins_half
+    mx = jnp.maximum(jnp.asarray(max_abs, jnp.float32), 1e-30)
+    b = jnp.exp(jnp.log(jnp.asarray(dynamic_range, jnp.float32)) / n)
+    mag = jnp.abs(x) / mx
+    k = jnp.ceil(jnp.log(jnp.maximum(mag, 1e-30)) / jnp.log(b))  # <= 0
+    k = jnp.clip(k, -(n - 1), 0)
+    dead = mag < 1.0 / dynamic_range
+    code = jnp.where(dead, 0, (k + n) * jnp.sign(x))
+    return code.astype(jnp.int32), jnp.stack([b, mx])
+
+
+def log_dequantize(codes: jax.Array, b_mx: jax.Array, dtype=jnp.float32, n_bins_half: int | None = None) -> jax.Array:
+    """Inverse: geometric-midpoint reconstruction. `n_bins_half` must match
+    the encoder's (defaults to inferring from the max code)."""
+    b, mx = b_mx[0], b_mx[1]
+    n = n_bins_half if n_bins_half is not None else jnp.max(jnp.abs(codes))
+    k = jnp.abs(codes).astype(jnp.float32) - n  # <= 0
+    mid = jnp.where(
+        codes == 0,
+        0.0,
+        jnp.sign(codes).astype(jnp.float32) * mx * b ** (k - 0.5),
+    )
+    return mid.astype(dtype)
+
+
+# -- equal-probability (NUMARCK-style, §5.1.4) --------------------------------
+
+
+def equiprob_edges(x: jax.Array, n_bins: int) -> jax.Array:
+    """Bin edges at equally spaced quantiles (the clustering approximation)."""
+    qs = jnp.linspace(0.0, 1.0, n_bins + 1)
+    return jnp.quantile(x.reshape(-1).astype(jnp.float64), qs)
+
+
+def equiprob_quantize(x: jax.Array, edges: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.searchsorted(edges, x.reshape(-1), side="right") - 1, 0, edges.shape[0] - 2).reshape(x.shape).astype(jnp.int32)
+
+
+def equiprob_dequantize(codes: jax.Array, edges: jax.Array, dtype=jnp.float32) -> jax.Array:
+    mids = (edges[:-1] + edges[1:]) / 2.0
+    return mids[codes].astype(dtype)

@@ -1,0 +1,161 @@
+"""Stage I lossless transformations for energy compaction (paper §4).
+
+Two families:
+
+* PBT — prediction-based transformation (SZ's Lorenzo predictor, §4.1).
+  TPU adaptation (DESIGN.md §3): we use the *prequantized integer Lorenzo*
+  formulation. The n-dimensional Lorenzo residual is exactly the composition
+  of first-order backward differences along each axis; its inverse is the
+  composition of inclusive prefix-sums. Both are pure stencils / scans —
+  fully parallel, no loop-carried dependency across the array.
+
+* BOT — block orthogonal transformation (ZFP/SSEM, §4.2). The paper's
+  parametric family T(t) covers HWT (t=0), DCT-II (t=1/4), slant,
+  high-correlation (closest to ZFP's lifted transform) and Walsh-Hadamard.
+  Orthogonality gives the L2-invariance of Lemma 2 / Theorem 3.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# PBT: n-dimensional Lorenzo transform as separable first-order differences
+# ---------------------------------------------------------------------------
+
+
+def lorenzo_forward(x: jax.Array) -> jax.Array:
+    """n-D Lorenzo residual: x[i] - (inclusion/exclusion over preceding corner).
+
+    Equivalent to applying a zero-padded backward difference along every axis.
+    Lossless over integers; over floats it is the PBT of §4.1 with the
+    original-neighbor prediction used by the estimator (§4.3).
+    """
+    out = x
+    for axis in range(x.ndim):
+        prev = jnp.roll(out, 1, axis=axis)
+        # zero out the wrapped-around first slice
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(0, 1)
+        prev = prev.at[tuple(idx)].set(0)
+        out = out - prev
+    return out
+
+
+def lorenzo_inverse(d: jax.Array) -> jax.Array:
+    """Inverse PBT: inclusive prefix-sum along every axis (exact in ints)."""
+    out = d
+    for axis in range(d.ndim):
+        out = jnp.cumsum(out, axis=axis)
+    return out
+
+
+def lorenzo_predict(x: jax.Array) -> jax.Array:
+    """The Lorenzo *prediction* for each point from original real neighbors.
+
+    pred = x - lorenzo_forward(x); exposed for estimator diagnostics.
+    """
+    return x - lorenzo_forward(x)
+
+
+# ---------------------------------------------------------------------------
+# BOT: the parametric 4x4 orthogonal transform family (paper §4.2)
+# ---------------------------------------------------------------------------
+
+#: named parameter values for T(t)
+BOT_PRESETS = {
+    "hwt": 0.0,
+    "dct2": 0.25,
+    "slant": (2.0 / math.pi) * math.atan(1.0 / 3.0),
+    "high_corr": (2.0 / math.pi) * math.atan(1.0 / 2.0),  # ~ZFP's transform
+    "wht": 0.5,
+    "zfp": (2.0 / math.pi) * math.atan(1.0 / 2.0),
+}
+
+
+def bot_matrix(t: float | str = "zfp") -> np.ndarray:
+    """The paper's uniform parametric 4x4 orthogonal transform T(t)."""
+    if isinstance(t, str):
+        t = BOT_PRESETS[t]
+    s = math.sqrt(2.0) * math.sin(math.pi / 2.0 * t)
+    c = math.sqrt(2.0) * math.cos(math.pi / 2.0 * t)
+    T = 0.5 * np.array(
+        [
+            [1.0, 1.0, 1.0, 1.0],
+            [c, s, -s, -c],
+            [1.0, -1.0, -1.0, 1.0],
+            [s, -c, c, -s],
+        ],
+        dtype=np.float64,
+    )
+    return T
+
+
+def bot_linf_gain(t: float | str = "zfp") -> float:
+    """Max-abs-row-sum of T^t per axis = worst-case Linf amplification of the
+    inverse transform; used to pick a conservative bit-plane cutoff so the
+    user's absolute error bound holds pointwise after reconstruction
+    (this is exactly why "ZFP over-preserves the compression error", §6.4).
+    """
+    T = bot_matrix(t)
+    return float(np.abs(T.T).sum(axis=1).max())
+
+
+def block_transform_nd(blocks: jax.Array, T: jax.Array, n: int, inverse: bool = False) -> jax.Array:
+    """Apply the 1-D transform T along each of the trailing `n` axes (size 4).
+
+    `blocks` has shape (..., 4, 4, ..., 4) — the paper's fold/unfold along
+    D_1..D_n axes is an einsum contraction per axis (index remapping only,
+    so the elementwise L2 norm is preserved per Lemma 2).
+    """
+    M = T.T if inverse else T
+    M = jnp.asarray(M, dtype=blocks.dtype)
+    out = blocks
+    for axis in range(blocks.ndim - n, blocks.ndim):
+        out = jnp.tensordot(out, M, axes=[[axis], [1]])
+        # tensordot moved the contracted axis to the end; move it back
+        out = jnp.moveaxis(out, -1, axis)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocking: split an n-D field into 4^n blocks (pad edges), and back
+# ---------------------------------------------------------------------------
+
+
+def blockize(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    """(d1,...,dn) -> (nblocks, 4, ..., 4). Edge blocks are padded by
+    replicating the last valid element (keeps block statistics sane)."""
+    ndim = x.ndim
+    pads = []
+    for s in x.shape:
+        pads.append((0, (-s) % 4))
+    x = jnp.pad(x, pads, mode="edge")
+    shape = x.shape
+    # interleave (d_i//4, 4)
+    new_shape = []
+    for s in shape:
+        new_shape += [s // 4, 4]
+    x = x.reshape(new_shape)
+    # move all block-count axes first
+    perm = [2 * i for i in range(ndim)] + [2 * i + 1 for i in range(ndim)]
+    x = x.transpose(perm)
+    nblk = int(np.prod(x.shape[:ndim]))
+    return x.reshape((nblk,) + (4,) * ndim), shape
+
+
+def unblockize(blocks: jax.Array, padded_shape: tuple[int, ...], orig_shape: tuple[int, ...]) -> jax.Array:
+    ndim = len(padded_shape)
+    grid = [s // 4 for s in padded_shape]
+    x = blocks.reshape(tuple(grid) + (4,) * ndim)
+    perm = []
+    for i in range(ndim):
+        perm += [i, ndim + i]
+    x = x.transpose(perm).reshape(padded_shape)
+    sl = tuple(slice(0, s) for s in orig_shape)
+    return x[sl]

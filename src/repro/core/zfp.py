@@ -1,0 +1,269 @@
+"""ZFP-style transform-based error-bounded lossy compressor (paper §2, §5.2).
+
+Pipeline (Fig. 1): 4^n blocking -> exponent alignment -> fixed point ->
+block orthogonal transform T(t) -> bit-plane embedded coding.
+
+Two paths, mirroring sz.py:
+  * `zfp_stats`     — jnp/jit-safe reconstruction + exact rate/distortion.
+  * `zfp_compress` / `zfp_decompress` — host numpy byte codec with a real,
+    decodable, *plane-sectioned group-tested* embedded coder (DESIGN.md §3.2):
+    the bit stream is laid out plane-major across all blocks so both encode
+    and decode are fully vectorized over blocks (TPU/SIMD-friendly layout,
+    unlike ZFP's per-block serial group testing — same rate regime).
+
+Pointwise guarantee: |x - x~| <= eb via the conservative plane cutoff
+(`embedded.plane_step`), which is exactly why ZFP "over-preserves" error
+relative to the bound (paper §6.4) and thus reaches a higher PSNR than SZ
+at the same eb.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .embedded import (
+    BLOCK_HEADER_BITS,
+    align_blocks,
+    block_bits,
+    exact_coder_bits,
+    plane_step,
+    reconstruct_truncated,
+)
+from .transforms import blockize, bot_linf_gain, bot_matrix, block_transform_nd, unblockize
+
+_MAGIC = b"ZFJX"
+
+
+# ---------------------------------------------------------------------------
+# in-graph statistics path
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ZFPStats:
+    bitrate: jax.Array
+    psnr: jax.Array
+    mse: jax.Array
+    recon: jax.Array
+    mean_nsb: jax.Array  # the paper's n_sb-bar estimate target
+
+
+def zfp_stats(x: jax.Array, eb: jax.Array | float, transform: str = "zfp") -> ZFPStats:
+    """Exact rate/distortion of the ZFP path, computed in-graph."""
+    xf = x.astype(jnp.float32)
+    n = xf.ndim
+    T = bot_matrix(transform)
+    gain_n = bot_linf_gain(transform) ** n
+    blocks, padded = blockize(xf)
+    norm, e = align_blocks(blocks)
+    coeffs = block_transform_nd(norm, jnp.asarray(T, jnp.float32), n)
+    step = plane_step(jnp.asarray(eb, jnp.float32), e, gain_n)
+    rec_coeffs = reconstruct_truncated(coeffs, step)
+    total_bits = exact_coder_bits(coeffs, step)
+    rec_norm = block_transform_nd(rec_coeffs, jnp.asarray(T, jnp.float32), n, inverse=True)
+    shape = (-1,) + (1,) * n
+    rec_blocks = rec_norm * jnp.exp2(e.astype(jnp.float32)).reshape(shape)
+    recon = unblockize(rec_blocks, padded, xf.shape)
+    from .embedded import significant_bits
+
+    nsb = significant_bits(coeffs, step)
+    err = xf - recon
+    mse = jnp.mean(jnp.square(err.astype(jnp.float32)))
+    vr = jnp.maximum(jnp.max(xf) - jnp.min(xf), 1e-30).astype(jnp.float32)
+    psnr = -10.0 * jnp.log10(jnp.maximum(mse, 1e-60) / (vr * vr))
+    bitrate = total_bits / xf.size
+    return ZFPStats(bitrate=bitrate, psnr=psnr, mse=mse, recon=recon, mean_nsb=jnp.mean(nsb))
+
+
+# ---------------------------------------------------------------------------
+# host byte codec
+# ---------------------------------------------------------------------------
+
+
+def _prepare_blocks(x: np.ndarray, eb: float, transform: str):
+    n = x.ndim
+    T = bot_matrix(transform)  # float64
+    gain_n = bot_linf_gain(transform) ** n
+    blocks, padded = blockize(jnp.asarray(x, jnp.float32))
+    blocks = np.asarray(blocks, dtype=np.float64)
+    mx = np.maximum(np.abs(blocks).reshape(blocks.shape[0], -1).max(axis=1), 1e-30)
+    e = np.ceil(np.log2(mx)).astype(np.int16)
+    norm = blocks * np.exp2(-e.astype(np.float64)).reshape((-1,) + (1,) * n)
+    coeffs = norm
+    for axis in range(1, n + 1):
+        coeffs = np.moveaxis(np.tensordot(coeffs, T, axes=[[axis], [1]]), -1, axis)
+    raw = eb / (np.exp2(e.astype(np.float64)) * gain_n)
+    pexp = np.floor(np.log2(np.maximum(raw, 2.0**-60)))
+    step = np.exp2(pexp)
+    q = np.trunc(coeffs.reshape(coeffs.shape[0], -1) / step[:, None]).astype(np.int64)
+    return q, e, step, padded, gain_n, T
+
+
+def _degree_order(nd: int) -> np.ndarray:
+    """ZFP's total-degree coefficient ordering within a 4^nd block: low-degree
+    (high-energy) coefficients first, so the significance staircase is
+    monotone-ish and the k-prefix coder below stays near n_sb-bar bits."""
+    idx = np.indices((4,) * nd).reshape(nd, -1)
+    degree = idx.sum(axis=0)
+    return np.argsort(degree, kind="stable")
+
+
+def _k_width(bsz: int) -> int:
+    """Bits to encode k in [0, bsz]."""
+    return int(np.ceil(np.log2(bsz + 1)))
+
+
+def _emit_planes(m: np.ndarray, neg: np.ndarray, nsb: np.ndarray) -> list[np.ndarray]:
+    """Plane-major, degree-ordered k-prefix significance coding.
+
+    Per plane & block: refinement bits of significant coeffs; a fixed-width
+    k = 1 + rank of the last newly-significant remaining coefficient (0 if
+    none); significance bits of the first k remaining coefficients only;
+    signs of the newly significant. Vectorized over all blocks (m must
+    already be in degree order).
+    """
+    parts: list[np.ndarray] = []
+    nblk, bsz = m.shape
+    w = _k_width(bsz)
+    kshift = np.arange(w - 1, -1, -1, dtype=np.int64)
+    maxp = int(nsb.max()) if nsb.size else 0
+    for p in range(maxp - 1, -1, -1):
+        active = nsb > p
+        if not active.any():
+            continue
+        act = active[:, None]
+        sig_prev = (m >> (p + 1)) > 0
+        bit_p = ((m >> p) & 1).astype(np.uint8)
+        # 1) refinement bits of already-significant coefficients
+        parts.append(bit_p[act & sig_prev])
+        # 2) k per active block with remaining coeffs (fixed width w)
+        rem = act & ~sig_prev
+        has_rem = rem.any(axis=1) & active
+        rank = np.cumsum(rem, axis=1) - 1  # rank among remaining, valid on rem
+        newly = rem & (bit_p == 1)
+        k = np.max(np.where(newly, rank + 1, 0), axis=1)  # (nblk,)
+        kb = ((k[has_rem, None] >> kshift[None, :]) & 1).astype(np.uint8)
+        parts.append(kb.reshape(-1))
+        # 3) significance bits of the first k remaining coefficients
+        test = rem & (rank < k[:, None])
+        parts.append(bit_p[test])
+        # 4) signs of newly-significant coefficients
+        parts.append(neg[newly].astype(np.uint8))
+    return parts
+
+
+def _read_planes(bits: np.ndarray, pos: int, nblk: int, bsz: int, nsb: np.ndarray):
+    m = np.zeros((nblk, bsz), dtype=np.int64)
+    neg = np.zeros((nblk, bsz), dtype=bool)
+    w = _k_width(bsz)
+    kweights = (1 << np.arange(w - 1, -1, -1)).astype(np.int64)
+    maxp = int(nsb.max()) if nsb.size else 0
+    for p in range(maxp - 1, -1, -1):
+        active = nsb > p
+        if not active.any():
+            continue
+        act = active[:, None]
+        sig_prev = m > 0  # m currently holds bits above plane p
+        m[active] <<= 1
+        # 1) refinement
+        ref_mask = act & sig_prev
+        nref = int(ref_mask.sum())
+        if nref:
+            m[ref_mask] |= bits[pos : pos + nref]
+        pos += nref
+        # 2) k values
+        rem = act & ~sig_prev
+        has_rem = rem.any(axis=1) & active
+        ngrp = int(has_rem.sum())
+        k = np.zeros(nblk, dtype=np.int64)
+        if ngrp:
+            kb = bits[pos : pos + ngrp * w].reshape(ngrp, w)
+            k[has_rem] = kb @ kweights
+        pos += ngrp * w
+        # 3) significance bits of the first k remaining coefficients
+        rank = np.cumsum(rem, axis=1) - 1
+        test = rem & (rank < k[:, None])
+        nbm = int(test.sum())
+        newly = np.zeros_like(rem)
+        if nbm:
+            bmb = bits[pos : pos + nbm]
+            m[test] |= bmb
+            newly[test] = bmb.astype(bool)
+        pos += nbm
+        # 4) signs
+        nnew = int(newly.sum())
+        if nnew:
+            neg[newly] = bits[pos : pos + nnew].astype(bool)
+        pos += nnew
+    return m, neg, pos
+
+
+def zfp_compress(x: np.ndarray, eb: float, transform: str = "zfp") -> bytes:
+    x = np.asarray(x, dtype=np.float32)
+    n = x.ndim
+    q, e, step, padded, gain_n, _ = _prepare_blocks(x, eb, transform)
+    order = _degree_order(n)
+    q = q[:, order]  # degree-ordered layout for the k-prefix coder
+    m = np.abs(q)
+    neg = q < 0
+    mx = m.max(axis=1)
+    nsb = np.zeros(len(m), dtype=np.uint8)
+    nz = mx > 0
+    nsb[nz] = np.floor(np.log2(mx[nz])).astype(np.uint8) + 1
+    parts = _emit_planes(m, neg, nsb)
+    allbits = np.concatenate(parts) if parts else np.zeros(0, dtype=np.uint8)
+    payload = np.packbits(allbits).tobytes()
+    hdr = struct.pack("<4sBdQ", _MAGIC, n, float(eb), len(m)) + struct.pack(
+        f"<{n}q{n}q", *x.shape, *padded
+    )
+    return b"".join(
+        [
+            hdr,
+            transform.encode().ljust(16, b"\0"),
+            e.astype(np.int16).tobytes(),
+            nsb.tobytes(),
+            struct.pack("<Q", int(allbits.size)),
+            payload,
+        ]
+    )
+
+
+def zfp_decompress(buf: bytes) -> np.ndarray:
+    off = 0
+    magic, n, eb, nblk = struct.unpack_from("<4sBdQ", buf, off)
+    assert magic == _MAGIC, "not a ZFJX stream"
+    off += struct.calcsize("<4sBdQ")
+    dims = struct.unpack_from(f"<{n}q{n}q", buf, off)
+    off += 16 * n
+    shape, padded = tuple(dims[:n]), tuple(dims[n:])
+    transform = buf[off : off + 16].rstrip(b"\0").decode()
+    off += 16
+    e = np.frombuffer(buf[off : off + 2 * nblk], dtype=np.int16)
+    off += 2 * nblk
+    nsb = np.frombuffer(buf[off : off + nblk], dtype=np.uint8)
+    off += nblk
+    (nbits,) = struct.unpack_from("<Q", buf, off)
+    off += 8
+    bits = np.unpackbits(np.frombuffer(buf[off:], dtype=np.uint8))[:nbits].astype(np.int64)
+    bsz = 4**n
+    m, neg, _ = _read_planes(bits, 0, nblk, bsz, nsb.astype(np.int64))
+    inv = np.argsort(_degree_order(n))  # undo the degree-ordered layout
+    m = m[:, inv]
+    neg = neg[:, inv]
+    gain_n = bot_linf_gain(transform) ** n
+    raw = eb / (np.exp2(e.astype(np.float64)) * gain_n)
+    step = np.exp2(np.floor(np.log2(np.maximum(raw, 2.0**-60))))
+    mag = np.where(m > 0, (m.astype(np.float64) + 0.5) * step[:, None], 0.0)
+    coeffs = np.where(neg, -mag, mag).reshape((nblk,) + (4,) * n)
+    T = bot_matrix(transform)
+    rec = coeffs
+    for axis in range(1, n + 1):
+        rec = np.moveaxis(np.tensordot(rec, T.T, axes=[[axis], [1]]), -1, axis)
+    rec = rec * np.exp2(e.astype(np.float64)).reshape((-1,) + (1,) * n)
+    out = unblockize(jnp.asarray(rec, jnp.float32), padded, shape)
+    return np.asarray(out, dtype=np.float32)

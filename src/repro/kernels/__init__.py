@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the compression hot spots (validated in
+interpret mode on CPU; TPU is the target)."""
+
+from . import ops  # noqa: F401

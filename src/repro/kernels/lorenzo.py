@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused prequantize + 2-D integer-Lorenzo encode/decode.
+
+The SZ Stage I+II hot spot (DESIGN.md §3.1, §3.3). One pass over HBM:
+round(x / 2eb) and the 2-D Lorenzo difference of the integer codes, tiled
+through VMEM. Tile-boundary neighbors are fetched with one extra row / one
+extra column / one corner *view* of the same input (1-element-granular
+index maps on (1, bn)/(bm, 1)/(1, 1) blocks), so no halo padding or
+materialized shifted copies are needed.
+
+TPU mapping notes:
+  * (bm, bn) = (256, 256) default — 256 KiB f32 per tile, lane dim a
+    multiple of 128 for clean (8,128) VREG tiling.
+  * round / sub are VPU element ops; the whole kernel is memory-bound, so
+    fusing quantize+stencil halves HBM traffic vs running them separately.
+  * grid is fully parallel (no carried state — this is the entire point of
+    the prequantized reformulation vs sequential SZ).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _encode_kernel(eb_ref, x_ref, top_ref, left_ref, corner_ref, out_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    delta = 2.0 * eb_ref[0, 0]
+    k = jnp.round(x_ref[...] / delta)
+    # halo rows/cols are views of the same array one element back; mask the
+    # domain boundary (Lorenzo predicts 0 outside the domain)
+    top = jnp.round(top_ref[...] / delta) * (i > 0)  # (1, bn)
+    left = jnp.round(left_ref[...] / delta) * (j > 0)  # (bm, 1)
+    corner = jnp.round(corner_ref[...] / delta) * ((i > 0) & (j > 0))  # (1,1)
+    k_up = jnp.concatenate([top, k[:-1, :]], axis=0)
+    k_left = jnp.concatenate([left, k[:, :-1]], axis=1)
+    ul_row = jnp.concatenate([corner, top[:, :-1]], axis=1)  # (1, bn)
+    k_ul = jnp.concatenate([ul_row, k_left[:-1, :]], axis=0)
+    d = k - k_up - k_left + k_ul
+    out_ref[...] = d.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def lorenzo2d_encode(
+    x: jax.Array,
+    eb: jax.Array | float,
+    block: tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused quantize+Lorenzo for a 2-D f32 field -> int32 residual codes.
+
+    Requires shape divisible by `block` (ops.py pads).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, n = x.shape
+    bm, bn = block
+    assert m % bm == 0 and n % bn == 0, (x.shape, block)
+    grid = (m // bm, n // bn)
+    eb_arr = jnp.full((1, 1), eb, jnp.float32)
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            # one-row view starting at element row i*bm - 1 (clamped at 0;
+            # the kernel masks i == 0 anyway)
+            pl.BlockSpec((1, bn), lambda i, j: (i * bm - 1, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, j * bn - 1)),
+            pl.BlockSpec((1, 1), lambda i, j: (i * bm - 1, j * bn - 1)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(eb_arr, x, x, x, x)
+
+
+def _dequant_kernel(eb_ref, k_ref, out_ref):
+    delta = 2.0 * eb_ref[0, 0]
+    out_ref[...] = k_ref[...].astype(jnp.float32) * delta
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequantize2d(
+    k: jax.Array,
+    eb: jax.Array | float,
+    block: tuple[int, int] = DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Reconstruction from integer codes (decode-side Stage II inverse).
+
+    The Lorenzo inverse itself (2-D cumsum) is left to XLA's optimized scan;
+    this kernel fuses only the elementwise dequantize."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, n = k.shape
+    bm, bn = block
+    assert m % bm == 0 and n % bn == 0
+    eb_arr = jnp.full((1, 1), eb, jnp.float32)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(eb_arr, k)

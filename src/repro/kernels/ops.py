@@ -1,0 +1,54 @@
+"""Jit'd public wrappers over the Pallas kernels, with padding + dispatch.
+
+`lorenzo_encode` / `lorenzo_decode` and `bot_fused` accept arbitrary-shape
+fields; 2-D shapes route to the Pallas kernels (padded up to tile
+multiples), everything else falls back to the ref.py / core jnp paths.
+On CPU the kernels run in interpret mode (TPU is the target)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transforms import lorenzo_forward, lorenzo_inverse
+
+from . import bot4, lorenzo, ref
+
+
+def _pad_to(x: jax.Array, bm: int, bn: int) -> tuple[jax.Array, tuple[int, int]]:
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, (m, n)
+
+
+def lorenzo_encode(x: jax.Array, eb, block=lorenzo.DEFAULT_BLOCK) -> jax.Array:
+    """Quantize + n-D Lorenzo difference -> int32 codes (same shape)."""
+    if x.ndim == 2 and x.shape[0] >= 8:
+        xp, (m, n) = _pad_to(x, *block)
+        return lorenzo.lorenzo2d_encode(xp, eb, block=block)[:m, :n]
+    delta = 2.0 * jnp.asarray(eb, jnp.float32)
+    return lorenzo_forward(jnp.round(x.astype(jnp.float32) / delta)).astype(jnp.int32)
+
+
+def lorenzo_decode(d: jax.Array, eb, block=lorenzo.DEFAULT_BLOCK) -> jax.Array:
+    """Inverse Lorenzo (n-D cumsum) + dequantize -> f32 reconstruction."""
+    k = lorenzo_inverse(d.astype(jnp.float32))
+    if d.ndim == 2 and d.shape[0] >= 8:
+        kp, (m, n) = _pad_to(k.astype(jnp.int32), *block)
+        return lorenzo.dequantize2d(kp, eb, block=block)[:m, :n]
+    return k * (2.0 * jnp.asarray(eb, jnp.float32))
+
+
+def bot_fused(x: jax.Array, eb, transform: str = "zfp", block=bot4.DEFAULT_BLOCK):
+    """Fused ZFP-style transform/truncate -> (recon, bits-per-block)."""
+    if x.ndim == 2:
+        xp, (m, n) = _pad_to(x, *block)
+        recon, bits = bot4.bot2d_fused(xp, eb, transform=transform, block=block)
+        return recon[:m, :n], bits[: -(-m // 4), : -(-n // 4)]
+    # non-2D fields use the core jnp path
+    from repro.core.zfp import zfp_stats
+
+    st = zfp_stats(x, eb, transform=transform)
+    return st.recon, None

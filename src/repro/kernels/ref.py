@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose-validated in tests)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.transforms import bot_linf_gain, bot_matrix, lorenzo_forward, lorenzo_inverse
+
+
+def lorenzo2d_encode_ref(x: jax.Array, eb: jax.Array | float) -> jax.Array:
+    """round(x/2eb) then 2-D integer Lorenzo difference."""
+    delta = 2.0 * jnp.asarray(eb, jnp.float32)
+    k = jnp.round(x.astype(jnp.float32) / delta)
+    return lorenzo_forward(k).astype(jnp.int32)
+
+
+def lorenzo2d_decode_ref(d: jax.Array, eb: jax.Array | float) -> jax.Array:
+    """Inverse: 2-D cumsum of codes, then dequantize."""
+    delta = 2.0 * jnp.asarray(eb, jnp.float32)
+    k = lorenzo_inverse(d.astype(jnp.float32))
+    return k * delta
+
+
+def bot2d_fused_ref(
+    x: jax.Array, eb: jax.Array | float, transform: str = "zfp"
+) -> tuple[jax.Array, jax.Array]:
+    """Blockize -> align -> BOT -> truncate -> (recon, bits/block)."""
+    m, n = x.shape
+    assert m % 4 == 0 and n % 4 == 0
+    T = jnp.asarray(bot_matrix(transform), jnp.float32)
+    gain2 = float(bot_linf_gain(transform) ** 2)
+    b = x.astype(jnp.float32).reshape(m // 4, 4, n // 4, 4).transpose(0, 2, 1, 3)
+    mx = jnp.maximum(jnp.max(jnp.abs(b), axis=(2, 3)), 1e-30)
+    e = jnp.ceil(jnp.log2(mx))
+    scale = jnp.exp2(-e)[..., None, None]
+    norm = b * scale
+    c = jnp.einsum("ab,xybc,dc->xyad", T, norm, T)
+    raw = jnp.asarray(eb, jnp.float32) / (jnp.exp2(e) * gain2)
+    step = jnp.exp2(jnp.floor(jnp.log2(jnp.maximum(raw, 2.0**-60))))[..., None, None]
+    q = jnp.abs(c) / step
+    mm = jnp.trunc(q)
+    nsb = jnp.where(mm >= 1.0, jnp.floor(jnp.log2(jnp.maximum(mm, 1.0))) + 1.0, 0.0)
+    w = math.ceil(math.log2(17))
+    sig = jnp.sum(nsb, axis=(2, 3))
+    nsig = jnp.sum((nsb > 0.0).astype(jnp.float32), axis=(2, 3))
+    maxp = jnp.max(nsb, axis=(2, 3))
+    bits = 24.0 + w * maxp + sig + 2.0 * nsig
+    rc = jnp.sign(c) * jnp.where(mm > 0, (mm + 0.5) * step, 0.0)
+    rb = jnp.einsum("ba,xybc,cd->xyad", T, rc, T)
+    rb = rb / scale
+    recon = rb.transpose(0, 2, 1, 3).reshape(m, n)
+    return recon, bits

@@ -1,0 +1,373 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, extract memory/cost/collective numbers for the roofline analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+
+Scan-body correction: XLA's cost_analysis counts a scan body ONCE, so
+FLOPs/bytes/collectives are also lowered for 1- and 2-layer-unit variants
+of the same cell and extrapolated linearly (a + b*units) to the full depth.
+memory_analysis comes from the full-depth compile (buffers are reused
+across scan iterations, so it needs no correction).
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch import shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models import nn as rnn
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.runtime import sharding
+
+# v5e hardware constants (roofline)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9       # B/s / chip
+ICI_BW = 50e9        # B/s / link
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def hlo_collective_bytes(text: str) -> dict[str, float]:
+    """Per-device bytes moved by collectives, summed per op kind."""
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(text):
+        ty, op = m.group(1), m.group(2)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(ty):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[op] = out.get(op, 0.0) + nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-family layer-unit scaling (for the scan-body extrapolation)
+# ---------------------------------------------------------------------------
+
+
+def with_units(cfg: ModelConfig, n: int) -> ModelConfig:
+    """Reduced-depth variant with layers UNROLLED so cost_analysis counts
+    every body (a lax.scan body is costed once regardless of trip count)."""
+    if cfg.encdec:
+        return dataclasses.replace(cfg, n_layers=n, n_enc_layers=n, unroll_layers=True)
+    if cfg.xlstm is not None:
+        per = cfg.xlstm.m_per_group + cfg.xlstm.s_per_group
+        return dataclasses.replace(cfg, n_layers=n * per, unroll_layers=True)
+    if cfg.hybrid is not None:
+        return dataclasses.replace(cfg, n_layers=n * cfg.hybrid.every, unroll_layers=True)
+    nd = cfg.moe.n_dense_layers if cfg.moe else 0
+    return dataclasses.replace(cfg, n_layers=nd + n, unroll_layers=True)
+
+
+def full_units(cfg: ModelConfig) -> float:
+    if cfg.encdec:
+        return cfg.n_layers
+    if cfg.xlstm is not None:
+        return cfg.n_layers / (cfg.xlstm.m_per_group + cfg.xlstm.s_per_group)
+    if cfg.hybrid is not None:
+        return cfg.n_layers / cfg.hybrid.every  # tail folded in (~2% error)
+    nd = cfg.moe.n_dense_layers if cfg.moe else 0
+    return cfg.n_layers - nd
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (roofline reference)
+# ---------------------------------------------------------------------------
+
+
+def count_params(model) -> tuple[float, float]:
+    """(total, active) parameter counts; MoE expert tensors scaled by
+    top_k/n_experts for the active count."""
+    cfg = model.cfg
+    leaves, _ = jax.tree_util.tree_flatten_with_path(rnn.abstract_tree(model.desc()))
+    total = active = 0.0
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        n = float(np.prod(leaf.shape))
+        total += n
+        if cfg.moe and ("/w_gate" in name or "/w_up" in name or "/w_down" in name) and len(leaf.shape) >= 4:
+            active += n * (cfg.moe.top_k / cfg.moe.n_experts)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(model, kind: str, b: int, seq: int) -> float:
+    total, active = count_params(model)
+    if kind == "train":
+        return 6.0 * active * b * seq
+    if kind == "prefill":
+        return 2.0 * active * b * seq
+    return 2.0 * active * b  # decode: one token
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _dp_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_shardings(batch_abs: dict, mesh, global_batch: int):
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    dp = _dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_n = int(np.prod([sizes[a] for a in dp]))
+    first = (dp[0] if len(dp) == 1 else dp) if global_batch % dp_n == 0 else None
+
+    def _s(leaf):
+        parts = [first] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, PartitionSpec(*parts))
+
+    return jax.tree_util.tree_map(_s, batch_abs)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, units: int | None = None,
+               opt_cfg: adamw.AdamWConfig | None = None, variant: str = "baseline"):
+    """Lower+compile one cell (optionally at a reduced layer-unit count).
+    variant: 'baseline' | 'tp_weights' (no FSDP over weight embed dims) |
+    'seqkv' (sequence-sharded KV cache when heads can't shard).
+    Returns (compiled, info dict)."""
+    cfg0 = shp.shape_config(get_config(arch), shape_name)
+    cfg = with_units(cfg0, units) if units is not None else cfg0
+    if variant in ("kvq8", "combo"):
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    if variant in ("moegroups", "ds_best") and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=32)
+        )
+    model = build_model(cfg)
+    spec = shp.input_specs(cfg, shape_name)
+    kind = spec["kind"]
+    if kind == "train":
+        rules = sharding.TRAIN_RULES_TP if variant == "tp_weights" else sharding.TRAIN_RULES
+    else:
+        rules = sharding.SERVE_RULES
+    params_abs = rnn.abstract_tree(model.desc())
+    if variant in ("bf16params", "ds_best"):
+        # bf16 parameter storage (f32 adam moments remain the master copy):
+        # halves FSDP all-gather AND gradient-reduction bytes
+        params_abs = jax.tree_util.tree_map(
+            lambda sdt: jax.ShapeDtypeStruct(sdt.shape, jnp.bfloat16)
+            if sdt.dtype == jnp.float32 else sdt,
+            params_abs,
+        )
+    axes = rnn.axes_tree(model.desc())
+    pshard = sharding.tree_shardings(axes, rules, mesh, abstract=params_abs)
+    bshard = batch_shardings(spec["batch"], mesh, spec["global_batch"])
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    with sharding.activate(mesh, rules):
+        if kind == "train":
+            f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+            opt_abs = {
+                "m": jax.tree_util.tree_map(f32, params_abs),
+                "v": jax.tree_util.tree_map(f32, params_abs),
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            oshard = {
+                "m": pshard, "v": pshard,
+                "step": NamedSharding(mesh, PartitionSpec()),
+            }
+
+            def step(params, opt, batch):
+                (loss, aux), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                    params, batch
+                )
+                new_p, new_o, om = adamw.update(opt_cfg, grads, opt, params)
+                return new_p, new_o, {"loss": loss, **om}
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, spec["batch"])
+        else:
+            b = spec["global_batch"]
+            cache_abs = model.cache_desc(b, spec["cache_len"])
+            head_sizes = {cfg.n_kv_heads, cfg.n_heads}
+            cshard = sharding.cache_sharding(
+                cache_abs, mesh, b, head_sizes,
+                seq_shard=variant in ("seqkv", "combo"),
+            )
+
+            if kind == "prefill":
+                def step(params, batch, cache):
+                    logits, cache = model.forward(params, batch, cache=cache)
+                    return logits[:, -1:], cache
+                jitted = jax.jit(
+                    step, in_shardings=(pshard, bshard, cshard), donate_argnums=(2,)
+                )
+                lowered = jitted.lower(params_abs, spec["batch"], cache_abs)
+            else:
+                def step(params, tokens, cache):
+                    logits, cache = model.forward(params, {"tokens": tokens}, cache=cache)
+                    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+                tok_abs = spec["batch"]["tokens"]
+                tshard = batch_shardings({"t": tok_abs}, mesh, b)["t"]
+                jitted = jax.jit(
+                    step, in_shardings=(pshard, tshard, cshard), donate_argnums=(2,)
+                )
+                lowered = jitted.lower(params_abs, tok_abs, cache_abs)
+
+        compiled = lowered.compile()
+    return compiled, {"cfg": cfg, "model": model, "spec": spec}
+
+
+def analyze_cell(arch: str, shape_name: str, mesh_name: str, extrapolate: bool = True,
+                 variant: str = "baseline") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = int(np.prod(mesh.devices.shape))
+    cfg0 = shp.shape_config(get_config(arch), shape_name)
+    ok, why = shp.applicable(cfg0, shape_name)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+                 "variant": variant}
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+    try:
+        t0 = time.time()
+        compiled, info = lower_cell(arch, shape_name, mesh, variant=variant)
+        rec["compile_seconds"] = round(time.time() - t0, 1)
+        ca = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        rec["cost_raw"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+        }
+        rec["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        }
+        coll = hlo_collective_bytes(compiled.as_text())
+        rec["collectives_raw"] = coll
+        spec = info["spec"]
+
+        if extrapolate:
+            vals = {}
+            for u in (1, 2):
+                c_u, _ = lower_cell(arch, shape_name, mesh, units=u, variant=variant)
+                ca_u = c_u.cost_analysis() or {}
+                vals[u] = {
+                    "flops": float(ca_u.get("flops", 0.0)),
+                    "bytes": float(ca_u.get("bytes accessed", 0.0)),
+                    "coll": sum(hlo_collective_bytes(c_u.as_text()).values()),
+                }
+            L = full_units(info["cfg"])
+            corr = {}
+            for k in ("flops", "bytes", "coll"):
+                b_ = vals[2][k] - vals[1][k]
+                a_ = vals[1][k] - b_
+                corr[k] = a_ + b_ * L
+            rec["corrected"] = {
+                "flops": corr["flops"],
+                "bytes": corr["bytes"],
+                "collective_bytes": corr["coll"],
+                "units": L,
+            }
+        mf = model_flops(info["model"], spec["kind"], spec["global_batch"], spec["seq"])
+        rec["model_flops"] = mf
+        flops = rec.get("corrected", rec["cost_raw"])["flops"]
+        bts = rec.get("corrected", rec["cost_raw"])["bytes"]
+        cb = rec.get("corrected", {}).get(
+            "collective_bytes", sum(coll.values())
+        )
+        # cost_analysis is per-device under SPMD
+        rec["roofline"] = {
+            "t_compute_s": flops / PEAK_FLOPS,
+            "t_memory_s": bts / HBM_BW,
+            "t_collective_s": cb / ICI_BW,
+            "useful_flops_ratio": mf / chips / max(flops, 1.0),
+        }
+        terms = rec["roofline"]
+        dom = max(
+            ("t_compute_s", "t_memory_s", "t_collective_s"), key=lambda k: terms[k]
+        )
+        rec["roofline"]["dominant"] = dom
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "tp_weights", "seqkv", "kvq8", "bf16params", "combo", "moegroups", "ds_best"])
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes_ = list(shp.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape_name in shapes_:
+            for mesh_name in meshes:
+                suffix = "" if args.variant == "baseline" else f"__{args.variant}"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+                )
+                if os.path.exists(path):
+                    print(f"[cached] {path}")
+                    continue
+                print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ...", flush=True)
+                rec = analyze_cell(
+                    arch, shape_name, mesh_name,
+                    extrapolate=not args.no_extrapolate, variant=args.variant,
+                )
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = rec.get("reason", rec.get("error", ""))
+                rl = rec.get("roofline", {})
+                print(
+                    f"  -> {status} {extra} compile={rec.get('compile_seconds', '-')}s "
+                    f"dom={rl.get('dominant', '-')}",
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Production mesh builders. Functions (not module constants) so importing
+never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) ('data','model') single pod (256 chips); (2,16,16)
+    ('pod','data','model') for 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Single-device mesh for smoke/integration tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill + greedy decode with KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+      --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import build_model, reduced_for_smoke
+from repro.models import nn as rnn
+from repro.runtime import sharding
+from repro.runtime.steps import make_decode_step, make_prefill_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--sample", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced_for_smoke(cfg)
+    model = build_model(cfg)
+    params = rnn.init_tree(model.desc(), jax.random.key(0))
+    mesh = make_local_mesh() if len(jax.devices()) == 1 else make_production_mesh()
+
+    rng = np.random.default_rng(0)
+    b = args.batch
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab, (b, args.prompt_len)), jnp.int32)
+    max_len = args.prompt_len + args.gen
+    batch = {"tokens": prompts}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_len, cfg.d_model)), jnp.float32
+        )
+    if cfg.encdec:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_len, cfg.d_model)), jnp.float32
+        )
+
+    prefill = make_prefill_step(model)
+    decode = make_decode_step(model, sample=args.sample)
+    with sharding.activate(mesh, sharding.SERVE_RULES):
+        cache = model.init_cache(b, max_len)
+        t0 = time.time()
+        logits, cache = jax.jit(prefill)(params, batch, cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        t_prefill = time.time() - t0
+        jit_decode = jax.jit(decode)
+        toks = [nxt]
+        key = jax.random.key(1)
+        t0 = time.time()
+        for i in range(args.gen - 1):
+            key, sub = jax.random.split(key)
+            if args.sample:
+                nxt, cache = jit_decode(params, nxt, cache, sub)
+            else:
+                nxt, cache = jit_decode(params, nxt, cache)
+            toks.append(nxt)
+        jax.block_until_ready(nxt)
+        t_decode = time.time() - t0
+    out = jnp.concatenate(toks, axis=1)
+    tput = b * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"[serve] prefill {args.prompt_len} toks x{b}: {t_prefill:.2f}s; "
+          f"decode {args.gen - 1} steps: {t_decode:.2f}s ({tput:.1f} tok/s)")
+    print("[serve] sample output ids:", np.asarray(out[0, :16]))
+    return {"tokens": np.asarray(out), "prefill_s": t_prefill, "decode_s": t_decode}
+
+
+if __name__ == "__main__":
+    main()

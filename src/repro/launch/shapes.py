@@ -1,0 +1,84 @@
+"""Assigned input-shape set and abstract input specs per (arch x shape).
+
+LM transformer shapes are seq_len x global_batch. decode_*/long_* lower
+`serve_step` (one new token against a KV cache of seq_len), NOT train_step.
+long_500k requires sub-quadratic attention: runs for SSM/hybrid archs
+(xlstm, zamba2 — the latter with a 4k sliding window on its shared
+attention block), skipped for pure full-attention archs (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4_096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, "SKIP(full-attn)"
+    return True, ""
+
+
+def shape_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Per-shape config tweaks (e.g. windowed shared attention in long mode)."""
+    if shape_name == "long_500k" and cfg.hybrid is not None:
+        return dataclasses.replace(cfg, attn_window=4_096)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns {'kind', 'batch': {...}, 'decode_tokens': ..., 'cache_len': int}.
+    For train, batch = full (tokens, labels, frontend stubs). For prefill,
+    batch = prompt tokens (+ stubs). For decode, tokens are (B, 1) and
+    cache_len is the preallocated KV length.
+    """
+    sh = SHAPES[shape_name]
+    b, seq = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    out = {"kind": kind, "global_batch": b, "seq": seq}
+    sds = jax.ShapeDtypeStruct
+    if kind == "train":
+        ltxt = seq - (cfg.frontend_len if cfg.frontend == "vision" else 0)
+        batch = {
+            "tokens": sds((b, ltxt), I32),
+            "labels": sds((b, ltxt), I32),
+        }
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = sds((b, cfg.frontend_len, cfg.d_model), F32)
+        if cfg.encdec:
+            batch["frames"] = sds((b, cfg.frontend_len, cfg.d_model), F32)
+        out["batch"] = batch
+    elif kind == "prefill":
+        ltxt = seq - (cfg.frontend_len if cfg.frontend == "vision" else 0)
+        batch = {"tokens": sds((b, ltxt), I32)}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = sds((b, cfg.frontend_len, cfg.d_model), F32)
+        if cfg.encdec:
+            batch["frames"] = sds((b, cfg.frontend_len, cfg.d_model), F32)
+        out["batch"] = batch
+        out["cache_len"] = seq
+    else:  # decode
+        out["batch"] = {"tokens": sds((b, 1), I32)}
+        # windowed hybrids cap the attention cache at the window
+        cfg2 = shape_config(cfg, shape_name)
+        cache_len = seq
+        if shape_name == "long_500k":
+            cache_len = cfg2.attn_window or 4_096
+        out["cache_len"] = cache_len
+    return out

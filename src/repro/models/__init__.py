@@ -1,0 +1,4 @@
+"""Model zoo: declarative param trees + pure-jnp apply functions."""
+
+from .config import ModelConfig, reduced_for_smoke
+from .model import build_model

@@ -1,0 +1,329 @@
+"""Transformer building blocks: GQA attention, MLA, MLPs, MoE.
+
+Every block exposes `desc_*` (P-descriptor tree) and `apply_*` (pure jnp).
+Decode caches are plain dicts of arrays; `*_cache_desc` gives their
+ShapeDtypeStructs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .config import MLACfg, ModelConfig
+from .nn import P, attention, dense, rms_norm, rope, shard
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def desc_attn(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    out = {
+        "norm": P((d,), ("norm",), "ones"),
+        "wq": P((d, h * dh), ("embed", "heads")),
+        "wk": P((d, hkv * dh), ("embed", "heads")),
+        "wv": P((d, hkv * dh), ("embed", "heads")),
+        "wo": P((h * dh, d), ("heads", "embed")),
+    }
+    return out
+
+
+def apply_attn(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    cache: dict | None = None,
+    memory: jax.Array | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Self- or cross-attention with optional decode cache.
+
+    cache: {'k': (B, M, Hkv, Dh), 'v': ..., 'len': ()} — updated in place
+    (functionally) at position `len`; attention masked to len+L.
+    memory: encoder output for cross-attention (keys/values from memory).
+    """
+    b, l, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = dense(xn, p["wq"]).reshape(b, l, h, dh)
+    src = memory if memory is not None else xn  # encoder memory is pre-normed
+    k = dense(src, p["wk"]).reshape(b, src.shape[1], hkv, dh)
+    v = dense(src, p["wv"]).reshape(b, src.shape[1], hkv, dh)
+    if memory is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if cache is None else positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    new_cache = None
+    if cache is not None and memory is None:
+        pos = cache["len"]
+        m_cap = cache["k"].shape[1]
+        upd = jnp.mod(pos, m_cap)  # ring buffer: windowed long-context decode
+        if "k_scale" in cache:
+            # int8 KV cache: per-(token, head) linear quantization — the
+            # paper's Stage-II vector quantization applied to KV residency
+            ks = jnp.max(jnp.abs(k), axis=-1).astype(jnp.float32) / 127.0 + 1e-12
+            vs = jnp.max(jnp.abs(v), axis=-1).astype(jnp.float32) / 127.0 + 1e-12
+            kq = jnp.round(k.astype(jnp.float32) / ks[..., None]).astype(jnp.int8)
+            vq = jnp.round(v.astype(jnp.float32) / vs[..., None]).astype(jnp.int8)
+            ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, upd, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, upd, 0, 0))
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, upd, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, upd, 0))
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs, "len": pos + l}
+            k_all = (ck.astype(q.dtype) * cks[..., None].astype(q.dtype))
+            v_all = (cv.astype(q.dtype) * cvs[..., None].astype(q.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, upd, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, upd, 0, 0))
+            new_cache = {"k": ck, "v": cv, "len": pos + l}
+            k_all, v_all = ck.astype(q.dtype), cv.astype(q.dtype)
+        out = attention(
+            q, k_all, v_all,
+            causal=causal, q_offset=jnp.minimum(pos, m_cap - l),
+            window=window, kv_len=jnp.minimum(pos + l, m_cap),
+        )
+    else:
+        out = attention(q, k, v, causal=causal and memory is None, window=window)
+    out = out.reshape(b, l, h * dh)
+    return dense(out, p["wo"]), new_cache
+
+
+def attn_cache_desc(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    hkv, dh = cfg.n_kv_heads, cfg.dh
+    if cfg.kv_quant:
+        return {
+            "k": jax.ShapeDtypeStruct((batch, max_len, hkv, dh), jnp.int8),
+            "v": jax.ShapeDtypeStruct((batch, max_len, hkv, dh), jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((batch, max_len, hkv), jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct((batch, max_len, hkv), jnp.float32),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, hkv, dh), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, hkv, dh), dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def desc_mla(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    m: MLACfg = cfg.mla
+    return {
+        "norm": P((d,), ("norm",), "ones"),
+        "wq_a": P((d, m.q_lora), ("embed", None)),
+        "q_norm": P((m.q_lora,), ("norm",), "ones"),
+        "wq_b": P((m.q_lora, h * (m.qk_nope + m.qk_rope)), (None, "heads")),
+        "wkv_a": P((d, m.kv_lora + m.qk_rope), ("embed", None)),
+        "kv_norm": P((m.kv_lora,), ("norm",), "ones"),
+        "wkv_b": P((m.kv_lora, h * (m.qk_nope + m.v_head)), (None, "heads")),
+        "wo": P((h * m.v_head, d), ("heads", "embed")),
+    }
+
+
+def apply_mla(
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """MLA attention. Cache stores only the compressed latent (c_kv, k_rope)."""
+    b, l, d = x.shape
+    h = cfg.n_heads
+    m: MLACfg = cfg.mla
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = dense(rms_norm(dense(xn, p["wq_a"]), p["q_norm"], cfg.norm_eps), p["wq_b"])
+    q = q.reshape(b, l, h, m.qk_nope + m.qk_rope)
+    q_nope, q_rope = q[..., : m.qk_nope], q[..., m.qk_nope :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    kv_a = dense(xn, p["wkv_a"])
+    c_kv, k_rope = kv_a[..., : m.kv_lora], kv_a[..., m.kv_lora :]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,L,1,r)
+    new_cache = None
+    if cache is not None:
+        # --- absorbed MLA decode (EXPERIMENTS.md §Perf, deepseek decode) ---
+        # Never materialize K/V for the context: score and contract directly
+        # in the kv_lora latent space by absorbing W_uk into q and deferring
+        # W_uv to after the attention contraction. Same math (reassociation
+        # of q^T (c W_uk^T) = (q W_uk) c^T); turns the per-step cost from
+        # O(M * h * (nope+v) * kv_lora) re-expansion into O(M * kv_lora).
+        pos = cache["len"]
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0)
+        )
+        cr = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope[:, :, 0, :].astype(cache["krope"].dtype), (0, pos, 0)
+        )
+        new_cache = {"ckv": cc, "krope": cr, "len": pos + l}
+        c_all = rms_norm(cc.astype(x.dtype), p["kv_norm"], cfg.norm_eps)  # (b,M,r)
+        kr_all = cr.astype(x.dtype)  # (b, M, rope)
+        kv_len = pos + l
+        wkv = p["wkv_b"].reshape(m.kv_lora, h, m.qk_nope + m.v_head).astype(x.dtype)
+        w_uk, w_uv = wkv[..., : m.qk_nope], wkv[..., m.qk_nope :]
+        q_lat = jnp.einsum("blhn,rhn->blhr", q_nope, w_uk)  # absorb W_uk
+        q_lat = shard(q_lat, "batch", None, "heads", None)
+        scale = 1.0 / math.sqrt(m.qk_nope + m.qk_rope)
+        logits = (
+            jnp.einsum("blhr,bmr->bhlm", q_lat, c_all)
+            + jnp.einsum("blhr,bmr->bhlm", q_rope, kr_all)
+        ).astype(jnp.float32) * scale
+        mcap = cc.shape[1]
+        qpos = jnp.arange(l)[:, None] + pos
+        kpos = jnp.arange(mcap)[None, :]
+        mask = (kpos <= qpos) & (kpos < kv_len)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        wts = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhlm,bmr->blhr", wts, c_all)
+        out = jnp.einsum("blhr,rhv->blhv", ctx, w_uv)  # deferred W_uv
+        return dense(out.reshape(b, l, h * m.v_head), p["wo"]), new_cache
+    # --- parallel path (train / no cache): materialized K/V ---
+    kv = dense(rms_norm(c_kv, p["kv_norm"], cfg.norm_eps), p["wkv_b"])
+    kv = kv.reshape(b, l, h, m.qk_nope + m.v_head)
+    k_nope, v = kv[..., : m.qk_nope], kv[..., m.qk_nope :]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope,))], -1
+    )
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    qq = shard(qq, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    out = attention(qq, k, v, causal=True)
+    return dense(out.reshape(b, l, h * m.v_head), p["wo"]), new_cache
+
+
+def mla_cache_desc(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    m: MLACfg = cfg.mla
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora), dtype),
+        "krope": jax.ShapeDtypeStruct((batch, max_len, m.qk_rope), dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# dense MLPs
+# ---------------------------------------------------------------------------
+
+
+def desc_mlp(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    out = {"norm": P((cfg.d_model,), ("norm",), "ones")}
+    if cfg.mlp_type == "swiglu":
+        out |= {
+            "w_gate": P((d, f), ("embed", "mlp")),
+            "w_up": P((d, f), ("embed", "mlp")),
+            "w_down": P((f, d), ("mlp", "embed")),
+        }
+    else:
+        out |= {
+            "w_up": P((d, f), ("embed", "mlp")),
+            "w_down": P((f, d), ("mlp", "embed")),
+        }
+    return out
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    if cfg.mlp_type == "swiglu":
+        return nn.swiglu(xn, p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.mlp_type == "relu2":
+        return nn.relu2_mlp(xn, p["w_up"], p["w_down"])
+    return nn.gelu_mlp(xn, p["w_up"], p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, sort-based capacity dispatch)
+# ---------------------------------------------------------------------------
+
+
+def desc_moe(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    mo = cfg.moe
+    e, f = mo.n_experts, mo.d_ff_expert
+    out = {
+        "norm": P((d,), ("norm",), "ones"),
+        "router": P((d, e), ("embed", None), scale=0.02),
+        "w_gate": P((e, d, f), ("experts", "embed", "mlp")),
+        "w_up": P((e, d, f), ("experts", "embed", "mlp")),
+        "w_down": P((e, f, d), ("experts", "mlp", "embed")),
+    }
+    if mo.n_shared:
+        fs = mo.d_ff_shared or mo.d_ff_expert * mo.n_shared
+        out["shared"] = {
+            "w_gate": P((d, fs), ("embed", "mlp")),
+            "w_up": P((d, fs), ("embed", "mlp")),
+            "w_down": P((fs, d), ("mlp", "embed")),
+        }
+    return out
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Top-k token-choice routing with capacity; sort-based dispatch.
+
+    Buffers are logically (experts, capacity, d): experts shard over 'model'
+    (EP) and capacity over 'batch'-bearing axes so dispatch stays shard-local
+    per data shard (DESIGN.md §6).
+    """
+    b, l, d = x.shape
+    mo = cfg.moe
+    e, k = mo.n_experts, mo.top_k
+    n = b * l
+    g_ = mo.dispatch_groups if n % max(mo.dispatch_groups, 1) == 0 else 1
+    ng = n // g_  # tokens per dispatch group (group dim aligns with DP shards)
+    xn = rms_norm(x, p["norm"], cfg.norm_eps).reshape(g_, ng, d)
+    xn = shard(xn, "batch", None, None)
+    logits = dense(xn, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, sel = jax.lax.top_k(probs, k)  # (g, ng, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    cap = max(int(mo.capacity_factor * ng * k / e), 8)
+    cap = min(cap, ng)
+    flat_e = sel.reshape(g_, ng * k)
+    flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(ng), k)[None], (g_, ng * k))
+    flat_w = w.reshape(g_, ng * k).astype(x.dtype)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # per-group: stays local
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sw = jnp.take_along_axis(flat_w, order, axis=-1)
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    rank = jnp.arange(ng * k)[None] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = rank < cap
+    rankc = jnp.clip(rank, 0, cap - 1)
+    gi = jnp.arange(g_)[:, None]
+    buf = jnp.zeros((g_, e, cap, d), x.dtype)
+    buf = buf.at[gi, se, rankc].add(
+        xn[gi, st] * keep[..., None].astype(x.dtype)
+    )
+    buf = shard(buf, "batch", "experts", None, None)
+    # expert FFN (batched over groups x experts)
+    g = jnp.einsum("xecd,edf->xecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("xecd,edf->xecf", buf, p["w_up"].astype(x.dtype))
+    hmid = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    hmid = shard(hmid, "batch", "experts", None, "mlp")
+    eout = jnp.einsum("xecf,efd->xecd", hmid, p["w_down"].astype(x.dtype))
+    eout = shard(eout, "batch", "experts", None, None)
+    # combine
+    y = jnp.zeros((g_, ng, d), x.dtype)
+    y = y.at[gi, st].add(eout[gi, se, rankc] * (sw * keep.astype(x.dtype))[..., None])
+    y = shard(y, "batch", None, None)
+    y = y.reshape(b, l, d)
+    if mo.n_shared:
+        y = y + nn.swiglu(xn.reshape(b, l, d), p["shared"]["w_gate"], p["shared"]["w_up"], p["shared"]["w_down"])
+    return y

@@ -1,0 +1,526 @@
+"""Model assembly: decoder-only LMs (dense / MoE / MLA), xLSTM, Zamba2-style
+hybrids, and encoder-decoder — all scan-over-layers, cache-aware, and
+declared via P-descriptors for abstract (dry-run) initialization.
+
+Public API (built by `build_model(cfg)`):
+  model.desc()                         -> param descriptor tree
+  model.forward(params, batch, cache)  -> (logits, new_cache)
+  model.loss(params, batch)            -> (loss, metrics)
+  model.cache_desc(batch, max_len)     -> cache ShapeDtypeStruct tree
+  model.init_cache(batch, max_len)     -> zero-initialized cache
+  model.decode_step(params, tok, cache)-> (logits, new_cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks, nn, ssm, xlstm
+from .config import ModelConfig
+from .nn import P, dense, rms_norm, shard
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _zeros_cache(desc_tree):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), desc_tree)
+
+
+def _stack_descs(desc: dict, n: int) -> dict:
+    return nn.stack_layers([desc] * n)
+
+
+def scan_layers(body, init, xs, *, unroll: bool):
+    """lax.scan over stacked layers, or an unrolled python loop when
+    `unroll` (dry-run cost probes: XLA costs a scan body only ONCE, so the
+    1/2-unit extrapolation modules must be unrolled to be countable)."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+class BaseLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # --- embedding / head -------------------------------------------------
+    def _embed_desc(self) -> dict:
+        cfg = self.cfg
+        out = {
+            "embed": P((cfg.vocab, cfg.d_model), ("vocab", "embed"), "embed"),
+            "final_norm": P((cfg.d_model,), ("norm",), "ones"),
+        }
+        if not cfg.tie_embeddings:
+            out["lm_head"] = P((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+        if cfg.frontend == "vision":
+            out["patch_proj"] = P((cfg.d_model, cfg.d_model), ("embed", "embed"))
+        if cfg.frontend == "audio":
+            out["frame_proj"] = P((cfg.d_model, cfg.d_model), ("embed", "embed"))
+        return out
+
+    def _embed(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        tok = batch["tokens"]
+        x = params["embed"][tok].astype(_dt(cfg))
+        if cfg.frontend == "vision" and "patch_embeds" in batch:
+            pe = dense(batch["patch_embeds"].astype(_dt(cfg)), params["patch_proj"])
+            x = jnp.concatenate([pe, x], axis=1)
+        x = shard(x, "batch", None, None)
+        return x
+
+    def _logits(self, params, x) -> jax.Array:
+        cfg = self.cfg
+        xn = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bld,dv->blv", xn, head.astype(xn.dtype))
+        return shard(logits.astype(jnp.float32), "batch", None, "vocab")
+
+    # --- losses ------------------------------------------------------------
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch, cache=None)
+        labels = batch["labels"]
+        if self.cfg.frontend == "vision" and "patch_embeds" in batch:
+            # logits cover [patches, tokens]; labels only the token part
+            logits = logits[:, -labels.shape[1] :]
+        mask = (labels >= 0).astype(jnp.float32)
+        lab = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss, {"loss": loss, "tokens": jnp.sum(mask)}
+
+    # --- cache -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        return _zeros_cache(self.cache_desc(batch, max_len))
+
+    def decode_step(self, params, tokens, cache):
+        return self.forward(params, {"tokens": tokens}, cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only transformer (dense / moe / mla / vlm)
+# ---------------------------------------------------------------------------
+
+
+class TransformerLM(BaseLM):
+    """Dense or MoE decoder-only LM; attention is GQA or MLA per config."""
+
+    def _attn_desc(self):
+        return blocks.desc_mla(self.cfg) if self.cfg.mla else blocks.desc_attn(self.cfg)
+
+    def _mlp_desc(self):
+        return blocks.desc_moe(self.cfg) if self.cfg.moe else blocks.desc_mlp(self.cfg)
+
+    def _n_dense(self) -> int:
+        return self.cfg.moe.n_dense_layers if self.cfg.moe else 0
+
+    def desc(self):
+        cfg = self.cfg
+        nd = self._n_dense()
+        layer = {"attn": self._attn_desc(), "mlp": self._mlp_desc()}
+        out = self._embed_desc()
+        if nd:
+            dense_layer = {"attn": self._attn_desc(), "mlp": blocks.desc_mlp(cfg)}
+            out["dense_blocks"] = _stack_descs(dense_layer, nd)
+        out["blocks"] = _stack_descs(layer, cfg.n_layers - nd)
+        return out
+
+    def _block(self, p, x, positions, cache, window=None):
+        cfg = self.cfg
+        if cfg.mla:
+            a, new_c = blocks.apply_mla(p["attn"], x, positions, cfg, cache=cache)
+        else:
+            a, new_c = blocks.apply_attn(
+                p["attn"], x, positions, cfg, cache=cache, window=window
+            )
+        x = x + a
+        if cfg.moe and "router" in p["mlp"]:
+            x = x + blocks.apply_moe(p["mlp"], x, cfg)
+        else:
+            x = x + blocks.apply_mlp(p["mlp"], x, cfg)
+        return x, new_c
+
+    def forward(self, params, batch, cache=None):
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        b, l, _ = x.shape
+        pos0 = cache["pos"] if cache is not None else 0
+        positions = pos0 + jnp.arange(l)[None, :]
+        nd = self._n_dense()
+        new_cache = {"pos": pos0 + l} if cache is not None else None
+        if nd:
+            for i in range(nd):
+                pl_ = jax.tree_util.tree_map(lambda a: a[i], params["dense_blocks"])
+                cl = jax.tree_util.tree_map(lambda a: a[i], cache["dense_blocks"]) if cache else None
+                if cl is not None:
+                    cl = dict(cl, len=pos0)
+                x, nc = self._block(pl_, x, positions, cl)
+                if cache is not None:
+                    nc.pop("len")
+                    if i == 0:
+                        new_cache["dense_blocks"] = jax.tree_util.tree_map(
+                            lambda a: jnp.broadcast_to(a[None], (nd,) + a.shape).copy(), nc
+                        )
+                    else:
+                        new_cache["dense_blocks"] = jax.tree_util.tree_map(
+                            lambda acc, a: acc.at[i].set(a), new_cache["dense_blocks"], nc
+                        )
+
+        def scan_fn(carry, xs):
+            xcur = carry
+            if cache is not None:
+                pl_, cl = xs
+                cl = dict(cl, len=pos0)
+            else:
+                pl_, cl = xs, None
+            xcur, nc = self._block(pl_, xcur, positions, cl, window=cfg.attn_window)
+            if nc is not None:
+                nc.pop("len")
+            return xcur, nc
+
+        xs = (params["blocks"], cache["blocks"]) if cache is not None else params["blocks"]
+        body = jax.checkpoint(scan_fn) if (cache is None and cfg.remat) else scan_fn
+        x, ncache = scan_layers(body, x, xs, unroll=cfg.unroll_layers)
+        if cache is not None:
+            new_cache["blocks"] = ncache
+        return self._logits(params, x), new_cache
+
+    def cache_desc(self, batch: int, max_len: int):
+        cfg = self.cfg
+        nd = self._n_dense()
+        one = (
+            blocks.mla_cache_desc(cfg, batch, max_len)
+            if cfg.mla
+            else blocks.attn_cache_desc(cfg, batch, max_len)
+        )
+        one = {k: v for k, v in one.items() if k != "len"}
+        stack = lambda s, n: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+        out = {
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "blocks": jax.tree_util.tree_map(partial(stack, n=cfg.n_layers - nd), one),
+        }
+        if nd:
+            out["dense_blocks"] = jax.tree_util.tree_map(partial(stack, n=nd), one)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# xLSTM (groups of m mLSTM + s sLSTM)
+# ---------------------------------------------------------------------------
+
+
+class XLSTMLM(BaseLM):
+    def _gcount(self):
+        xc = self.cfg.xlstm
+        per = xc.m_per_group + xc.s_per_group
+        assert self.cfg.n_layers % per == 0, (self.cfg.n_layers, per)
+        return self.cfg.n_layers // per
+
+    def desc(self):
+        cfg = self.cfg
+        xc = cfg.xlstm
+        g = self._gcount()
+        group = {
+            "m": _stack_descs(xlstm.desc_mlstm(cfg), xc.m_per_group),
+            "s": _stack_descs(xlstm.desc_slstm(cfg), xc.s_per_group),
+        }
+        out = self._embed_desc()
+        out["groups"] = _stack_descs(group, g)
+        return out
+
+    def forward(self, params, batch, cache=None):
+        cfg = self.cfg
+        xc = cfg.xlstm
+        x = self._embed(params, batch)
+        pos0 = cache["pos"] if cache is not None else 0
+        new_cache = {"pos": pos0 + x.shape[1]} if cache is not None else None
+
+        def one_group(xcur, gp, gc):
+            ncs = {"m": [], "s": []}
+            for i in range(xc.m_per_group):
+                pl_ = jax.tree_util.tree_map(lambda a: a[i], gp["m"])
+                cl = jax.tree_util.tree_map(lambda a: a[i], gc["m"]) if gc else None
+                y, nc = xlstm.apply_mlstm(pl_, xcur, cfg, cache=cl)
+                xcur = xcur + y
+                ncs["m"].append(nc)
+            for i in range(xc.s_per_group):
+                pl_ = jax.tree_util.tree_map(lambda a: a[i], gp["s"])
+                cl = jax.tree_util.tree_map(lambda a: a[i], gc["s"]) if gc else None
+                y, nc = xlstm.apply_slstm(pl_, xcur, cfg, cache=cl)
+                xcur = xcur + y
+                ncs["s"].append(nc)
+            if gc is not None:
+                ncs = {
+                    k: jax.tree_util.tree_map(lambda *a: jnp.stack(a), *v)
+                    for k, v in ncs.items()
+                }
+            return xcur, (ncs if gc is not None else None)
+
+        def scan_fn(xcur, xs):
+            if cache is not None:
+                gp, gc = xs
+            else:
+                gp, gc = xs, None
+            return one_group(xcur, gp, gc)
+
+        xs = (params["groups"], cache["groups"]) if cache is not None else params["groups"]
+        body = jax.checkpoint(scan_fn) if (cache is None and cfg.remat) else scan_fn
+        x, ncache = scan_layers(body, x, xs, unroll=cfg.unroll_layers)
+        if cache is not None:
+            new_cache["groups"] = ncache
+        return self._logits(params, x), new_cache
+
+    def init_cache(self, batch: int, max_len: int):
+        cache = _zeros_cache(self.cache_desc(batch, max_len))
+        # mLSTM stabilizer state starts at -inf (matches the parallel path)
+        cache["groups"]["m"]["m"] = jnp.full_like(cache["groups"]["m"]["m"], -1e30)
+        return cache
+
+    def cache_desc(self, batch: int, max_len: int):
+        cfg = self.cfg
+        xc = cfg.xlstm
+        g = self._gcount()
+        stackn = lambda s, n: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+        group = {
+            "m": jax.tree_util.tree_map(
+                partial(stackn, n=xc.m_per_group), xlstm.mlstm_cache_desc(cfg, batch)
+            ),
+            "s": jax.tree_util.tree_map(
+                partial(stackn, n=xc.s_per_group), xlstm.slstm_cache_desc(cfg, batch)
+            ),
+        }
+        return {
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "groups": jax.tree_util.tree_map(partial(stackn, n=g), group),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Zamba2-style hybrid: Mamba2 backbone + shared attention block
+# ---------------------------------------------------------------------------
+
+
+class HybridLM(BaseLM):
+    """`every` Mamba2 layers followed by one *shared* GQA attention block
+    (weights reused at every application), input fused with the original
+    embedding (concat + projection), zamba-style."""
+
+    def _layout(self):
+        cfg = self.cfg
+        k = cfg.hybrid.every
+        n_groups = cfg.n_layers // k
+        tail = cfg.n_layers - n_groups * k
+        return n_groups, k, tail
+
+    def desc(self):
+        cfg = self.cfg
+        n_groups, k, tail = self._layout()
+        out = self._embed_desc()
+        out["mamba_groups"] = _stack_descs(_stack_descs(ssm.desc_mamba(cfg), k), n_groups)
+        if tail:
+            out["mamba_tail"] = _stack_descs(ssm.desc_mamba(cfg), tail)
+        out["shared_attn"] = blocks.desc_attn(cfg)
+        out["shared_mlp"] = blocks.desc_mlp(cfg)
+        out["fuse"] = P((2 * cfg.d_model, cfg.d_model), ("embed", "embed"))
+        return out
+
+    def forward(self, params, batch, cache=None):
+        cfg = self.cfg
+        n_groups, k, tail = self._layout()
+        x = self._embed(params, batch)
+        emb0 = x
+        pos0 = cache["pos"] if cache is not None else 0
+        positions = pos0 + jnp.arange(x.shape[1])[None, :]
+        new_cache = {"pos": pos0 + x.shape[1]} if cache is not None else None
+
+        def mamba_stack(xcur, stacked_p, stacked_c):
+            def scan_fn(xc_, xs):
+                if stacked_c is not None:
+                    pl_, cl = xs
+                else:
+                    pl_, cl = xs, None
+                y, nc = ssm.apply_mamba(pl_, xc_, cfg, cache=cl)
+                return xc_ + y, nc
+
+            xs = (stacked_p, stacked_c) if stacked_c is not None else stacked_p
+            body = jax.checkpoint(scan_fn) if (stacked_c is None and cfg.remat) else scan_fn
+            return scan_layers(body, xcur, xs, unroll=cfg.unroll_layers)
+
+        attn_caches = []
+        mamba_group_caches = []
+        for gi in range(n_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[gi], params["mamba_groups"])
+            gc = (
+                jax.tree_util.tree_map(lambda a: a[gi], cache["mamba_groups"])
+                if cache is not None
+                else None
+            )
+            x, nc = mamba_stack(x, gp, gc)
+            if cache is not None:
+                mamba_group_caches.append(nc)
+            # shared attention block on [x ; emb0]
+            fused = dense(jnp.concatenate([x, emb0], axis=-1), params["fuse"])
+            ac = None
+            if cache is not None:
+                ac = dict(
+                    jax.tree_util.tree_map(lambda a: a[gi], cache["attn"]), len=pos0
+                )
+            a, nac = blocks.apply_attn(
+                params["shared_attn"], fused, positions, cfg,
+                cache=ac, window=cfg.attn_window,
+            )
+            x = x + a
+            x = x + blocks.apply_mlp(params["shared_mlp"], x, cfg)
+            if cache is not None:
+                nac.pop("len")
+                attn_caches.append(nac)
+        if tail:
+            tc = cache["mamba_tail"] if cache is not None else None
+            x, ntc = mamba_stack(x, params["mamba_tail"], tc)
+            if cache is not None:
+                new_cache["mamba_tail"] = ntc
+        if cache is not None:
+            new_cache["mamba_groups"] = jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a), *mamba_group_caches
+            )
+            new_cache["attn"] = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *attn_caches)
+        return self._logits(params, x), new_cache
+
+    def cache_desc(self, batch: int, max_len: int):
+        cfg = self.cfg
+        n_groups, k, tail = self._layout()
+        stackn = lambda s, n: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+        mc = ssm.mamba_cache_desc(cfg, batch)
+        ac = {k_: v for k_, v in blocks.attn_cache_desc(cfg, batch, max_len).items() if k_ != "len"}
+        out = {
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "mamba_groups": jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((n_groups, k) + s.shape, s.dtype), mc
+            ),
+            "attn": jax.tree_util.tree_map(partial(stackn, n=n_groups), ac),
+        }
+        if tail:
+            out["mamba_tail"] = jax.tree_util.tree_map(partial(stackn, n=tail), mc)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (seamless-style; audio frontend stubbed as frame embeddings)
+# ---------------------------------------------------------------------------
+
+
+class EncDecLM(BaseLM):
+    def desc(self):
+        cfg = self.cfg
+        enc_layer = {"attn": blocks.desc_attn(cfg), "mlp": blocks.desc_mlp(cfg)}
+        dec_layer = {
+            "attn": blocks.desc_attn(cfg),
+            "cross": blocks.desc_attn(cfg),
+            "mlp": blocks.desc_mlp(cfg),
+        }
+        out = self._embed_desc()
+        out["enc_blocks"] = _stack_descs(enc_layer, cfg.n_enc_layers)
+        out["enc_norm"] = P((cfg.d_model,), ("norm",), "ones")
+        out["dec_blocks"] = _stack_descs(dec_layer, cfg.n_layers)
+        return out
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = dense(frames.astype(_dt(cfg)), params["frame_proj"])
+        x = shard(x, "batch", None, None)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def scan_fn(xc_, pl_):
+            a, _ = blocks.apply_attn(pl_["attn"], xc_, positions, cfg, causal=False)
+            xc_ = xc_ + a
+            return xc_ + blocks.apply_mlp(pl_["mlp"], xc_, cfg), None
+
+        body = jax.checkpoint(scan_fn) if cfg.remat else scan_fn
+        x, _ = scan_layers(body, x, params["enc_blocks"], unroll=cfg.unroll_layers)
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def forward(self, params, batch, cache=None):
+        cfg = self.cfg
+        if "frames" in batch:  # (re)encode; else reuse the cached memory
+            memory = self.encode(params, batch["frames"])
+        else:
+            memory = cache["memory"]
+        tok = batch["tokens"]
+        x = params["embed"][tok].astype(_dt(cfg))
+        x = shard(x, "batch", None, None)
+        pos0 = cache["pos"] if cache is not None else 0
+        positions = pos0 + jnp.arange(x.shape[1])[None, :]
+        new_cache = (
+            {"pos": pos0 + x.shape[1], "memory": memory} if cache is not None else None
+        )
+
+        def scan_fn(xc_, xs):
+            if cache is not None:
+                pl_, cl = xs
+                cl = dict(cl, len=pos0)
+            else:
+                pl_, cl = xs, None
+            a, nc = blocks.apply_attn(pl_["attn"], xc_, positions, cfg, cache=cl)
+            xc_ = xc_ + a
+            c, _ = blocks.apply_attn(pl_["cross"], xc_, positions, cfg, memory=memory)
+            xc_ = xc_ + c
+            xc_ = xc_ + blocks.apply_mlp(pl_["mlp"], xc_, cfg)
+            if nc is not None:
+                nc.pop("len")
+            return xc_, nc
+
+        xs = (params["dec_blocks"], cache["blocks"]) if cache is not None else params["dec_blocks"]
+        body = jax.checkpoint(scan_fn) if (cache is None and cfg.remat) else scan_fn
+        x, ncache = scan_layers(body, x, xs, unroll=cfg.unroll_layers)
+        if cache is not None:
+            new_cache["blocks"] = ncache
+        return self._logits(params, x), new_cache
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch, cache=None)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        lab = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss, {"loss": loss, "tokens": jnp.sum(mask)}
+
+    def cache_desc(self, batch: int, max_len: int, enc_len: int | None = None):
+        cfg = self.cfg
+        enc_len = enc_len or cfg.frontend_len
+        one = {k: v for k, v in blocks.attn_cache_desc(cfg, batch, max_len).items() if k != "len"}
+        stackn = lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype)
+        return {
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "memory": jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model), _dt(cfg)),
+            "blocks": jax.tree_util.tree_map(stackn, one),
+        }
+
+
+def build_model(cfg: ModelConfig) -> BaseLM:
+    if cfg.encdec:
+        return EncDecLM(cfg)
+    if cfg.xlstm is not None:
+        return XLSTMLM(cfg)
+    if cfg.hybrid is not None:
+        return HybridLM(cfg)
+    return TransformerLM(cfg)

@@ -1,0 +1,233 @@
+"""Minimal declarative NN substrate (no flax): param descriptors + layers.
+
+Parameters are declared as trees of `P` descriptors (shape + logical axes +
+init). The same declaration drives:
+  * real initialization (smoke tests / training),
+  * abstract initialization via eval_shape (multi-pod dry-run — no
+    allocation),
+  * PartitionSpec derivation through the logical-axis rules in
+    repro.runtime.sharding.
+
+Apply functions are plain jnp code over param dicts, annotated with
+`shard(x, logical_axes)` activation constraints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter descriptor: shape, logical axes (len == ndim), init."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float | None = None
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    return int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+
+
+def init_param(p: P, key: jax.Array) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    scale = p.scale
+    if scale is None:
+        scale = 0.02 if p.init == "embed" else 1.0 / math.sqrt(max(_fan_in(p.shape), 1))
+    return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(p.dtype)
+
+
+def is_desc(x) -> bool:
+    return isinstance(x, P)
+
+
+def init_tree(tree: Any, key: jax.Array) -> Any:
+    """Materialize a descriptor tree into real parameters."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_desc)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_param(p, k) for p, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_tree(tree: Any) -> Any:
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree, is_leaf=is_desc
+    )
+
+
+def axes_tree(tree: Any) -> Any:
+    """Logical-axis tree matching the params (for sharding rules)."""
+    return jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_desc)
+
+
+def stack_layers(descs: list[Any]) -> Any:
+    """Stack homogeneous per-layer descriptor trees along a leading 'layers'
+    axis (scan-over-layers layout)."""
+    first = descs[0]
+    n = len(descs)
+
+    def _stack(p: P) -> P:
+        return P((n,) + p.shape, ("layers",) + p.axes, p.init, p.scale, p.dtype)
+
+    return jax.tree_util.tree_map(_stack, first, is_leaf=is_desc)
+
+
+# ---------------------------------------------------------------------------
+# sharding annotation hook (bound by repro.runtime.sharding at trace time)
+# ---------------------------------------------------------------------------
+
+_SHARD_FN = None
+
+
+def set_shard_fn(fn) -> None:
+    global _SHARD_FN
+    _SHARD_FN = fn
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain activation `x` to logical axes (no-op outside a mesh)."""
+    if _SHARD_FN is None:
+        return x
+    return _SHARD_FN(x, axes)
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., d_in) @ w: (d_in, d_out) in the compute dtype of x."""
+    return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding. x: (B, L, H, Dh) with even Dh; positions: (B, L)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, L, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+#: query-chunk size for the memory-bounded attention path
+ATTN_Q_CHUNK = 1024
+
+
+def _attn_direct(qr, k, v, causal, q_offset, window, kv_len, dh):
+    b, lq = qr.shape[:2]
+    lk = k.shape[1]
+    logits = jnp.einsum("blhrd,bmhd->bhrlm", qr, k).astype(jnp.float32)
+    logits = logits / math.sqrt(dh)
+    qpos = jnp.arange(lq)[:, None] + q_offset
+    kpos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(qr.dtype)
+    return jnp.einsum("bhrlm,bmhd->blhrd", w, v)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+    window: int | None = None,
+    kv_len: jax.Array | None = None,
+    q_chunk: int | None = None,
+) -> jax.Array:
+    """GQA attention. q: (B, Lq, Hq, Dh); k/v: (B, Lk, Hkv, Dh|Dv).
+
+    `q_offset`: absolute position of q[0] (decode). `window`: sliding-window
+    size. `kv_len`: valid KV prefix length (decode with preallocated cache).
+
+    Long queries run the memory-bounded path: an UNROLLED loop over query
+    chunks (buffers are reused across chunks by XLA liveness; unrolled so
+    cost_analysis counts every chunk — a lax.scan body is costed only once).
+    With a static q_offset the causal structure also statically truncates
+    each chunk's KV prefix (the flash-attention triangle saving).
+    """
+    b, lq, hq, dh = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    qr = q.reshape(b, lq, hkv, rep, dh)
+    qc = q_chunk or ATTN_Q_CHUNK
+    if lq <= qc:
+        out = _attn_direct(qr, k, v, causal, q_offset, window, kv_len, dh)
+        return out.reshape(b, lq, hq, v.shape[-1])
+    static_off = isinstance(q_offset, int)
+    nq = -(-lq // qc)
+    outs = []
+    for ci in range(nq):
+        s = ci * qc
+        e = min(lq, s + qc)
+        qs = qr[:, s:e]
+        if static_off and causal and kv_len is None:
+            # static causal truncation of the KV prefix (triangle saving)
+            hi = min(k.shape[1], q_offset + e)
+            lo = max(0, q_offset + s - window + 1) if window is not None else 0
+            lo = (lo // 128) * 128  # keep slices lane-aligned
+            ks, vs = k[:, lo:hi], v[:, lo:hi]
+            out = _attn_direct(
+                qs, ks, vs, causal, q_offset + s - lo, window, None, dh
+            )
+        else:
+            out = _attn_direct(qs, k, v, causal, q_offset + s, window, kv_len, dh)
+        outs.append(out)
+    return jnp.concatenate(outs, axis=1).reshape(b, lq, hq, v.shape[-1])
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", None, "mlp")
+    return dense(h, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(dense(x, w_up).astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", None, "mlp")
+    return dense(h, w_down)
+
+
+def relu2_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    h = jnp.square(jax.nn.relu(dense(x, w_up).astype(jnp.float32))).astype(x.dtype)
+    h = shard(h, "batch", None, "mlp")
+    return dense(h, w_down)

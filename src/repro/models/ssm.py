@@ -1,0 +1,176 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-parallel form.
+
+Training/prefill uses the chunked algorithm (intra-chunk attention-like term
++ inter-chunk state recurrence over L/chunk steps), so the HLO contains a
+short scan over chunks instead of a length-L loop — both TPU-friendly and
+honest for cost analysis. Decode is the O(1) recurrent update.
+
+State convention per head: h in R^{N x P} (state x head_dim),
+  h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t (x) x_t,   y_t = C_t h_t + D x_t
+with A < 0 scalar per head, B/C shared across heads per group (G=1 here).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, SSMCfg
+from .nn import P, dense, rms_norm, shard
+
+
+def desc_mamba(cfg: ModelConfig) -> dict:
+    s: SSMCfg = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    g = s.n_groups
+    conv_dim = d_in + 2 * g * s.state
+    return {
+        "norm": P((d,), ("norm",), "ones"),
+        "in_proj": P((d, 2 * d_in + 2 * g * s.state + nh), ("embed", "mlp")),
+        "conv_w": P((s.conv, conv_dim), (None, "mlp")),
+        "conv_b": P((conv_dim,), ("mlp",), "zeros"),
+        "A_log": P((nh,), (None,), "zeros"),   # A = -exp(A_log) ~ -1
+        "D": P((nh,), (None,), "ones"),
+        "dt_bias": P((nh,), (None,), "zeros"),
+        "out_norm": P((d_in,), ("norm",), "ones"),
+        "out_proj": P((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """log_a: (..., Q) -> (..., Q, Q) with [t, s] = sum_{s < r <= t} log_a_r,
+    -inf above the diagonal (the 1-SS decay matrix of the SSD paper)."""
+    q = log_a.shape[-1]
+    cum = jnp.cumsum(log_a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,       # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H) positive
+    A: jax.Array,       # (H,) negative
+    Bm: jax.Array,      # (B, L, N)  (G=1, shared across heads)
+    Cm: jax.Array,      # (B, L, N)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,L,H,P), h_final (B,H,N,P))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+    log_a = dtc * A  # (b, nc, q, h), <= 0
+    log_a_h = jnp.moveaxis(log_a, -1, 2)  # (b, nc, h, q)
+    cum = jnp.cumsum(log_a_h, axis=-1)  # (b, nc, h, q)
+    # intra-chunk: y[t] = sum_{s<=t} exp(cum_t - cum_s) dt_s (C_t . B_s) x_s
+    Lmat = jnp.exp(_segsum(log_a_h))  # (b, nc, h, q, q)
+    scores = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)  # (b, nc, q, q)
+    W = scores[:, :, None] * Lmat * jnp.moveaxis(dtc, -1, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchts,bcshp->bcthp", W.astype(x.dtype), xc)
+    # chunk states: S_c = sum_s exp(cum_end - cum_s) dt_s B_s (x) x_s
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (b, nc, h, q)
+    wS = (decay_to_end * jnp.moveaxis(dtc, -1, 2)).astype(x.dtype)  # (b,nc,h,q)
+    S = jnp.einsum("bchs,bcsn,bcshp->bchnp", wS, Bc, xc)  # (b, nc, h, n, p)
+    # inter-chunk recurrence (scan over nc chunks)
+    chunk_decay = jnp.exp(cum[..., -1])  # (b, nc, h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), x.dtype)
+
+    def step(hprev, inp):
+        S_c, dec_c = inp  # (b,h,n,p), (b,h)
+        hnew = hprev * dec_c[..., None, None].astype(x.dtype) + S_c
+        return hnew, hprev
+
+    xs = (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    h_final, h_prevs = jax.lax.scan(step, h0, xs)  # h_prevs: (nc, b, h, n, p)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (b, nc, h, n, p)
+    # inter contribution: y[t] += exp(cum_t) C_t . h_prev_chunk
+    in_decay = jnp.exp(cum)  # (b, nc, h, q)
+    y_inter = jnp.einsum(
+        "bctn,bchnp,bcht->bcthp", Cc, h_prevs, in_decay.astype(x.dtype)
+    )
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y, h_final
+
+
+def apply_mamba(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Mamba2 block. cache = {'h': (B,H,N,P), 'conv': (B,conv-1,conv_dim)}."""
+    s: SSMCfg = cfg.ssm
+    b, l, d = x.shape
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    g, n = s.n_groups, s.state
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = dense(xn, p["in_proj"])
+    z, xi, BC, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in, 2 * d_in + 2 * g * n], axis=-1)
+    conv_in = jnp.concatenate([xi, BC], axis=-1)  # (b, l, conv_dim)
+    # depthwise causal conv, kernel K
+    K = s.conv
+    if cache is not None:
+        prev = cache["conv"].astype(conv_in.dtype)  # (b, K-1, conv_dim)
+        ext = jnp.concatenate([prev, conv_in], axis=1)
+        new_conv = ext[:, -(K - 1) :, :]
+    else:
+        ext = jnp.pad(conv_in, ((0, 0), (K - 1, 0), (0, 0)))
+        new_conv = ext[:, -(K - 1) :, :]
+    wins = jnp.stack([ext[:, i : i + l, :] for i in range(K)], axis=2)  # (b,l,K,c)
+    conv_out = jnp.einsum("blkc,kc->blc", wins, p["conv_w"].astype(x.dtype)) + p["conv_b"].astype(x.dtype)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xi, Bm, Cm = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+    xi = xi.reshape(b, l, nh, s.head_dim)
+    xi = shard(xi, "batch", None, "heads", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h0 = cache["h"].astype(x.dtype) if cache is not None else None
+    if l == 1 and cache is not None:
+        # recurrent decode: h = exp(dt A) h + dt B (x) x ; y = C h + D x
+        a = jnp.exp(dt[:, 0] * A)  # (b, nh)
+        bx = jnp.einsum("bn,bhp->bhnp", Bm[:, 0], xi[:, 0] * dt[:, 0, :, None].astype(x.dtype))
+        hn = h0 * a[..., None, None].astype(x.dtype) + bx.astype(x.dtype)
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], hn)[:, None]
+        y = y.reshape(b, 1, nh, s.head_dim)
+        h_final = hn
+    else:
+        pad = (-l) % s.chunk
+        if pad:
+            xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, h_final = ssd_chunked(xi, dt, A, Bm, Cm, s.chunk, h0)
+        y = y[:, :l]
+        xi = xi[:, :l]
+    y = y + xi * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, l, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)  # gated
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_final.astype(cache["h"].dtype), "conv": new_conv.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def mamba_cache_desc(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s: SSMCfg = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state
+    return {
+        "h": jax.ShapeDtypeStruct((batch, nh, s.state, s.head_dim), dtype),
+        "conv": jax.ShapeDtypeStruct((batch, s.conv - 1, conv_dim), dtype),
+    }

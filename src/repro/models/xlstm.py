@@ -1,0 +1,279 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, recurrent scan). Follows the xLSTM paper's stabilized exponential
+gating; mLSTM uses a chunkwise form (like SSD) so prefill is parallel and
+decode/long-context is O(1)-state recurrent.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, XLSTMCfg
+from .nn import P, dense, rms_norm, shard
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def desc_mlstm(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    xc: XLSTMCfg = cfg.xlstm
+    d_in = int(xc.proj_factor * d)
+    nh = cfg.n_heads
+    return {
+        "norm": P((d,), ("norm",), "ones"),
+        "w_up": P((d, d_in), ("embed", "mlp")),
+        "w_gate": P((d, d_in), ("embed", "mlp")),
+        "conv_w": P((4, d_in), (None, "mlp")),
+        "conv_b": P((d_in,), ("mlp",), "zeros"),
+        # NOTE §Perf iteration 2 (refuted): a Megatron col-parallel layout
+        # ((None, "heads") + replicated conv output) was tried and measured
+        # WORSE (t_collective 10.8 -> 18.1 s): the all-gather of the 2x-wide
+        # conv activations costs more than the partial-sum all-reduces it
+        # removes. Kept sharded-contraction layout. See EXPERIMENTS.md §Perf.
+        "wq": P((d_in, d_in), ("mlp", "heads")),
+        "wk": P((d_in, d_in), ("mlp", "heads")),
+        "wv": P((d_in, d_in), ("mlp", "heads")),
+        "w_if": P((d_in, 2 * nh), ("mlp", None), scale=0.01),
+        "if_bias": P((2 * nh,), (None,), "zeros"),
+        "out_norm": P((d_in,), ("norm",), "ones"),
+        "w_down": P((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_chunked(q, k, v, ig, lf, chunk, state=None):
+    """Stabilized chunkwise mLSTM.
+
+    q/k/v: (B, L, H, D); ig (input gate logit), lf (log forget gate): (B, L, H).
+    state: (C (B,H,D,D), n (B,H,D), m (B,H)) or None.
+    Returns y (B,L,H,D), new state.
+    """
+    b, l, h, dk = q.shape
+    nc = l // chunk
+    qc = q.reshape(b, nc, chunk, h, dk)
+    kc = k.reshape(b, nc, chunk, h, dk)
+    vc = v.reshape(b, nc, chunk, h, dk)
+    igc = jnp.moveaxis(ig.reshape(b, nc, chunk, h), -1, 2)  # (b,nc,h,q)
+    lfc = jnp.moveaxis(lf.reshape(b, nc, chunk, h), -1, 2)
+    cum = jnp.cumsum(lfc, axis=-1)  # (b,nc,h,q)
+    if state is None:
+        C0 = jnp.zeros((b, h, dk, dk), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    # intra-chunk log weights D[t,s] = cum_t - cum_s + ig_s  (s <= t)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Dlog = cum[..., :, None] - cum[..., None, :] + igc[..., None, :]
+    Dlog = jnp.where(tri, Dlog, -jnp.inf)  # (b,nc,h,q,q)
+    m_intra = jnp.max(Dlog, axis=-1)  # (b,nc,h,q)
+
+    # chunk-local state contributions (vectorized over chunks — OUTSIDE the
+    # scan, so FLOPs are costed correctly and the scan body is tiny)
+    cum_end = cum[..., -1]  # (b,nc,h)
+    w_end = cum_end[..., None] - cum + igc  # (b,nc,h,q)
+    m_loc = jnp.max(w_end, axis=-1)  # (b,nc,h)
+    wgt = jnp.exp(w_end - m_loc[..., None]).astype(jnp.float32)
+    KV_loc = jnp.einsum("bchs,bcshd,bcshe->bchde", wgt, kc.astype(jnp.float32), vc.astype(jnp.float32))
+    n_loc = jnp.einsum("bchs,bcshd->bchd", wgt, kc.astype(jnp.float32))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        KVc, nc_, mloc, dec = inp  # (b,h,dk,dv), (b,h,dk), (b,h), (b,h)
+        m_new = jnp.maximum(m + dec, mloc)
+        sc_old = jnp.exp(m + dec - m_new)
+        sc_loc = jnp.exp(mloc - m_new)
+        Cn = C * sc_old[..., None, None] + KVc * sc_loc[..., None, None]
+        nn_ = n * sc_old[..., None] + nc_ * sc_loc[..., None]
+        return (Cn, nn_, m_new), (C, n, m)
+
+    xs = (
+        jnp.moveaxis(KV_loc, 1, 0),
+        jnp.moveaxis(n_loc, 1, 0),
+        jnp.moveaxis(m_loc, 1, 0),
+        jnp.moveaxis(cum_end, 1, 0),
+    )
+    (Cf, nf, mf), (C_prev, n_prev, m_prev) = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    C_prev = jnp.moveaxis(C_prev, 0, 1)  # (b,nc,h,dk,dv)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)  # (b,nc,h,dk)
+    m_prev = jnp.moveaxis(m_prev, 0, 1)  # (b,nc,h)
+
+    # per-step stabilizer and outputs (vectorized over chunks)
+    m_t = jnp.maximum(m_prev[..., None] + cum, m_intra)  # (b,nc,h,q)
+    inter_w = jnp.exp(cum + m_prev[..., None] - m_t)  # (b,nc,h,q)
+    intra_w = jnp.exp(Dlog - m_t[..., None])  # (b,nc,h,q,q)
+    qk = jnp.einsum("bcthd,bcshd->bchts", qc, kc) / math.sqrt(dk)
+    Wts = (intra_w * qk.astype(jnp.float32)).astype(jnp.float32)
+    num = jnp.einsum("bchts,bcshd->bcthd", Wts, vc.astype(jnp.float32))
+    num = num + jnp.einsum(
+        "bcthd,bchde,bcht->bcthe", qc.astype(jnp.float32), C_prev, inter_w
+    ) / math.sqrt(dk)
+    qn = jnp.einsum("bcthd,bchd->bcht", qc.astype(jnp.float32), n_prev) / math.sqrt(dk)
+    den = jnp.sum(Wts, axis=-1) + qn * inter_w  # (b,nc,h,q)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    # num: (b,nc,t,h,d); den: (b,nc,h,t) -> (b,nc,t,h)
+    y = num / den.transpose(0, 1, 3, 2)[..., None]
+    y = y.astype(q.dtype).reshape(b, l, h, dk)
+    return y, (Cf, nf, mf)
+
+
+def mlstm_decode_step(q, k, v, ig, lf, state):
+    """One-token recurrent mLSTM update. q/k/v: (B,H,D); ig/lf: (B,H)."""
+    C, n, m = state
+    dk = q.shape[-1]
+    m_new = jnp.maximum(lf + m, ig)
+    fw = jnp.exp(lf + m - m_new)[..., None]
+    iw = jnp.exp(ig - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    Cn = C * fw[..., None] + iw[..., None] * kf[..., :, None] * vf[..., None, :]
+    nn_ = n * fw + iw * kf
+    qf = q.astype(jnp.float32) / math.sqrt(dk)
+    num = jnp.einsum("bhd,bhde->bhe", qf, Cn)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, nn_)), jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(q.dtype)
+    return y, (Cn, nn_, m_new)
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, *, cache=None):
+    xc: XLSTMCfg = cfg.xlstm
+    b, l, d = x.shape
+    d_in = int(xc.proj_factor * d)
+    nh = cfg.n_heads
+    dk = d_in // nh
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    u = dense(xn, p["w_up"])
+    gate = dense(xn, p["w_gate"])
+    # causal depthwise conv on u
+    K = 4
+    if cache is not None:
+        ext = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+        new_conv = ext[:, -(K - 1) :, :]
+    else:
+        ext = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+        new_conv = ext[:, -(K - 1) :, :]
+    wins = jnp.stack([ext[:, i : i + l, :] for i in range(K)], axis=2)
+    cu = jnp.einsum("blkc,kc->blc", wins, p["conv_w"].astype(u.dtype)) + p["conv_b"].astype(u.dtype)
+    cu = jax.nn.silu(cu.astype(jnp.float32)).astype(u.dtype)
+    q = dense(cu, p["wq"]).reshape(b, l, nh, dk)
+    k = dense(cu, p["wk"]).reshape(b, l, nh, dk)
+    v = dense(u, p["wv"]).reshape(b, l, nh, dk)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    gates = dense(cu, p["w_if"]).astype(jnp.float32) + p["if_bias"].astype(jnp.float32)
+    ig, fg = gates[..., :nh], gates[..., nh:]
+    lf = jax.nn.log_sigmoid(fg)
+    state = None
+    if cache is not None:
+        state = (cache["C"], cache["n"], cache["m"])
+    if l == 1 and cache is not None:
+        y, new_state = mlstm_decode_step(q[:, 0], k[:, 0], v[:, 0], ig[:, 0], lf[:, 0], state)
+        y = y[:, None]
+    else:
+        pad = (-l) % xc.chunk
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+            lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        y, new_state = _mlstm_chunked(q, k, v, ig, lf, xc.chunk, state)
+        y = y[:, :l]
+    y = y.reshape(b, l, d_in)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(y.dtype)
+    out = dense(y, p["w_down"])
+    new_cache = None
+    if cache is not None:
+        C, n, m = new_state
+        new_cache = {"C": C, "n": n, "m": m, "conv": new_conv.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def mlstm_cache_desc(cfg: ModelConfig, batch: int) -> dict:
+    xc: XLSTMCfg = cfg.xlstm
+    d_in = int(xc.proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    dk = d_in // nh
+    return {
+        "C": jax.ShapeDtypeStruct((batch, nh, dk, dk), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, dk), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, 3, d_in), jnp.bfloat16),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def desc_slstm(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    return {
+        "norm": P((d,), ("norm",), "ones"),
+        "w_in": P((d, 4 * d), ("embed", "mlp")),
+        "r": P((nh, hd, 4 * hd), (None, None, None), scale=1.0 / math.sqrt(hd)),
+        "bias": P((4 * d,), (None,), "zeros"),
+        "out_norm": P((d,), ("norm",), "ones"),
+        "w_out": P((d, d), ("mlp", "embed")),
+    }
+
+
+def apply_slstm(p, x, cfg: ModelConfig, *, cache=None):
+    """sLSTM with exponential gating and per-head recurrent mixing.
+
+    cache = {'c','n','m','h': (B, NH, HD)}; scan over time for l > 1.
+    """
+    b, l, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    wx = (dense(xn, p["w_in"]) + p["bias"].astype(x.dtype)).reshape(b, l, nh, 4 * hd)
+
+    if cache is not None:
+        c0, n0, m0, h0 = (cache[k].astype(jnp.float32) for k in ("c", "n", "m", "h"))
+    else:
+        c0 = jnp.zeros((b, nh, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.zeros((b, nh, hd), jnp.float32)  # matches the zeros cache init
+        h0 = jnp.zeros((b, nh, hd), jnp.float32)
+
+    rmat = p["r"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c, n, m, h = carry
+        z = wx_t.astype(jnp.float32) + jnp.einsum("bhd,hdf->bhf", h, rmat)
+        zi, ii, ff, oo = jnp.split(z, 4, axis=-1)
+        m_new = jnp.maximum(ff + m, ii)
+        i_p = jnp.exp(ii - m_new)
+        f_p = jnp.exp(ff + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(zi)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(oo) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (cf, nf, mf, hf), hs = jax.lax.scan(step, (c0, n0, m0, h0), jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, l, d).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    out = dense(y, p["w_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": cf, "n": nf, "m": mf, "h": hf}
+    return out, new_cache
+
+
+def slstm_cache_desc(cfg: ModelConfig, batch: int) -> dict:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    sd = jax.ShapeDtypeStruct((batch, nh, hd), jnp.float32)
+    return {"c": sd, "n": sd, "m": sd, "h": sd}

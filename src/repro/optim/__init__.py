@@ -1,0 +1,3 @@
+from . import adamw, compress
+from .adamw import AdamWConfig
+from .compress import GradCompressConfig

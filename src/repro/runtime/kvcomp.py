@@ -1,0 +1,42 @@
+"""KV-cache / activation compression helpers (DESIGN.md §2, third row).
+
+Two in-graph compressors for activation-resident tensors, both direct
+applications of the paper's Stage II:
+
+* `quantize_kv` / `dequantize_kv` — per-(token, head) linear quantization to
+  int8 (SZ's static vector quantization; also wired into apply_attn via
+  ModelConfig.kv_quant).
+* `bot_compress_kv` — the ZFP-style fused BOT+truncate surrogate from the
+  Pallas kernel, for host-offloaded KV pages: returns the reconstruction and
+  exact bits/block so the runtime can decide page-out format online
+  (Algorithm-1-style, per page).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (..., Dh) -> (int8 codes, f32 scales broadcastable on the last dim)."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32) / 127.0 + 1e-12
+    q = jnp.round(x.astype(jnp.float32) / scale).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def bot_compress_kv(page: jax.Array, eb_rel: float = 1e-2) -> tuple[jax.Array, jax.Array]:
+    """ZFP-path compression of a 2-D KV page (e.g. (tokens, heads*dh)).
+
+    Returns (reconstruction, bits-per-block) from the fused Pallas kernel;
+    callers compare sum(bits) against 8*page.nbytes to pick a page format.
+    """
+    from repro.kernels import ops
+
+    vr = jnp.maximum(jnp.max(page) - jnp.min(page), 1e-12)
+    recon, bits = ops.bot_fused(page.astype(jnp.float32), eb_rel * vr)
+    return recon.astype(page.dtype), bits

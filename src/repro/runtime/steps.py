@@ -1,0 +1,71 @@
+"""train_step / serve_step builders: jit-wrapped, mesh-aware, donation-ready.
+
+These are the functions the launcher jits and the dry-run lowers. They take
+explicit param/optimizer trees (no global state) and are pure.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn as rnn
+from repro.models.model import BaseLM
+from repro.optim import adamw, compress
+
+
+def make_train_step(model: BaseLM, opt_cfg: adamw.AdamWConfig, grad_comp: compress.GradCompressConfig | None = None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    opt_state may contain 'gc' (gradient-compression residuals) when
+    grad_comp is enabled.
+    """
+
+    def step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        metrics = dict(aux)
+        if grad_comp is not None:
+            grads, gc_state, gm = compress.compress(grad_comp, grads, opt_state["gc"])
+            metrics.update(gm)
+        new_params, new_adam, om = adamw.update(opt_cfg, grads, opt_state["adam"], params)
+        metrics.update(om)
+        new_state = {"adam": new_adam}
+        if grad_comp is not None:
+            new_state["gc"] = gc_state
+        return new_params, new_state, metrics
+
+    return step
+
+
+def init_opt_state(params: Any, grad_comp: compress.GradCompressConfig | None = None) -> dict:
+    out = {"adam": adamw.init(params)}
+    if grad_comp is not None:
+        out["gc"] = compress.init(params)
+    return out
+
+
+def make_prefill_step(model: BaseLM):
+    """serve prefill: (params, batch, cache) -> (last-token logits, cache)."""
+
+    def prefill(params, batch, cache):
+        logits, cache = model.forward(params, batch, cache=cache)
+        return logits[:, -1:], cache
+
+    return prefill
+
+
+def make_decode_step(model: BaseLM, sample: bool = False, temperature: float = 1.0):
+    """serve decode: (params, tokens (B,1), cache[, key]) -> (next, cache)."""
+
+    def decode(params, tokens, cache, key=None):
+        logits, cache = model.forward(params, {"tokens": tokens}, cache=cache)
+        if sample:
+            nxt = jax.random.categorical(key, logits[:, -1] / temperature)[:, None]
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return nxt.astype(jnp.int32), cache
+
+    return decode

@@ -1,0 +1,167 @@
+"""Codec correctness: error bounds, roundtrips, rate accounting (SZ & ZFP)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    select,
+    select_and_compress,
+    decompress,
+    sz_compress,
+    sz_decompress,
+    sz_stats,
+    zfp_compress,
+    zfp_decompress,
+    zfp_stats,
+)
+from repro.core import entropy as ent
+
+import jax.numpy as jnp
+
+
+def _tol(eb, x):
+    # f32-output guarantee: eb plus a few output ulps (same as real SZ/ZFP)
+    return eb + 4 * np.spacing(np.abs(x).max() + 1e-30)
+
+
+def _field(shape, kind, seed):
+    rng = np.random.default_rng(seed)
+    if kind == "noise":
+        return rng.standard_normal(shape).astype(np.float32)
+    if kind == "smooth":
+        grids = np.meshgrid(*[np.linspace(0, 4, s) for s in shape], indexing="ij")
+        out = np.ones(shape)
+        for g in grids:
+            out = out * np.sin(g)
+        return (out + 0.01 * rng.standard_normal(shape)).astype(np.float32)
+    if kind == "walk":
+        return np.cumsum(rng.standard_normal(shape), axis=-1).astype(np.float32)
+    raise ValueError(kind)
+
+
+SHAPES = [(2048,), (96, 80), (24, 40, 32)]
+KINDS = ["noise", "smooth", "walk"]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("eb_rel", [1e-2, 1e-3, 1e-5])
+def test_sz_error_bound_and_roundtrip(shape, kind, eb_rel):
+    x = _field(shape, kind, 7)
+    eb = eb_rel * (x.max() - x.min() + 1e-30)
+    buf = sz_compress(x, eb)
+    rec = sz_decompress(buf)
+    assert rec.shape == x.shape and rec.dtype == np.float32
+    assert np.abs(x - rec).max() <= _tol(eb, x)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("eb_rel", [1e-2, 1e-3, 1e-5])
+def test_zfp_error_bound_and_roundtrip(shape, kind, eb_rel):
+    x = _field(shape, kind, 11)
+    eb = eb_rel * (x.max() - x.min() + 1e-30)
+    buf = zfp_compress(x, eb)
+    rec = zfp_decompress(buf)
+    assert rec.shape == x.shape and rec.dtype == np.float32
+    assert np.abs(x - rec).max() <= _tol(eb, x)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(KINDS),
+    eb_rel=st.sampled_from([1e-2, 1e-3, 1e-4]),
+    shape=st.sampled_from(SHAPES),
+)
+def test_property_bounds_hold(seed, kind, eb_rel, shape):
+    """Hypothesis: both codecs respect the user bound on arbitrary fields."""
+    x = _field(shape, kind, seed)
+    eb = eb_rel * (x.max() - x.min() + 1e-30)
+    assert np.abs(x - sz_decompress(sz_compress(x, eb))).max() <= _tol(eb, x)
+    assert np.abs(x - zfp_decompress(zfp_compress(x, eb))).max() <= _tol(eb, x)
+
+
+def test_stats_match_actual_bytes_sz():
+    """In-graph rate statistics track the byte codec within ~15%."""
+    x = _field((256, 256), "smooth", 3)
+    eb = 1e-3 * (x.max() - x.min())
+    st_ = sz_stats(jnp.asarray(x), eb)
+    actual = 8 * len(sz_compress(x, eb)) / x.size
+    assert abs(float(st_.bitrate) - actual) / actual < 0.25
+    # reconstruction identical up to dequantize dtype handling
+    assert np.abs(np.asarray(st_.recon) - sz_decompress(sz_compress(x, eb))).max() < 2e-5 * (
+        np.abs(x).max()
+    )
+
+
+def test_stats_match_actual_bytes_zfp():
+    x = _field((256, 256), "smooth", 3)
+    eb = 1e-3 * (x.max() - x.min())
+    st_ = zfp_stats(jnp.asarray(x), eb)
+    actual = 8 * len(zfp_compress(x, eb)) / x.size
+    assert abs(float(st_.bitrate) - actual) / actual < 0.1
+    # the stats path runs in f32, the byte codec in f64 — truncation-boundary
+    # jitter can move single coefficients one step; both stay within the bound
+    rec = zfp_decompress(zfp_compress(x, eb))
+    np.testing.assert_allclose(np.asarray(st_.recon), rec, atol=2 * eb)
+
+
+def test_zfp_overpreserves_vs_sz():
+    """§6.4: at the same eb, ZFP's actual error is well below the bound."""
+    x = _field((128, 128), "smooth", 5)
+    eb = 1e-3 * (x.max() - x.min())
+    err_sz = np.abs(x - sz_decompress(sz_compress(x, eb))).max()
+    err_zfp = np.abs(x - zfp_decompress(zfp_compress(x, eb))).max()
+    assert err_zfp < err_sz  # over-preservation
+
+    st_sz = sz_stats(jnp.asarray(x), eb)
+    st_zfp = zfp_stats(jnp.asarray(x), eb)
+    assert float(st_zfp.psnr) > float(st_sz.psnr)
+
+
+def test_huffman_roundtrip():
+    rng = np.random.default_rng(0)
+    syms = rng.geometric(0.05, size=20000).clip(0, 400).astype(np.int64)
+    freqs = np.bincount(syms, minlength=401)
+    table = ent.build_table(freqs)
+    buf = ent.encode(syms, table)
+    table2 = ent.HuffmanTable.from_bytes(table.to_bytes())
+    out = ent.decode(buf, table2, len(syms))
+    np.testing.assert_array_equal(out, syms)
+    # rate is within 10% of entropy + table
+    h = ent.entropy_bits(freqs)
+    assert 8 * len(buf) / len(syms) <= h * 1.1 + 1.0
+
+
+def test_huffman_degenerate_single_symbol():
+    syms = np.zeros(100, dtype=np.int64)
+    table = ent.build_table(np.bincount(syms, minlength=3))
+    buf = ent.encode(syms, table)
+    out = ent.decode(buf, ent.HuffmanTable.from_bytes(table.to_bytes()), 100)
+    np.testing.assert_array_equal(out, syms)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_select_and_compress_roundtrip(kind):
+    x = _field((128, 96), kind, 9)
+    cf = select_and_compress(x, eb_rel=1e-3)
+    rec = decompress(cf)
+    vr = x.max() - x.min()
+    assert np.abs(x - rec).max() <= _tol(1e-3 * vr, x)
+    assert cf.codec in ("sz", "zfp", "raw")
+
+
+def test_select_constant_field_is_raw_or_tiny():
+    x = np.full((64, 64), 3.14, dtype=np.float32)
+    cf = select_and_compress(x, eb_rel=1e-3)
+    rec = decompress(cf)
+    np.testing.assert_allclose(rec, x, atol=1e-6)
+
+
+def test_select_tiny_field_raw():
+    x = np.arange(10, dtype=np.float32)
+    cf = select_and_compress(x, eb_rel=1e-3)
+    assert cf.codec == "raw"
+    np.testing.assert_array_equal(decompress(cf), x)

@@ -1,0 +1,44 @@
+"""KV-cache compression: int8 quantized cache correctness + BOT page path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model, reduced_for_smoke
+from repro.models import nn as rnn
+from repro.runtime import kvcomp
+
+
+def test_quantize_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 16, 8, 32)).astype(np.float32))
+    q, s = kvcomp.quantize_kv(x)
+    back = kvcomp.dequantize_kv(q, s, jnp.float32)
+    err = jnp.max(jnp.abs(back - x))
+    assert float(err) <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+def test_int8_kv_cache_decode_close_to_fp():
+    cfg = reduced_for_smoke(get_config("smollm-360m")).scaled(n_layers=2)
+    cfg_q = cfg.scaled(kv_quant=True)
+    m_fp = build_model(cfg)
+    m_q = build_model(cfg_q)
+    params = rnn.init_tree(m_fp.desc(), jax.random.key(0))
+    toks = jnp.arange(24, dtype=jnp.int32)[None, :].repeat(2, 0) % cfg.vocab
+    c_fp = m_fp.init_cache(2, 32)
+    c_q = m_q.init_cache(2, 32)
+    assert c_q["blocks"]["k"].dtype == jnp.int8
+    lf, _ = m_fp.forward(params, {"tokens": toks}, cache=c_fp)
+    lq, _ = m_q.forward(params, {"tokens": toks}, cache=c_q)
+    scale = float(jnp.max(jnp.abs(lf))) + 1e-6
+    assert float(jnp.max(jnp.abs(lf - lq))) / scale < 0.08  # int8 noise only
+
+
+def test_bot_page_compression():
+    rng = np.random.default_rng(1)
+    page = jnp.asarray(np.cumsum(rng.standard_normal((256, 256)), 1).astype(np.float32))
+    recon, bits = kvcomp.bot_compress_kv(page, eb_rel=1e-2)
+    vr = float(jnp.max(page) - jnp.min(page))
+    assert float(jnp.max(jnp.abs(recon - page))) <= 1e-2 * vr
+    assert float(jnp.sum(bits)) < 8 * page.size * 4  # beats raw f32

@@ -1,0 +1,40 @@
+"""§5.1.4 quantizer families: roundtrip + the paper's qualitative claims."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantize as q
+
+
+def test_linear_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    eb = 1e-3
+    k = q.linear_quantize(x, eb)
+    back = q.linear_dequantize(k, eb)
+    assert float(jnp.max(jnp.abs(back - x))) <= eb * 1.001
+
+
+def test_log_roundtrip_relative_error():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray((rng.standard_normal(4096) * 10 ** rng.uniform(-3, 1, 4096)).astype(np.float32))
+    n = 512
+    codes, bmx = q.log_quantize(x, n, float(jnp.max(jnp.abs(x))))
+    back = q.log_dequantize(codes, bmx, n_bins_half=n)
+    mask = np.abs(np.asarray(x)) > float(bmx[1]) * 1e-6  # outside dead zone
+    rel = np.abs(np.asarray(back) - np.asarray(x))[mask] / np.abs(np.asarray(x))[mask]
+    # per-bin relative error bounded by the log bin width
+    b = float(bmx[0])
+    assert rel.max() <= b - 1.0 + 1e-3, (rel.max(), b)
+
+
+def test_equiprob_uniform_occupancy():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal(1 << 14).astype(np.float32))
+    edges = q.equiprob_edges(x, 64)
+    codes = q.equiprob_quantize(x, edges)
+    hist = np.bincount(np.asarray(codes).reshape(-1), minlength=64)
+    # equal-probability bins: occupancy within 30% of uniform
+    assert hist.min() > 0.7 * x.size / 64 and hist.max() < 1.3 * x.size / 64
+    back = q.equiprob_dequantize(codes, edges)
+    assert np.all(np.isfinite(np.asarray(back)))

@@ -1,0 +1,93 @@
+"""Unit tests for the logical-axis sharding rules + mesh utilities."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime import sharding as sh
+
+
+def _mesh(shape=(1, 1), axes=("data", "model")):
+    return jax.make_mesh(shape, axes)
+
+
+def test_spec_resolution_basic():
+    mesh = _mesh()
+    assert sh.spec_for_axes(("embed", "mlp"), sh.TRAIN_RULES, mesh) == P("data", "model")
+    assert sh.spec_for_axes(("vocab", "embed"), sh.TRAIN_RULES, mesh) == P("model", "data")
+    assert sh.spec_for_axes(("norm",), sh.TRAIN_RULES, mesh) == P(None)
+
+
+def test_spec_never_reuses_mesh_axis():
+    mesh = _mesh()
+    # experts and mlp both map to 'model' — second one must drop to None
+    spec = sh.spec_for_axes(("experts", "embed", "mlp"), sh.TRAIN_RULES, mesh)
+    assert spec == P("model", "data", None)
+
+
+def test_spec_drops_axes_missing_from_mesh():
+    mesh = _mesh()
+    spec = sh.spec_for_axes(("batch", None, None), sh.TRAIN_RULES, mesh)
+    # 'pod' not in the mesh: batch maps to just 'data'
+    assert spec == P("data", None, None)
+
+
+def test_tree_shardings_divisibility_filter():
+    mesh = _mesh()
+    abstract = {"w": jax.ShapeDtypeStruct((7, 8), np.float32)}
+    axes = {"w": ("vocab", "embed")}
+    shd = sh.tree_shardings(axes, sh.TRAIN_RULES, mesh, abstract=abstract)
+    # both divisible by 1 on a (1,1) mesh
+    assert shd["w"].spec == P("model", "data")
+    mesh2 = jax.make_mesh((1,), ("model",))
+    shd2 = sh.tree_shardings(axes, {"vocab": "model", "embed": None}, mesh2, abstract=abstract)
+    assert shd2["w"].spec == P("model", None)
+
+
+def test_cache_sharding_finds_batch_and_heads():
+    mesh = _mesh()
+    cache = {
+        "k": jax.ShapeDtypeStruct((32, 128, 1024, 8, 64), np.float32),  # (L,B,M,H,D)
+        "pos": jax.ShapeDtypeStruct((), np.int32),
+    }
+    shd = sh.cache_sharding(cache, mesh, batch=128, head_sizes={8})
+    assert shd["k"].spec == P(None, "data", None, "model", None)
+    assert shd["pos"].spec == P()
+
+
+def test_cache_sharding_seq_fallback():
+    mesh = _mesh()
+    cache = {"k": jax.ShapeDtypeStruct((32, 128, 4096, 3, 64), np.float32)}
+    # no dim matches a head size -> baseline leaves everything but batch
+    base = sh.cache_sharding(cache, mesh, batch=128, head_sizes={999})
+    assert base["k"].spec == P(None, "data", None, None, None)
+    # seq variant shards the first long divisible dim (the sequence) instead
+    seq = sh.cache_sharding(cache, mesh, batch=128, head_sizes={999}, seq_shard=True)
+    assert seq["k"].spec == P(None, "data", "model", None, None)
+    # head dim takes priority over seq when it matches
+    pri = sh.cache_sharding(cache, mesh, batch=128, head_sizes={3}, seq_shard=True)
+    assert pri["k"].spec == P(None, "data", None, "model", None)
+
+
+def test_activation_constraint_guard():
+    """nn.shard drops mesh axes that don't divide the dim."""
+    import jax.numpy as jnp
+    from repro.models import nn
+
+    mesh = _mesh()
+    with sh.activate(mesh, sh.TRAIN_RULES):
+        x = jnp.zeros((4, 8, 15, 32))  # 15 'heads' on 1-way model: fine
+        out = nn.shard(x, "batch", None, "heads", None)
+        assert out.shape == x.shape
+    assert nn._SHARD_FN is None  # deactivated
+
+
+def test_mesh_builders():
+    from repro.launch.mesh import make_local_mesh
+
+    m = make_local_mesh()
+    assert m.axis_names == ("data", "model")
+    assert int(np.prod(m.devices.shape)) == 1
