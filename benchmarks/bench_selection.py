@@ -1,12 +1,17 @@
 """Paper §6.2 + Figs 6-7: selection accuracy, compression-ratio improvement
-at iso-PSNR, and the fixed-eb (Lu et al.) vs fixed-PSNR comparison."""
+at iso-PSNR, and the fixed-eb (Lu et al.) vs fixed-PSNR comparison.
+
+`run_many` / `--many`: the batched multi-field engine (`select_many`,
+DESIGN.md §1) vs the per-field `select` loop on a many-tensor checkpoint —
+one padded block batch + one jitted launch vs one launch (and up to one
+compile) per field."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import select, sz_compress, zfp_compress
-from .common import SUITES, csv_row
+from repro.core import select, select_many, sz_compress, zfp_compress
+from .common import SUITES, csv_row, timer
 
 
 def run(eb_rels=(1e-3, 1e-4), suites=("ATM", "Hurricane", "NYX")):
@@ -55,7 +60,59 @@ def run(eb_rels=(1e-3, 1e-4), suites=("ATM", "Hurricane", "NYX")):
     return rows
 
 
-def main() -> None:
+def _checkpoint_fields(n_fields: int, seed: int = 0) -> list[np.ndarray]:
+    """A checkpoint-like mix: varied 1/2/3-D shapes and characteristics, so
+    the per-field loop pays its worst case (jit cache misses across shapes)
+    and the batched engine shows its amortization."""
+    rng = np.random.default_rng(seed)
+    shapes = [(256, 256), (192, 320), (128, 128), (4096,), (16, 64, 64), (96, 224)]
+    out = []
+    for i in range(n_fields):
+        shape = shapes[i % len(shapes)]
+        slope = -4.0 + 3.0 * (i % 7) / 6.0
+        grids = np.meshgrid(*[np.linspace(0, 5, s) for s in shape], indexing="ij")
+        smooth = np.ones(shape, np.float32)
+        for g in grids:
+            smooth = smooth * np.sin((1 + i % 5) * g).astype(np.float32)
+        f = smooth + 10.0**slope * rng.standard_normal(shape).astype(np.float32)
+        out.append(f.astype(np.float32))
+    return out
+
+
+def run_many(n_fields: int = 32, eb_rel: float = 1e-4, repeat: int = 3):
+    """Batched `select_many` vs the per-field `select` loop."""
+    fields = _checkpoint_fields(n_fields)
+    # warm both paths (compile) before timing
+    loop_sels = [select(f, eb_rel=eb_rel) for f in fields]
+    many_sels = select_many(fields, eb_rel=eb_rel)
+    agree = sum(a.codec == b.codec for a, b in zip(loop_sels, many_sels))
+    t_loop = min(
+        timer(lambda: [select(f, eb_rel=eb_rel) for f in fields])[1]
+        for _ in range(repeat)
+    )
+    t_many = min(
+        timer(select_many, fields, eb_rel=eb_rel)[1] for _ in range(repeat)
+    )
+    rows = [csv_row("n_fields", "t_per_field_s", "t_batched_s", "speedup", "decisions_agree")]
+    rows.append(csv_row(
+        n_fields, f"{t_loop:.4f}", f"{t_many:.4f}",
+        f"{t_loop / max(t_many, 1e-9):.2f}", f"{agree}/{n_fields}",
+    ))
+    return rows
+
+
+def main(argv: list[str] | None = None) -> None:
+    import sys
+
+    argv = sys.argv[1:] if argv is None else argv
+    if "--many" in argv:
+        n = 32
+        for a in argv:
+            if a.startswith("--fields="):
+                n = int(a.split("=", 1)[1])
+        for r in run_many(n_fields=n):
+            print(r)
+        return
     for r in run():
         print(r)
 

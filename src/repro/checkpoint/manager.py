@@ -13,6 +13,12 @@ Writes are atomic (tmp dir + rename); `keep_n` old checkpoints are pruned;
 `async_save` runs serialization+IO off the training thread (the in-situ
 model of the paper: compress while the next step computes).
 
+Codec selection is batched: ALL lossy fields go through one
+`select_many` estimator launch (one padded block batch, one device
+round-trip per checkpoint), then per-field SZ/ZFP byte encoding runs on a
+`workers`-wide thread pool so encoding of field i overlaps with encoding
+of field j and with the sequential writer draining results in order.
+
 Weights default to lossy (value-range-relative eb, Algorithm 1 per tensor);
 optimizer state defaults to raw (Adam moments are cheap to compress but
 sensitive near zero) — both policies are per-call overridable.
@@ -27,6 +33,8 @@ import os
 import shutil
 import threading
 import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable
 
 import jax
@@ -42,6 +50,7 @@ class CheckpointConfig:
     eb_rel: float = 1e-4
     compress: bool = True
     r_sp: float = 0.05
+    workers: int = 4  # thread-pool width for per-field byte encoding (0 = serial)
 
 
 def _leaf_items(tree: Any) -> list[tuple[str, np.ndarray]]:
@@ -76,30 +85,64 @@ class CheckpointManager:
         os.makedirs(tmp, exist_ok=True)
         fields = []
         t0 = time.time()
-        with open(os.path.join(tmp, "data.bin"), "wb") as f:
-            off = 0
-            for name, arr in _leaf_items(tree):
-                if (
-                    cfg.compress
-                    and lossy(name)
-                    and np.issubdtype(arr.dtype, np.floating)
-                    and arr.size >= 64
-                ):
-                    cf = sel.select_and_compress(
-                        arr.astype(np.float32), eb_rel=cfg.eb_rel, r_sp=cfg.r_sp
+        items = _leaf_items(tree)
+        lossy_idx = [
+            i
+            for i, (name, arr) in enumerate(items)
+            if cfg.compress
+            and lossy(name)
+            and np.issubdtype(arr.dtype, np.floating)
+            and arr.size >= 64
+        ]
+        # Steps 1-3 for every lossy field in ONE batched estimator launch
+        # (select_many casts to f32 one field at a time and keeps only the
+        # sampled blocks, so no full-tree f32 copy is ever materialized)
+        sels = sel.select_many(
+            [items[i][1] for i in lossy_idx], eb_rel=cfg.eb_rel, r_sp=cfg.r_sp
+        )
+        sel_of = dict(zip(lossy_idx, sels))
+
+        def _encode(i: int) -> tuple[bytes, str, float]:
+            name, arr = items[i]
+            s = sel_of.get(i)
+            if s is None:
+                return arr.tobytes(), "none", 0.0
+            cf = sel.encode_with_selection(arr, s)  # casts to f32 internally
+            return cf.data, cf.codec, s.eb_abs
+
+        pool = (
+            ThreadPoolExecutor(max_workers=cfg.workers)
+            if cfg.workers > 1 and len(items) > 1
+            else None
+        )
+        # the writer drains results in field order while the pool encodes
+        # ahead of the write cursor — but only a bounded window ahead, so
+        # encoded-but-unwritten byte streams can't pile up past RAM
+        window = 2 * cfg.workers if pool else 1
+        futs: deque = deque()
+        nxt = 0
+        try:
+            with open(os.path.join(tmp, "data.bin"), "wb") as f:
+                off = 0
+                for i, (name, arr) in enumerate(items):
+                    if pool is not None:
+                        while nxt < len(items) and len(futs) < window:
+                            futs.append(pool.submit(_encode, nxt))
+                            nxt += 1
+                        data, codec, eb = futs.popleft().result()
+                    else:
+                        data, codec, eb = _encode(i)
+                    f.write(data)
+                    fields.append(
+                        dict(
+                            name=name, codec=codec, shape=list(arr.shape),
+                            dtype=str(arr.dtype), offset=off, nbytes=len(data), eb=eb,
+                        )
                     )
-                    data, codec = cf.data, cf.codec
-                    eb = cf.selection.eb_abs if cf.selection else 0.0
-                else:
-                    data, codec, eb = arr.tobytes(), "none", 0.0
-                f.write(data)
-                fields.append(
-                    dict(
-                        name=name, codec=codec, shape=list(arr.shape),
-                        dtype=str(arr.dtype), offset=off, nbytes=len(data), eb=eb,
-                    )
-                )
-                off += len(data)
+                    off += len(data)
+        finally:
+            if pool is not None:
+                pool.shutdown()
         manifest = dict(
             step=step,
             fields=fields,

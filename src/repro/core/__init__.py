@@ -11,7 +11,7 @@ from .api import (
     decompress_pytree,
     select_and_compress,
 )
-from .selector import Selection, select
+from .selector import Selection, encode_with_selection, select, select_many
 from .sz import SZStats, sz_compress, sz_decompress, sz_stats
 from .zfp import ZFPStats, zfp_compress, zfp_decompress, zfp_stats
 
@@ -25,8 +25,10 @@ __all__ = [
     "compression_ratio",
     "decompress",
     "decompress_pytree",
+    "encode_with_selection",
     "select",
     "select_and_compress",
+    "select_many",
     "sz_compress",
     "sz_decompress",
     "sz_stats",

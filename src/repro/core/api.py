@@ -8,13 +8,22 @@ compressed fields + the selection-bit stream, exactly the paper's
 
 from __future__ import annotations
 
+import os
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
 import numpy as np
 
-from .selector import CompressedField, compression_ratio, decompress, select_and_compress
+from .selector import (
+    CompressedField,
+    compression_ratio,
+    decompress,
+    encode_with_selection,
+    select_and_compress,
+    select_many,
+)
 
 
 @dataclass
@@ -43,28 +52,59 @@ def _leaf_name(path) -> str:
     return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
 
 
+def _default_workers() -> int:
+    return max(1, min(8, (os.cpu_count() or 2) - 1))
+
+
 def compress_pytree(
     tree: Any,
     eb_rel: float = 1e-4,
     eb_abs: float | None = None,
     r_sp: float = 0.05,
     predicate: Callable[[str, np.ndarray], bool] | None = None,
+    workers: int | None = None,
 ) -> CompressedTree:
-    """Run Algorithm 1 independently on every float leaf of `tree`."""
+    """Run Algorithm 1 on every float leaf of `tree`.
+
+    Selection is batched: sampled blocks of all eligible leaves go through
+    ONE jitted estimator call (`select_many`), then the per-field SZ/ZFP
+    byte encoders run on a thread pool (`workers`; 0 forces serial) — the
+    paper's per-field independence makes both trivially parallel.
+    """
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    fields: dict[str, CompressedField] = {}
+    named: list[tuple[str, np.ndarray]] = []
+    compress_idx: list[int] = []
     for path, leaf in leaves:
         name = _leaf_name(path)
         arr = np.asarray(leaf)
+        named.append((name, arr))
         if predicate is not None and not predicate(name, arr):
-            fields[name] = CompressedField("raw", arr.tobytes(), arr.shape, str(arr.dtype))
             continue
         if not np.issubdtype(arr.dtype, np.floating):
-            fields[name] = CompressedField("raw", arr.tobytes(), arr.shape, str(arr.dtype))
             continue
-        fields[name] = select_and_compress(
-            arr.astype(np.float32), eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp
-        )
+        compress_idx.append(len(named) - 1)
+    # original arrays go in; select_many casts to f32 one field at a time
+    sels = select_many(
+        [named[i][1] for i in compress_idx],
+        eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp,
+    )
+    sel_of = dict(zip(compress_idx, sels))
+
+    def encode(i: int) -> CompressedField:
+        name, arr = named[i]
+        if i not in sel_of:
+            return CompressedField("raw", arr.tobytes(), arr.shape, str(arr.dtype))
+        # original array in: encode_with_selection casts to f32 internally
+        # but records the true dtype, so decompress restores it
+        return encode_with_selection(arr, sel_of[i])
+
+    n_workers = _default_workers() if workers is None else workers
+    if n_workers > 1 and len(named) > 1:
+        with ThreadPoolExecutor(max_workers=n_workers) as ex:
+            encoded = list(ex.map(encode, range(len(named))))
+    else:
+        encoded = [encode(i) for i in range(len(named))]
+    fields = {named[i][0]: cf for i, cf in enumerate(encoded)}
     return CompressedTree(fields=fields, treedef=treedef)
 
 

@@ -87,10 +87,14 @@ def significant_bits(coeffs: jax.Array, step: jax.Array) -> jax.Array:
     return jnp.where(q >= 1.0, jnp.floor(jnp.log2(jnp.maximum(q, 1.0))) + 1.0, 0.0)
 
 
-def exact_coder_bits(coeffs: jax.Array, step: jax.Array, max_planes: int = 31) -> jax.Array:
-    """EXACT total bit count of the plane-sectioned k-prefix coder in zfp.py,
-    computed vectorized in-graph (static 31-plane loop; magnitudes beyond
-    2^31 saturate, i.e. bit-rates >= ~32 b/v — the raw-fallback regime).
+def exact_coder_bits_blocks(
+    coeffs: jax.Array, step: jax.Array, max_planes: int = 31
+) -> jax.Array:
+    """EXACT per-block bit count of the plane-sectioned k-prefix coder in
+    zfp.py, computed vectorized in-graph (static 31-plane loop; magnitudes
+    beyond 2^31 saturate, i.e. bit-rates >= ~32 b/v — the raw-fallback
+    regime). Shape (nblk,) — the batched selection engine segment-sums this
+    per field (DESIGN.md §5).
 
     Mirrors _emit_planes: per plane, refinement bits + w-bit k field per
     block with remaining coeffs + k tested significance bits + signs.
@@ -108,21 +112,26 @@ def exact_coder_bits(coeffs: jax.Array, step: jax.Array, max_planes: int = 31) -
     m = m[:, order]
     mx = jnp.max(m, axis=1)
     nsb = jnp.where(mx > 0, jnp.floor(jnp.log2(jnp.maximum(mx.astype(jnp.float32), 1.0))) + 1.0, 0.0).astype(jnp.int32)
-    total = jnp.zeros((), jnp.float32)
+    total = jnp.zeros((nblk,), jnp.float32)
     for p in range(max_planes):
         active = nsb > p
         act = active[:, None]
         sig_prev = jnp.right_shift(m, p + 1) > 0
         bit_p = jnp.bitwise_and(jnp.right_shift(m, p), 1)
-        nref = jnp.sum((act & sig_prev).astype(jnp.float32))
+        nref = jnp.sum((act & sig_prev).astype(jnp.float32), axis=1)
         rem = act & ~sig_prev
         has_rem = jnp.any(rem, axis=1) & active
         rank = jnp.cumsum(rem.astype(jnp.int32), axis=1) - 1
         newly = rem & (bit_p == 1)
         k = jnp.max(jnp.where(newly, rank + 1, 0), axis=1)
-        total = total + nref + w * jnp.sum(has_rem.astype(jnp.float32))
-        total = total + jnp.sum(k.astype(jnp.float32)) + jnp.sum(newly.astype(jnp.float32))
-    return total + BLOCK_HEADER_BITS * nblk
+        total = total + nref + w * has_rem.astype(jnp.float32)
+        total = total + k.astype(jnp.float32) + jnp.sum(newly.astype(jnp.float32), axis=1)
+    return total + BLOCK_HEADER_BITS
+
+
+def exact_coder_bits(coeffs: jax.Array, step: jax.Array, max_planes: int = 31) -> jax.Array:
+    """Total exact coder bits over all blocks (sum of the per-block counts)."""
+    return jnp.sum(exact_coder_bits_blocks(coeffs, step, max_planes))
 
 
 def block_bits(coeffs: jax.Array, step: jax.Array, sign_bits: bool = True) -> jax.Array:

@@ -18,6 +18,18 @@ MAX_CODE_LEN = 24
 ESCAPE = 0  # symbol 0 of the shifted alphabet is the escape symbol
 
 
+def _zstd():
+    """Optional: zstandard shrinks the serialized Huffman table a bit; the
+    codec must still work on a bare jax+numpy environment, so streams carry
+    a flag byte and fall back to the raw table blob when it is absent."""
+    try:
+        import zstandard
+
+        return zstandard
+    except ImportError:
+        return None
+
+
 def entropy_bits(hist: np.ndarray) -> float:
     """Shannon entropy (bits/value) of a histogram — Eq. (5)."""
     p = hist.astype(np.float64)
@@ -86,23 +98,32 @@ class HuffmanTable:
     codes: np.ndarray  # (K,) uint64, canonical, MSB-first
 
     def to_bytes(self) -> bytes:
-        """Sparse serialization: (K, n_used) + delta-coded symbols + lens,
-        zstd-compressed (symbol runs are near-contiguous, lens are small)."""
-        import zstandard
-
+        """Sparse serialization: (K, n_used) + flag byte + delta-coded
+        symbols + lens, zstd-compressed when available (symbol runs are
+        near-contiguous, lens are small), raw otherwise."""
         used = np.nonzero(self.lens)[0].astype(np.int64)
         deltas = np.diff(used, prepend=0).astype(np.uint32)
         blob = deltas.tobytes() + self.lens[used].astype(np.uint8).tobytes()
-        blob = zstandard.ZstdCompressor(level=9).compress(blob)
+        z = _zstd()
+        flag = 1 if z is not None else 0
+        if z is not None:
+            blob = z.ZstdCompressor(level=9).compress(blob)
         hdr = np.array([len(self.lens), len(used)], dtype=np.uint32).tobytes()
-        return hdr + blob
+        return hdr + bytes([flag]) + blob
 
     @staticmethod
     def from_bytes(buf: bytes) -> "HuffmanTable":
-        import zstandard
-
         k, n = np.frombuffer(buf[:8], dtype=np.uint32)
-        blob = zstandard.ZstdDecompressor().decompress(buf[8:])
+        flag = buf[8]
+        blob = buf[9:]
+        if flag:
+            z = _zstd()
+            if z is None:
+                raise RuntimeError(
+                    "stream's Huffman table is zstd-compressed but the "
+                    "'zstandard' package is not installed"
+                )
+            blob = z.ZstdDecompressor().decompress(blob)
         deltas = np.frombuffer(blob[: 4 * n], dtype=np.uint32).astype(np.int64)
         used = np.cumsum(deltas)
         lens = np.zeros(k, dtype=np.int32)

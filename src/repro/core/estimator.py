@@ -70,19 +70,20 @@ def block_starts(shape: tuple[int, ...], r_sp: float) -> np.ndarray:
     return np.stack([g.reshape(-1) for g in grids], axis=1)
 
 
-def gather_blocks(x: jax.Array, starts: np.ndarray, halo: bool = False) -> jax.Array:
-    """Gather sampled blocks (n_s, 4, ..) — or (n_s, 5, ..) with a leading
-    halo of *original real neighbors* (zero outside the domain, matching
-    `lorenzo_forward`'s boundary convention)."""
+def _gather_blocks_impl(xp, x, starts: np.ndarray, halo: bool):
+    """Shared numpy/jnp gather: blocks (n_s, 4, ..) — or (n_s, 5, ..) with
+    a leading halo of *original real neighbors* (zero outside the domain,
+    matching `lorenzo_forward`'s boundary convention). One implementation
+    so the host and device paths cannot drift apart."""
     nd = x.ndim
     lo = -1 if halo else 0
-    offs = jnp.arange(lo, 4)
+    offs = xp.arange(lo, 4)
     idx = []
     masks = []
     for d in range(nd):
-        i = jnp.asarray(starts[:, d])[:, None] + offs[None, :]
+        i = xp.asarray(starts[:, d])[:, None] + offs[None, :]
         masks.append(i >= 0)
-        idx.append(jnp.clip(i, 0, x.shape[d] - 1))
+        idx.append(xp.clip(i, 0, x.shape[d] - 1))
     ns = starts.shape[0]
     w = 4 - lo
     # broadcasted advanced indexing: (n_s, w, w, ...)
@@ -98,6 +99,19 @@ def gather_blocks(x: jax.Array, starts: np.ndarray, halo: bool = False) -> jax.A
             sh[1 + d] = w
             out = out * masks[d].reshape(sh).astype(out.dtype)
     return out
+
+
+def gather_blocks_np(x: np.ndarray, starts: np.ndarray, halo: bool = False) -> np.ndarray:
+    """Host-side twin of `gather_blocks`, used by the batched selection
+    engine: sampled blocks of MANY fields are gathered on host (r_sp of the
+    data), packed into one batch, and shipped to the device in a single
+    transfer instead of one full-field transfer per leaf."""
+    return _gather_blocks_impl(np, x, starts, halo)
+
+
+def gather_blocks(x: jax.Array, starts: np.ndarray, halo: bool = False) -> jax.Array:
+    """Device-side sampled-block gather (jit-safe)."""
+    return _gather_blocks_impl(jnp, x, starts, halo)
 
 
 def lorenzo_residual_samples(
@@ -141,9 +155,21 @@ def sz_psnr(eb: jax.Array | float, vr: jax.Array | float) -> jax.Array:
     return -20.0 * jnp.log10(jnp.maximum(eb_rel, 1e-30)) + 10.0 * math.log10(3.0)
 
 
+#: the iso-PSNR match point is snapped to this grid (dB) before inverting
+#: Eq. (10). 0.05 dB is far below the estimator's accuracy, but it makes the
+#: derived bin size bit-identical between the per-field and batched paths:
+#: a 1-ulp PSNR difference otherwise shifts delta by 1 ulp, flips a few
+#: round(x/delta) results sitting at .5, and the Chao1 table-cost estimate
+#: (singleton/doubleton counts) amplifies those flips into multi-bit rate
+#: swings on near-unique-residual fields (DESIGN.md §4).
+PSNR_MATCH_QUANTUM = 0.05
+
+
 def sz_delta_for_psnr(psnr: jax.Array, vr: jax.Array | float) -> jax.Array:
-    """Invert Eq. (10): delta = VR * sqrt(12) * 10^(-PSNR/20)."""
-    return jnp.asarray(vr, jnp.float32) * math.sqrt(12.0) * 10.0 ** (-psnr / 20.0)
+    """Invert Eq. (10): delta = VR * sqrt(12) * 10^(-PSNR/20), with PSNR
+    snapped to the PSNR_MATCH_QUANTUM grid (see above)."""
+    psnr_q = jnp.round(psnr / PSNR_MATCH_QUANTUM) * PSNR_MATCH_QUANTUM
+    return jnp.asarray(vr, jnp.float32) * math.sqrt(12.0) * 10.0 ** (-psnr_q / 20.0)
 
 
 def estimate_sz(
@@ -264,3 +290,165 @@ def estimate_zfp(
     vr64 = jnp.maximum(jnp.asarray(vr, jnp.float32), 1e-30)
     psnr = -10.0 * jnp.log10(jnp.maximum(mse_sp, 1e-60)) + 20.0 * jnp.log10(vr64)
     return Estimate(bitrate=bitrate, psnr=psnr)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-field estimation (DESIGN.md §4–§5)
+#
+# Sampled blocks of MANY fields are packed along a single leading axis in
+# FIELD ORDER: blocks [bounds[f], bounds[f+1]) belong to field f, with the
+# boundary array computed on host at pack time. Every per-field quantity is
+# then a prefix-sum + two boundary gathers — no scatters, which XLA:CPU
+# serializes and which would otherwise dominate the whole launch. One jitted
+# program replaces one estimator launch per field; padded batch/field
+# buckets (select_many) keep the jit cache small.
+# ---------------------------------------------------------------------------
+
+
+def field_sums(x: jax.Array, bounds: jax.Array) -> jax.Array:
+    """Per-field sums of field-ordered rows: x is (S,) or (S, C) with rows
+    [bounds[f], bounds[f+1]) belonging to field f; returns (F,) / (F, C).
+
+    The window is a difference of two global prefix sums, so callers must
+    keep the summand magnitudes comparable across fields: integer-valued
+    columns go through exact int32 accumulation (pass an int dtype), and
+    float columns should be normalized per field first — a raw f32 cumsum
+    over a huge batch loses the small fields to cancellation.
+    `select_many` additionally caps a batch at MAX_BATCH_BLOCKS so int32
+    bit totals cannot overflow."""
+    cs = jnp.cumsum(x, axis=0)
+    cs = jnp.concatenate([jnp.zeros_like(cs[:1]), cs], axis=0)
+    return cs[bounds[1:]] - cs[bounds[:-1]]
+
+
+def estimate_zfp_many(
+    blocks: jax.Array,
+    seg: jax.Array,
+    bounds: jax.Array,
+    eb_f: jax.Array,
+    vr_f: jax.Array,
+    transform: str = "zfp",
+) -> Estimate:
+    """`estimate_zfp(mode='exact')` for a packed batch of blocks from many
+    fields. `blocks` is (total_blocks, 4, ..) in field order, seg[i] = field
+    of block i, bounds the (n_fields+1,) block boundary array; returns
+    per-field Estimate arrays of shape (n_fields,).
+
+    Per-field results match the single-field path up to float reduction
+    order: the per-block compute (exponent alignment, BOT, exact coder bit
+    count, truncation error of the EC sample points) is identical; only the
+    final mean becomes a boundary-windowed prefix-sum.
+    """
+    nd = blocks.ndim - 1
+    bsz = 4**nd
+    blocks = blocks.astype(jnp.float32)
+    n_s = blocks.shape[0]
+    mx = jnp.maximum(jnp.max(jnp.abs(blocks.reshape(n_s, -1)), axis=1), 1e-30)
+    e = jnp.ceil(jnp.log2(mx)).astype(jnp.int32)
+    norm = blocks * jnp.exp2(-e.astype(jnp.float32)).reshape((-1,) + (1,) * nd)
+    T = jnp.asarray(bot_matrix(transform), jnp.float32)
+    coeffs = block_transform_nd(norm, T, nd)
+    gain_n = bot_linf_gain(transform) ** nd
+    step = plane_step(eb_f[seg], e, gain_n)
+    from .embedded import exact_coder_bits_blocks
+
+    bits_blk = exact_coder_bits_blocks(coeffs, step)  # (n_s,) integer-valued
+    # PSNR from the EC sample points, exactly as in estimate_zfp
+    pmask = _ec_point_mask(nd)
+    sel = np.flatnonzero(pmask.reshape(-1))
+    s = step.reshape(-1, 1).astype(jnp.float32)
+    co = coeffs.reshape(n_s, -1)[:, sel]
+    m = jnp.trunc(jnp.abs(co) / s)
+    rec = jnp.sign(co) * jnp.where(m > 0, (m + 0.5) * s, 0.0)
+    scale = jnp.exp2(e.astype(jnp.float32)).reshape(-1, 1)
+    vr64 = jnp.maximum(vr_f, 1e-30)
+    # normalize the error energy per field BEFORE the global prefix sum —
+    # value ranges differ by orders of magnitude across a checkpoint, and a
+    # shared f32 cumsum would cancel the small fields away
+    err2n_blk = jnp.sum(jnp.square((co - rec) * scale), axis=1) / jnp.square(
+        vr64[seg]
+    )
+    bits_f = field_sums(bits_blk.astype(jnp.int32), bounds).astype(jnp.float32)
+    err2n_f = field_sums(err2n_blk, bounds)
+    nblk_f = (bounds[1:] - bounds[:-1]).astype(jnp.float32)
+    bitrate = bits_f / jnp.maximum(nblk_f * bsz, 1.0)
+    mse_over_vr2 = err2n_f / jnp.maximum(nblk_f * len(sel), 1.0)
+    psnr = -10.0 * jnp.log10(jnp.maximum(mse_over_vr2, 1e-60))
+    return Estimate(bitrate=bitrate, psnr=psnr)
+
+
+def estimate_sz_many(
+    halo_blocks: jax.Array,
+    seg: jax.Array,
+    bounds: jax.Array,
+    delta_f: jax.Array,
+    vr_f: jax.Array,
+    size_f: jax.Array,
+    n_pdf: int = PDF_BINS,
+) -> Estimate:
+    """`estimate_sz(mode='integer')` for a packed batch of halo blocks.
+
+    `halo_blocks` is (total_blocks, 5, ..) — field-ordered sampled blocks
+    with the leading original-neighbor halo already gathered (zero outside
+    the domain); `bounds` is the (n_fields+1,) BLOCK boundary array.
+
+    The per-field residual PDFs are NOT materialized as an
+    (n_fields, n_pdf) histogram (n_pdf = 65535 makes that the dominant cost
+    at checkpoint scale). Instead samples are sorted by (field, bin) once —
+    field order is preserved, so host-computed boundaries stay valid — and
+    entropy / Chao1 table cost come from run-length counts: identical
+    probabilities at O(samples log samples), independent of n_fields, with
+    zero scatters.
+    """
+    nd = halo_blocks.ndim - 1
+    delta_f = delta_f.astype(jnp.float32)
+    half = (n_pdf - 1) // 2
+    shape = (-1,) + (1,) * nd
+    hal = jnp.round(halo_blocks / delta_f[seg].reshape(shape))
+    d = hal
+    for ax in range(1, nd + 1):
+        upper = jax.lax.slice_in_dim(d, 1, d.shape[ax], axis=ax)
+        lower = jax.lax.slice_in_dim(d, 0, d.shape[ax] - 1, axis=ax)
+        d = upper - lower
+    bsz = 4**nd
+    k_raw = d.reshape(-1)  # (total_blocks * 4^nd,)
+    n_samples = k_raw.shape[0]
+    seg_s = jnp.repeat(seg, bsz)
+    sbounds = bounds * bsz  # sample-level field boundaries
+    n_samp_f = (sbounds[1:] - sbounds[:-1]).astype(jnp.float32)
+    # escape fraction from the unsorted (field-ordered) samples (exact
+    # integer counting — see field_sums)
+    esc = (jnp.abs(k_raw) > half).astype(jnp.int32)
+    ofrac = field_sums(esc, sbounds).astype(jnp.float32) / jnp.maximum(n_samp_f, 1.0)
+    k = jnp.clip(k_raw, -half, half)
+    # (field, bin) sort; seg is nondecreasing so fields stay contiguous at
+    # [sbounds[f], sbounds[f+1]) and only bins reorder within each field.
+    key = jnp.sort(seg_s * (n_pdf + 1) + (k + half).astype(jnp.int32))
+    pos = jnp.arange(n_samples, dtype=jnp.int32)
+    first = jnp.concatenate([jnp.ones((1,), bool), key[1:] != key[:-1]])
+    # next run start after each position, via a reverse cumulative min
+    fpos = jnp.where(first, pos, n_samples)
+    nxt_incl = jnp.flip(jax.lax.cummin(jnp.flip(fpos)))
+    nxt = jnp.concatenate([nxt_incl[1:], jnp.full((1,), n_samples, jnp.int32)])
+    counts = (nxt - pos).astype(jnp.float32)  # run length, valid at run starts
+    fid = key // (n_pdf + 1)
+    p = counts / jnp.maximum(n_samp_f[fid], 1.0)
+    # per-run PDF mass terms: |p log2 p| <= ~0.53, so the f32 prefix sum
+    # stays accurate; the count columns go through exact int32 accumulation
+    plogp = jnp.where(first, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0)
+    firsti = first.astype(jnp.int32)
+    icols = jnp.stack(
+        [
+            firsti,                                   # n_obs
+            firsti * (counts == 1.0),                 # Chao1 singletons
+            firsti * (counts == 2.0),                 # Chao1 doubletons
+        ],
+        axis=1,
+    )
+    ent = -field_sums(plogp, sbounds)
+    isums = field_sums(icols, sbounds).astype(jnp.float32)  # (F, 3)
+    n_obs, f1, f2 = isums[:, 0], isums[:, 1], isums[:, 2]
+    chao1 = n_obs + f1 * jnp.maximum(f1 - 1.0, 0.0) / (2.0 * (f2 + 1.0))
+    table_bits = 5.0 * jnp.minimum(chao1, float(n_pdf))
+    br = ent + SZ_BITRATE_OFFSET + ofrac * 64.0 + table_bits / jnp.maximum(size_f, 1.0)
+    return Estimate(bitrate=br, psnr=sz_psnr(delta_f / 2.0, vr_f))

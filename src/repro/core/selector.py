@@ -50,17 +50,11 @@ def select(
     transform: str = "zfp",
 ) -> Selection:
     """Run Steps 1-3 of Fig. 2 and return the decision + estimates."""
-    x = jnp.asarray(x)
-    if x.ndim > 3:  # fields are 1-3D; fold leading axes (checkpoint tensors)
-        x = x.reshape((-1,) + x.shape[-2:])
-    if x.ndim == 0 or min(x.shape) < 4 or x.size < 64:
-        vr0 = float(jnp.max(x) - jnp.min(x)) if x.size else 0.0
-        eb = eb_abs if eb_abs is not None else (eb_rel or 1e-3) * max(vr0, 1e-30)
-        return Selection("raw", float(eb), float(eb), 32.0, 32.0, 0.0, vr0, r_sp)
-    vr = float(jnp.max(x) - jnp.min(x))
-    if vr <= 0:
-        eb = eb_abs if eb_abs is not None else 1e-30
-        return Selection("raw", float(eb), float(eb), 32.0, 32.0, 0.0, vr, r_sp)
+    x = _fold_ndim(jnp.asarray(x))
+    vr = float(jnp.max(x) - jnp.min(x)) if x.size else 0.0
+    sel0 = _degenerate_selection(x, vr, eb_abs, eb_rel, r_sp)
+    if sel0 is not None:
+        return sel0
     if eb_abs is None:
         assert eb_rel is not None, "need eb_abs or eb_rel"
         eb_abs = eb_rel * vr
@@ -74,6 +68,203 @@ def select(
     if min(br_sz, br_zfp) >= 32.0:
         codec = "raw"  # incompressible at this bound — store verbatim
     return Selection(codec, float(eb_abs), eb_sz, br_sz, br_zfp, float(psnr_zfp), vr, r_sp)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-field selection (the engine behind compress_pytree and the
+# checkpoint writer; DESIGN.md §1, §4–§5)
+# ---------------------------------------------------------------------------
+
+
+def _fold_ndim(x):
+    """Fields are 1-3D; fold leading axes of higher-rank tensors, and merge
+    leading axes shorter than the 4-wide block (e.g. a (2, 128, 128)
+    stacked-layer tensor becomes (256, 128) instead of falling back to raw).
+    Shared by `select`, `select_many`, and `encode_with_selection` so the
+    decision and the encoded view always agree."""
+    if x.ndim > 3:
+        x = x.reshape((-1,) + x.shape[-2:])
+    while x.ndim > 1 and x.shape[0] < 4 and x.size:
+        x = x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+    return x
+
+
+def _degenerate_selection(x, vr: float, eb_abs, eb_rel, r_sp: float) -> Selection | None:
+    """The raw-fallback policy, shared by `select` and `select_many` so the
+    two paths cannot drift: too-small fields, constant fields, and
+    NaN/inf-poisoned fields (vr non-finite) all store verbatim. `vr` is
+    computed by the caller (device-side for `select`, host-side for
+    `select_many`); pass 0.0 for empty fields."""
+    if x.ndim == 0 or (x.size and min(x.shape) < 4) or x.size < 64:
+        eb = eb_abs if eb_abs is not None else (eb_rel or 1e-3) * max(vr, 1e-30)
+        return Selection("raw", float(eb), float(eb), 32.0, 32.0, 0.0, vr, r_sp)
+    if vr <= 0 or not np.isfinite(vr):
+        eb = eb_abs if eb_abs is not None else 1e-30
+        return Selection("raw", float(eb), float(eb), 32.0, 32.0, 0.0, vr, r_sp)
+    return None
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@_lru_cache(maxsize=64)
+def _batched_estimates_jitted(nd: int, n_blocks: int, n_fields: int, transform: str):
+    """Jitted Steps 1-3 of Fig. 2 over a packed multi-field block batch.
+
+    Cached per (ndim, padded block count, padded field count) — both counts
+    are padded to power-of-two buckets by `select_many`, so a checkpoint
+    with hundreds of distinctly-shaped tensors compiles O(log) programs,
+    not O(fields).
+    """
+
+    def f(halo, seg, bounds, eb_f, vr_f, size_f):
+        # the no-halo blocks are the halo blocks minus the leading
+        # original-neighbor row on each axis (the boundary mask only ever
+        # zeroes those -1 offsets), so one gather serves both estimators
+        nohalo = halo[(slice(None),) + (slice(1, None),) * nd]
+        e_zfp = est.estimate_zfp_many(nohalo, seg, bounds, eb_f, vr_f, transform)
+        delta = est.sz_delta_for_psnr(e_zfp.psnr, vr_f)
+        eb_sz = jnp.clip(delta / 2.0, eb_f * 1e-6, eb_f)
+        e_sz = est.estimate_sz_many(halo, seg, bounds, 2.0 * eb_sz, vr_f, size_f)
+        return e_sz.bitrate, e_zfp.bitrate, e_zfp.psnr, eb_sz
+
+    return jax.jit(f)
+
+
+#: per-launch field cap. Two constraints, the second binding: (a) the
+#: batched SZ estimator's int32 sort key seg * (n_pdf + 1) + bin must stay
+#: below 2^31 after pow2 field padding (would allow ~32k); (b) the per-run
+#: |p log2 p| entropy terms ride an f32 prefix sum whose running total
+#: grows ~17 bits/field, so the cap keeps the late-field window error
+#: around 1e-3 bits/value — far below any real decision margin (f64
+#: accumulation is unavailable without jax x64 mode).
+MAX_BATCH_FIELDS = 1024
+
+
+def _max_batch_blocks(nd: int) -> int:
+    """Per-launch block cap: bounds batch memory AND keeps the int32
+    coder-bit prefix sums in `field_sums` exact — the coder's worst case
+    is ~31 planes x (2 significance/refinement bits per coefficient + the
+    k field) + header, < 4^nd * 128 bits per block, so
+    cap * 4^nd * 128 < 2^31. Larger pytrees simply run a few launches; a
+    single field bigger than the cap falls back to the per-field `select`
+    path."""
+    return min(1 << 20, (1 << 31) // (4**nd * 128))
+
+
+def select_many(
+    fields,
+    eb_abs: float | None = None,
+    eb_rel: float | None = None,
+    r_sp: float = est.DEFAULT_SAMPLING_RATE,
+    transform: str = "zfp",
+) -> list[Selection]:
+    """Algorithm 1 on MANY fields with one estimator launch (per ndim group).
+
+    Sampled blocks of every field are gathered on host (r_sp of the bytes),
+    packed into one padded (total_blocks, 4, ..) batch per dimensionality,
+    and Steps 1-3 run as a single jitted call with per-field segment
+    reductions — one compile + one device round-trip per pytree instead of
+    one per leaf. Returns one `Selection` per input field, matching the
+    per-field `select` decision.
+
+    Fields are evaluated in float32 (the codecs' working dtype); the f32
+    view of each field is transient — only its sampled blocks are retained,
+    so peak memory is one field plus ~r_sp of the pytree.
+    """
+    fields = list(fields)
+    results: list[Selection | None] = [None] * len(fields)
+    # nd -> [(input index, halo blocks, eb, vr, size)] — the no-halo blocks
+    # are recovered in-graph by slicing off the leading halo row per axis
+    groups: dict[int, list[tuple[int, np.ndarray, float, float, int]]] = {}
+    for i, x in enumerate(fields):
+        arr = np.asarray(x, dtype=np.float32)
+        view = _fold_ndim(arr)
+        vr = float(np.max(view) - np.min(view)) if view.size else 0.0
+        sel0 = _degenerate_selection(view, vr, eb_abs, eb_rel, r_sp)
+        if sel0 is not None:
+            results[i] = sel0
+            continue
+        if eb_abs is None:
+            assert eb_rel is not None, "need eb_abs or eb_rel"
+            eb = eb_rel * vr
+        else:
+            eb = eb_abs
+        starts = est.block_starts(view.shape, r_sp)
+        if len(starts) > _max_batch_blocks(view.ndim):
+            # monster field: bigger alone than a whole batch — the
+            # per-field path has no int32 accumulation to protect
+            results[i] = select(view, eb_abs=float(eb), r_sp=r_sp, transform=transform)
+            continue
+        groups.setdefault(view.ndim, []).append((
+            i,
+            est.gather_blocks_np(view, starts, halo=True),
+            float(eb), vr, view.size,
+        ))
+    for nd, members in groups.items():
+        cap = _max_batch_blocks(nd)
+        lo = 0
+        while lo < len(members):
+            hi, blocks = lo, 0
+            while hi < len(members) and (
+                hi == lo
+                or (blocks + len(members[hi][1]) <= cap and hi - lo < MAX_BATCH_FIELDS)
+            ):
+                blocks += len(members[hi][1])
+                hi += 1
+            _select_batch(nd, members[lo:hi], results, r_sp, transform)
+            lo = hi
+    return results  # type: ignore[return-value]
+
+
+def _select_batch(
+    nd: int,
+    members: list[tuple[int, np.ndarray, float, float, int]],
+    results: list[Selection | None],
+    r_sp: float,
+    transform: str,
+) -> None:
+    halo = np.concatenate([m[1] for m in members], axis=0)
+    seg = np.concatenate(
+        [np.full(len(m[1]), f, dtype=np.int32) for f, m in enumerate(members)]
+    )
+    eb_l = [m[2] for m in members]
+    vr_l = [m[3] for m in members]
+    size_l = [m[4] for m in members]
+    n_real_blocks, n_real_fields = len(seg), len(members)
+    # pad to power-of-two buckets; padding blocks point at a dummy field slot
+    n_blocks = _next_pow2(n_real_blocks)
+    n_fields = _next_pow2(n_real_fields + 1)
+    pad = n_blocks - n_real_blocks
+    if pad:
+        halo = np.concatenate([halo, np.zeros((pad,) + halo.shape[1:], np.float32)])
+        seg = np.concatenate([seg, np.full(pad, n_fields - 1, np.int32)])
+    # field boundary array: blocks of field f live at [bounds[f], bounds[f+1]);
+    # empty padded slots collapse, the last slot absorbs the padding blocks
+    bounds = np.zeros(n_fields + 1, np.int32)
+    bounds[1 : n_real_fields + 1] = np.cumsum([len(m[1]) for m in members])
+    bounds[n_real_fields + 1 :] = n_real_blocks
+    bounds[n_fields] = n_blocks
+    def padf(v, fill):
+        return np.asarray(v + [fill] * (n_fields - n_real_fields), np.float32)
+
+    fn = _batched_estimates_jitted(nd, n_blocks, n_fields, transform)
+    br_sz, br_zfp, psnr, eb_sz = fn(
+        jnp.asarray(halo), jnp.asarray(seg),
+        jnp.asarray(bounds), jnp.asarray(padf(eb_l, 1.0)),
+        jnp.asarray(padf(vr_l, 1.0)), jnp.asarray(padf(size_l, 1.0)),
+    )
+    br_sz, br_zfp = np.asarray(br_sz), np.asarray(br_zfp)
+    psnr, eb_sz = np.asarray(psnr), np.asarray(eb_sz)
+    for f, (i, _, eb, vr, _) in enumerate(members):
+        bs, bz = float(br_sz[f]), float(br_zfp[f])
+        codec: Codec = "sz" if bs < bz else "zfp"
+        if min(bs, bz) >= 32.0:
+            codec = "raw"
+        results[i] = Selection(
+            codec, float(eb), float(eb_sz[f]), bs, bz, float(psnr[f]), vr, r_sp
+        )
 
 
 @_lru_cache(maxsize=256)
@@ -111,19 +302,17 @@ class CompressedField:
     selection: Selection | None = None
 
 
-def select_and_compress(
-    x: np.ndarray,
-    eb_abs: float | None = None,
-    eb_rel: float | None = None,
-    r_sp: float = est.DEFAULT_SAMPLING_RATE,
-) -> CompressedField:
+def encode_with_selection(x: np.ndarray, sel: Selection) -> CompressedField:
+    """Step 4: run the already-selected compressor on `x`.
+
+    Split from `select_and_compress` so batched callers (compress_pytree,
+    the checkpoint writer) can make ALL decisions in one device call via
+    `select_many` and then encode fields on a thread pool while the device
+    is free for the next batch.
+    """
     x = np.asarray(x)
     orig_shape, orig_dtype = x.shape, x.dtype
-    xf = x.astype(np.float32)
-    sel = select(xf, eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp)
-    view = xf
-    if view.ndim > 3:
-        view = view.reshape((-1,) + view.shape[-2:])
+    view = _fold_ndim(x.astype(np.float32))
     if view.ndim == 0:
         view = view.reshape(1)
     if sel.codec == "sz":
@@ -134,9 +323,20 @@ def select_and_compress(
         data = view.tobytes()
     # safety net: never ship a stream larger than raw
     if len(data) >= view.nbytes and sel.codec != "raw":
-        sel = Selection("raw", sel.eb_abs, sel.eb_sz, 32.0, 32.0, sel.psnr_target, sel.vr, r_sp)
+        sel = Selection("raw", sel.eb_abs, sel.eb_sz, 32.0, 32.0, sel.psnr_target, sel.vr, sel.r_sp)
         data = view.tobytes()
     return CompressedField(sel.codec, data, orig_shape, str(orig_dtype), sel)
+
+
+def select_and_compress(
+    x: np.ndarray,
+    eb_abs: float | None = None,
+    eb_rel: float | None = None,
+    r_sp: float = est.DEFAULT_SAMPLING_RATE,
+) -> CompressedField:
+    x = np.asarray(x)
+    sel = select(x.astype(np.float32), eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp)
+    return encode_with_selection(x, sel)
 
 
 def decompress(cf: CompressedField) -> np.ndarray:

@@ -27,7 +27,10 @@ from .transforms import lorenzo_forward, lorenzo_inverse
 
 #: symbols: 0 = escape (outlier), 1..2R+1 = residual shifted by R+1
 RESIDUAL_RADIUS = 32767  # 2n-1 = 65535 bins, paper §6.3.2
-_MAGIC = b"SZJX"
+#: bumped SZJX -> SZJ1 when the embedded Huffman-table serialization gained
+#: its zstd/raw flag byte, so streams from the old layout fail the magic
+#: check cleanly instead of erroring mid-decode
+_MAGIC = b"SZJ1"
 
 
 # ---------------------------------------------------------------------------
@@ -116,7 +119,7 @@ def sz_compress(x: np.ndarray, eb: float) -> bytes:
 def sz_decompress(buf: bytes) -> np.ndarray:
     off = 0
     magic, ndim, delta, size, n_out = struct.unpack_from("<4sBdQI", buf, off)
-    assert magic == _MAGIC, "not an SZJX stream"
+    assert magic == _MAGIC, "not an SZJ1 stream (old/foreign format?)"
     off += struct.calcsize("<4sBdQI")
     shape = struct.unpack_from(f"<{ndim}q", buf, off)
     off += 8 * ndim

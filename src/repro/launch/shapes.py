@@ -4,7 +4,7 @@ LM transformer shapes are seq_len x global_batch. decode_*/long_* lower
 `serve_step` (one new token against a KV cache of seq_len), NOT train_step.
 long_500k requires sub-quadratic attention: runs for SSM/hybrid archs
 (xlstm, zamba2 — the latter with a 4k sliding window on its shared
-attention block), skipped for pure full-attention archs (DESIGN.md §5).
+attention block), skipped for pure full-attention archs (DESIGN.md §6).
 """
 
 from __future__ import annotations

@@ -194,7 +194,9 @@ def activate(mesh: Mesh, rules: dict):
 
     nn.set_shard_fn(shard_fn)
     try:
-        with jax.set_mesh(mesh):
+        # jax >= 0.5 spells the mesh context jax.set_mesh; on older jax the
+        # Mesh object itself is the context manager
+        with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
             yield
     finally:
         nn.set_shard_fn(None)

@@ -1,0 +1,31 @@
+"""Hypothesis property tests for the byte codecs (optional dependency).
+
+`pytest.importorskip` keeps a bare jax+numpy+pytest environment green; the
+deterministic twins of these properties live in test_core_codecs.py.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sz_compress, sz_decompress, zfp_compress, zfp_decompress
+
+from test_core_codecs import KINDS, SHAPES, _field, _tol
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(KINDS),
+    eb_rel=st.sampled_from([1e-2, 1e-3, 1e-4]),
+    shape=st.sampled_from(SHAPES),
+)
+def test_property_bounds_hold(seed, kind, eb_rel, shape):
+    """Hypothesis: both codecs respect the user bound on arbitrary fields."""
+    x = _field(shape, kind, seed)
+    eb = eb_rel * (x.max() - x.min() + 1e-30)
+    assert np.abs(x - sz_decompress(sz_compress(x, eb))).max() <= _tol(eb, x)
+    assert np.abs(x - zfp_decompress(zfp_compress(x, eb))).max() <= _tol(eb, x)

@@ -1,0 +1,93 @@
+"""compress_pytree / decompress_pytree round-trips on mixed pytrees:
+non-float leaves, 0-d scalars, >3-D tensors, predicate-skipped fields."""
+
+import numpy as np
+
+from repro.core.api import compress_pytree, decompress_pytree
+
+
+def _mixed_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal((128, 96)).astype(np.float32),
+        "wd": np.cumsum(rng.standard_normal((96, 96)), 0),   # float64
+        "conv": rng.standard_normal((2, 3, 8, 32, 32)).astype(np.float32),  # 5-D
+        "bias": rng.standard_normal((96,)).astype(np.float32),
+        "step": np.array(1234, dtype=np.int64),            # 0-d int
+        "lr": np.array(3e-4, dtype=np.float32),            # 0-d float
+        "mask": rng.integers(0, 2, (64, 64)).astype(bool),
+        "ids": rng.integers(0, 50_000, (512,)).astype(np.int32),
+        "nested": {
+            "emb": np.cumsum(rng.standard_normal((80, 80)), 0).astype(np.float32),
+            "counts": np.arange(17, dtype=np.uint32),
+        },
+    }
+
+
+def test_mixed_tree_shapes_and_dtypes_preserved():
+    tree = _mixed_tree()
+    ct = compress_pytree(tree, eb_rel=1e-4)
+    out = decompress_pytree(ct)
+    flat_in = {
+        "w": tree["w"], "wd": tree["wd"], "conv": tree["conv"],
+        "bias": tree["bias"], "step": tree["step"], "lr": tree["lr"],
+        "mask": tree["mask"], "ids": tree["ids"],
+        "nested/emb": tree["nested"]["emb"],
+        "nested/counts": tree["nested"]["counts"],
+    }
+    flat_out = {
+        "w": out["w"], "wd": out["wd"], "conv": out["conv"],
+        "bias": out["bias"], "step": out["step"], "lr": out["lr"],
+        "mask": out["mask"], "ids": out["ids"],
+        "nested/emb": out["nested"]["emb"],
+        "nested/counts": out["nested"]["counts"],
+    }
+    for k, v in flat_in.items():
+        assert flat_out[k].shape == v.shape, k
+        # dtype preserved for every leaf (float leaves carry f32-precision
+        # values but keep their declared dtype)
+        assert flat_out[k].dtype == v.dtype, k
+        if not np.issubdtype(v.dtype, np.floating):
+            # non-float leaves ride raw: bits exactly preserved
+            np.testing.assert_array_equal(flat_out[k], v)
+
+
+def test_float_leaves_respect_error_bound():
+    tree = _mixed_tree(seed=5)
+    eb_rel = 1e-4
+    ct = compress_pytree(tree, eb_rel=eb_rel)
+    out = decompress_pytree(ct)
+    for k in ("w", "bias"):
+        vr = tree[k].max() - tree[k].min()
+        assert np.abs(out[k] - tree[k]).max() <= eb_rel * vr * 1.05, k
+    vr = tree["conv"].max() - tree["conv"].min()
+    assert np.abs(out["conv"] - tree["conv"]).max() <= eb_rel * vr * 1.05
+    vr = tree["nested"]["emb"].max() - tree["nested"]["emb"].min()
+    assert np.abs(out["nested"]["emb"] - tree["nested"]["emb"]).max() <= eb_rel * vr * 1.05
+    # 0-d float is below the size floor -> raw, exactly preserved
+    np.testing.assert_array_equal(out["lr"], tree["lr"])
+
+
+def test_predicate_skipped_fields_stay_exact():
+    tree = _mixed_tree(seed=9)
+    skip = {"w", "nested/emb"}
+    ct = compress_pytree(tree, eb_rel=1e-2, predicate=lambda name, arr: name not in skip)
+    assert ct.fields["w"].codec == "raw"
+    assert ct.fields["nested/emb"].codec == "raw"
+    out = decompress_pytree(ct)
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    np.testing.assert_array_equal(out["nested"]["emb"], tree["nested"]["emb"])
+    assert out["w"].dtype == tree["w"].dtype
+    # non-skipped float leaves still compressed
+    assert ct.fields["conv"].codec in ("sz", "zfp", "raw")
+    assert ct.ratio > 1.0
+
+
+def test_empty_and_list_pytrees():
+    ct = compress_pytree({"a": []})
+    out = decompress_pytree(ct)
+    assert out == {"a": []}
+    tree = [np.arange(8, dtype=np.float32), np.float64(2.0).reshape(())]
+    out = decompress_pytree(compress_pytree(tree))
+    assert out[0].shape == (8,)
+    np.testing.assert_allclose(out[0], tree[0])

@@ -1,0 +1,104 @@
+"""Batched multi-field selection engine: select_many vs per-field select."""
+
+import numpy as np
+import pytest
+
+from repro.core import decompress, encode_with_selection, select, select_many
+from repro.core.api import compress_pytree, decompress_pytree
+
+
+def _field_suite(n_fields=36, seed=0):
+    """A >=32-field 'checkpoint' mixing shapes, dims, and characteristics so
+    both codecs (and the raw fallback) appear among the decisions."""
+    rng = np.random.default_rng(seed)
+    fields = {}
+    for i in range(n_fields):
+        k = i % 6
+        n = 96 + 16 * (i % 3)
+        xx, yy = np.meshgrid(np.linspace(0, 6, n), np.linspace(0, 6, n))
+        if k == 0:  # smooth — SZ territory
+            f = np.sin(xx * (1 + i / 10)) * np.cos(yy) + 1e-3 * rng.standard_normal((n, n))
+        elif k == 1:  # rough
+            f = rng.standard_normal((n, n))
+        elif k == 2:  # high-frequency smooth — ZFP territory at tight eb
+            f = np.sin(20 * xx) * np.cos(20 * yy)
+        elif k == 3:  # random walk
+            f = np.cumsum(rng.standard_normal((n, n)), axis=0)
+        elif k == 4:  # 3-D field
+            z = np.linspace(0, 4, 16)
+            f = np.sin(xx[None, :64, :64] + z[:, None, None]) + 0.01 * rng.standard_normal((16, 64, 64))
+        else:  # 1-D field
+            f = np.cumsum(rng.standard_normal(4096))
+        fields[f"f{i:02d}"] = f.astype(np.float32)
+    return fields
+
+
+def test_select_many_matches_per_field_select():
+    """Acceptance: identical codec decision on every field of a >=32-field
+    pytree, plus near-identical estimates."""
+    fields = _field_suite()
+    assert len(fields) >= 32
+    arrs = list(fields.values())
+    many = select_many(arrs, eb_rel=1e-4)
+    codecs = set()
+    for name, arr, m in zip(fields, arrs, many):
+        s = select(arr, eb_rel=1e-4)
+        assert m.codec == s.codec, (name, m.codec, s.codec, m.br_sz, s.br_sz, m.br_zfp, s.br_zfp)
+        assert m.eb_abs == pytest.approx(s.eb_abs, rel=1e-6)
+        assert m.br_sz == pytest.approx(s.br_sz, rel=2e-3, abs=1e-3)
+        assert m.br_zfp == pytest.approx(s.br_zfp, rel=2e-3, abs=1e-3)
+        assert m.psnr_target == pytest.approx(s.psnr_target, rel=2e-3)
+        codecs.add(m.codec)
+    assert "sz" in codecs and "zfp" in codecs  # the suite exercises both
+
+
+def test_select_many_degenerate_fields():
+    """Tiny / constant / 0-d fields short-circuit to raw, same as select."""
+    arrs = [
+        np.arange(10, dtype=np.float32),              # too small
+        np.full((64, 64), 3.0, dtype=np.float32),     # zero value range
+        np.float32(1.5).reshape(()),                  # 0-d
+        np.sin(np.linspace(0, 6, 4096)).astype(np.float32).reshape(64, 64),
+    ]
+    many = select_many(arrs, eb_rel=1e-3)
+    assert [m.codec for m in many[:3]] == ["raw", "raw", "raw"]
+    assert many[3].codec == select(arrs[3], eb_rel=1e-3).codec
+
+
+def test_select_many_encode_roundtrip_bounded():
+    """encode_with_selection honors the bound for batched decisions."""
+    fields = _field_suite(n_fields=8, seed=3)
+    arrs = list(fields.values())
+    many = select_many(arrs, eb_rel=1e-3)
+    for arr, m in zip(arrs, many):
+        cf = encode_with_selection(arr, m)
+        rec = decompress(cf).reshape(arr.shape)
+        vr = arr.max() - arr.min()
+        tol = 1e-3 * vr + 4 * np.spacing(np.abs(arr).max() + 1e-30)
+        assert np.abs(arr - rec).max() <= tol
+
+
+def test_compress_pytree_uses_batched_path_same_result():
+    """compress_pytree (batched + threaded) decisions == per-field select."""
+    fields = _field_suite(n_fields=12, seed=7)
+    ct = compress_pytree(fields, eb_rel=1e-4)
+    for name, arr in fields.items():
+        s = select(arr, eb_rel=1e-4)
+        cf = ct.fields[name]
+        # encode_with_selection may downgrade to raw if the stream beat raw
+        assert cf.codec in (s.codec, "raw")
+        if cf.selection is not None and cf.codec != "raw":
+            assert cf.selection.codec == s.codec
+    out = decompress_pytree(ct)
+    for name, arr in fields.items():
+        vr = arr.max() - arr.min()
+        assert np.abs(out[name] - arr).max() <= 1e-4 * vr * 1.05
+
+
+def test_compress_pytree_serial_matches_threaded():
+    fields = _field_suite(n_fields=6, seed=11)
+    ct_threaded = compress_pytree(fields, eb_rel=1e-3, workers=4)
+    ct_serial = compress_pytree(fields, eb_rel=1e-3, workers=0)
+    for name in fields:
+        assert ct_threaded.fields[name].codec == ct_serial.fields[name].codec
+        assert ct_threaded.fields[name].data == ct_serial.fields[name].data
