@@ -67,6 +67,13 @@ def nyx_suite(n_fields: int = 6, size=(48, 48, 48)) -> dict[str, np.ndarray]:
 SUITES = {"ATM": atm_suite, "Hurricane": hurricane_suite, "NYX": nyx_suite}
 
 
+def psnr(a, b) -> float:
+    """Value-range PSNR (the paper's metric): 10 log10(VR^2 / MSE)."""
+    vr = float(np.max(a) - np.min(a))
+    mse = float(np.mean((np.asarray(a, np.float64) - np.asarray(b, np.float64)) ** 2))
+    return -10.0 * np.log10(max(mse, 1e-300)) + 20.0 * np.log10(max(vr, 1e-30))
+
+
 def timer(fn, *args, repeat: int = 1, **kw):
     t0 = time.perf_counter()
     for _ in range(repeat):

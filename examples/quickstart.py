@@ -2,7 +2,9 @@
 
 Runs Algorithm 1 (online rate-distortion-optimal selection between SZ and
 ZFP) on a few fields with different characteristics, prints the estimated
-vs. actual bit-rates, the selection bits, and verifies the error bound.
+vs. actual bit-rates, the selection bits, and verifies the error bound —
+then flips the contract around with the quality-target controller
+(DESIGN.md §7): ask for a PSNR, ask for a ratio, and check what lands.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,6 +12,7 @@ vs. actual bit-rates, the selection bits, and verifies the error bound.
 import numpy as np
 
 from repro.core import (
+    compress,
     select,
     select_and_compress,
     decompress,
@@ -29,6 +32,12 @@ def make_fields(n=256):
     }
 
 
+def psnr(a, b):
+    vr = float(a.max() - a.min())
+    mse = float(np.mean((a.astype(np.float64) - b.astype(np.float64)) ** 2))
+    return -10.0 * np.log10(max(mse, 1e-300)) + 20.0 * np.log10(max(vr, 1e-30))
+
+
 def main():
     eb_rel = 1e-3
     print(f"value-range-relative error bound: {eb_rel:g}\n")
@@ -46,6 +55,20 @@ def main():
         print(f"  actual bit-rate     SZ {a_sz:6.2f} | ZFP {a_zfp:6.2f}")
         print(f"  selection bit s_i = {cf.codec!r}; CR = {compression_ratio(cf):.2f}x")
         print(f"  max |err| / eb = {err / eb:.3f}  (bounded: {err <= eb * 1.001})\n")
+
+    # quality targets (DESIGN.md §7): name the quality, not the bound
+    print("fixed-PSNR: 'give me 60 dB'")
+    for name, field in make_fields().items():
+        cf = compress(field, "fixed_psnr", target_psnr=60.0)
+        rec = decompress(cf)
+        print(f"  {name}: codec={cf.codec!r} achieved {psnr(field, rec):.2f} dB "
+              f"at CR {compression_ratio(cf):.2f}x")
+    print("fixed-ratio: 'give me 8x'")
+    for name, field in make_fields().items():
+        cf = compress(field, "fixed_ratio", target_ratio=8.0)
+        rec = decompress(cf)
+        print(f"  {name}: codec={cf.codec!r} achieved CR {compression_ratio(cf):.2f}x "
+              f"at {psnr(field, rec):.2f} dB")
 
 
 if __name__ == "__main__":

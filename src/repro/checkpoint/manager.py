@@ -22,6 +22,14 @@ of field j and with the sequential writer draining results in order.
 Weights default to lossy (value-range-relative eb, Algorithm 1 per tensor);
 optimizer state defaults to raw (Adam moments are cheap to compress but
 sensitive near zero) — both policies are per-call overridable.
+
+Quality targets (DESIGN.md §7): `CheckpointConfig.mode` switches the lossy
+policy from the bound-centric default (``fixed_accuracy`` + `eb_rel`) to
+``fixed_psnr`` / ``fixed_ratio``, where the quality-target controller
+solves each tensor's error bound from `target_psnr` (dB) or `target_ratio`
+(x vs 32-bit raw) — e.g. "every checkpoint is 8x smaller" as a storage
+contract. The manifest records the mode and target next to the per-field
+bounds, so restore-side tooling can audit what was promised.
 """
 
 from __future__ import annotations
@@ -40,6 +48,7 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.core import controller
 from repro.core import selector as sel
 
 
@@ -51,6 +60,11 @@ class CheckpointConfig:
     compress: bool = True
     r_sp: float = 0.05
     workers: int = 4  # thread-pool width for per-field byte encoding (0 = serial)
+    # quality-target mode (DESIGN.md §7): "fixed_accuracy" uses eb_rel;
+    # "fixed_psnr" / "fixed_ratio" solve per-tensor bounds from the target
+    mode: str = "fixed_accuracy"
+    target_psnr: float | None = None
+    target_ratio: float | None = None
 
 
 def _leaf_items(tree: Any) -> list[tuple[str, np.ndarray]]:
@@ -95,11 +109,18 @@ class CheckpointManager:
             and arr.size >= 64
         ]
         # Steps 1-3 for every lossy field in ONE batched estimator launch
-        # (select_many casts to f32 one field at a time and keeps only the
-        # sampled blocks, so no full-tree f32 copy is ever materialized)
-        sels = sel.select_many(
-            [items[i][1] for i in lossy_idx], eb_rel=cfg.eb_rel, r_sp=cfg.r_sp
-        )
+        # per round (the solvers cast to f32 one field at a time and keep
+        # only the sampled blocks, so no full-tree f32 copy materializes)
+        lossy_fields = [items[i][1] for i in lossy_idx]
+        if cfg.mode == "fixed_accuracy":
+            sels = sel.select_many(lossy_fields, eb_rel=cfg.eb_rel, r_sp=cfg.r_sp)
+        else:
+            sols = controller.solve_many(
+                lossy_fields, cfg.mode,
+                target_psnr=cfg.target_psnr, target_ratio=cfg.target_ratio,
+                r_sp=cfg.r_sp,
+            )
+            sels = [s.selection for s in sols]
         sel_of = dict(zip(lossy_idx, sels))
 
         def _encode(i: int) -> tuple[bytes, str, float]:
@@ -145,6 +166,12 @@ class CheckpointManager:
                 pool.shutdown()
         manifest = dict(
             step=step,
+            mode=cfg.mode,
+            target=(
+                cfg.target_psnr if cfg.mode == "fixed_psnr"
+                else cfg.target_ratio if cfg.mode == "fixed_ratio"
+                else cfg.eb_rel
+            ),
             fields=fields,
             total_bytes=off,
             raw_bytes=int(sum(int(np.prod(f["shape"] or [1])) * np.dtype(f["dtype"]).itemsize for f in fields)),

@@ -5,12 +5,14 @@ error-bounded lossy compression, plus the estimators that make it cheap."""
 from .api import (
     CompressedField,
     CompressedTree,
+    compress,
     compress_pytree,
     compression_ratio,
     decompress,
     decompress_pytree,
     select_and_compress,
 )
+from .controller import TargetSolution, estimate_curves, solve, solve_many
 from .selector import Selection, encode_with_selection, select, select_many
 from .sz import SZStats, sz_compress, sz_decompress, sz_stats
 from .zfp import ZFPStats, zfp_compress, zfp_decompress, zfp_stats
@@ -20,15 +22,20 @@ __all__ = [
     "CompressedTree",
     "Selection",
     "SZStats",
+    "TargetSolution",
     "ZFPStats",
+    "compress",
     "compress_pytree",
     "compression_ratio",
     "decompress",
     "decompress_pytree",
     "encode_with_selection",
+    "estimate_curves",
     "select",
     "select_and_compress",
     "select_many",
+    "solve",
+    "solve_many",
     "sz_compress",
     "sz_decompress",
     "sz_stats",

@@ -1,9 +1,20 @@
-"""Public compression API: fields and pytrees (DESIGN.md §2).
+"""Public compression API: fields and pytrees (DESIGN.md §2, §7).
 
 A "field" (paper's unit of selection — one simulation variable) maps to one
-named tensor. `compress_pytree` runs Algorithm 1 per leaf and returns the
-compressed fields + the selection-bit stream, exactly the paper's
-{C_i, s_i} output.
+named tensor. `compress` / `compress_pytree` accept three quality modes:
+
+* ``fixed_accuracy`` (default) — the paper's bound-centric contract: you
+  give a pointwise error bound (`eb_abs`, or `eb_rel` relative to each
+  field's value range) and Algorithm 1 picks the cheaper codec at that
+  bound (DESIGN.md §1).
+* ``fixed_psnr`` — you give `target_psnr` in dB and the quality-target
+  controller (DESIGN.md §7) solves for the per-field bound that lands on
+  it.
+* ``fixed_ratio`` — you give `target_ratio` (x, vs 32-bit raw) and the
+  controller solves for the bound whose estimated rate meets the budget.
+
+`compress_pytree` runs the chosen mode per leaf and returns the compressed
+fields + the selection-bit stream, exactly the paper's {C_i, s_i} output.
 """
 
 from __future__ import annotations
@@ -16,8 +27,10 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from . import controller as _controller
 from .selector import (
     CompressedField,
+    Selection,
     compression_ratio,
     decompress,
     encode_with_selection,
@@ -56,6 +69,73 @@ def _default_workers() -> int:
     return max(1, min(8, (os.cpu_count() or 2) - 1))
 
 
+def _mode_selections(
+    arrs: list[np.ndarray],
+    mode: str,
+    eb_abs: float | None,
+    eb_rel: float | None,
+    target_psnr: float | None,
+    target_ratio: float | None,
+    r_sp: float,
+) -> list[Selection]:
+    """Route one batch of fields through the mode's solver. fixed_accuracy
+    keeps the Algorithm 1 fast path (`select_many`); the target modes run
+    the controller (DESIGN.md §7) and unwrap its `TargetSolution`s."""
+    if mode == "fixed_accuracy":
+        return select_many(arrs, eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp)
+    sols = _controller.solve_many(
+        arrs, mode, target_psnr=target_psnr, target_ratio=target_ratio, r_sp=r_sp
+    )
+    return [s.selection for s in sols]
+
+
+def compress(
+    x: np.ndarray,
+    mode: str = "fixed_accuracy",
+    *,
+    eb_rel: float = 1e-4,
+    eb_abs: float | None = None,
+    target_psnr: float | None = None,
+    target_ratio: float | None = None,
+    r_sp: float = 0.05,
+) -> CompressedField:
+    """Compress one field under a quality target; returns a `CompressedField`.
+
+    Args:
+      x: the field (any shape; evaluated in float32, the codecs' working
+        dtype — the original dtype is recorded and restored by
+        `decompress`). Ranks above 3 are folded to 3-D.
+      mode: ``fixed_accuracy`` | ``fixed_psnr`` | ``fixed_ratio`` (above).
+      eb_rel / eb_abs: fixed_accuracy only. `eb_abs` is a pointwise
+        absolute bound, guaranteed on every value of the reconstruction;
+        `eb_rel` scales it by the field's value range (max - min). `eb_abs`
+        wins when both are given.
+      target_psnr: fixed_psnr only — target PSNR in dB, defined against
+        the field's value range (10 log10(VR^2 / MSE)). The achieved PSNR
+        lands on the target (not merely above it); the reconstruction
+        error stays pointwise-bounded by the bound the controller solved.
+      target_ratio: fixed_ratio only — target compression ratio vs 32-bit
+        raw. Met on the estimated rate within ~10%; there is no a-priori
+        error bound in this mode (the controller reports the bound it
+        chose in `.selection.eb_abs`).
+      r_sp: block sampling rate for the estimators (paper default 5%).
+
+    Raw fallback: fields that are too small (< 64 values or a dim < 4),
+    constant, or NaN/inf-poisoned store verbatim with codec ``raw``; so
+    does any field whose estimated rate exceeds 32 bits/value at the
+    requested quality, and any stream that fails to beat raw after
+    encoding. Raw streams reproduce the input bit-exactly.
+    """
+    x = np.asarray(x)
+    if mode == "fixed_accuracy":
+        return select_and_compress(x, eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp)
+    sol = _controller.solve(
+        x.astype(np.float32), mode,
+        target_psnr=target_psnr, target_ratio=target_ratio, r_sp=r_sp,
+    )
+    return encode_with_selection(x, sol.selection)
+
+
 def compress_pytree(
     tree: Any,
     eb_rel: float = 1e-4,
@@ -63,13 +143,36 @@ def compress_pytree(
     r_sp: float = 0.05,
     predicate: Callable[[str, np.ndarray], bool] | None = None,
     workers: int | None = None,
+    mode: str = "fixed_accuracy",
+    target_psnr: float | None = None,
+    target_ratio: float | None = None,
 ) -> CompressedTree:
-    """Run Algorithm 1 on every float leaf of `tree`.
+    """Compress every float leaf of `tree` under one quality mode.
 
-    Selection is batched: sampled blocks of all eligible leaves go through
-    ONE jitted estimator call (`select_many`), then the per-field SZ/ZFP
-    byte encoders run on a thread pool (`workers`; 0 forces serial) — the
-    paper's per-field independence makes both trivially parallel.
+    Args:
+      tree: any pytree; leaf names come from the tree path.
+      eb_rel / eb_abs: the fixed_accuracy bound (see `compress`). Ignored
+        by the target modes.
+      r_sp: estimator block sampling rate.
+      predicate: `predicate(name, array) -> bool`; leaves it rejects ride
+        through raw (exact bytes, original dtype). Non-float leaves always
+        ride raw.
+      workers: thread-pool width for the per-field byte encoders (0 forces
+        serial; default: cpu-count-bounded). Selection/solving is batched
+        regardless: sampled blocks of all eligible leaves go through ONE
+        jitted estimator launch per round (`select_many`, or the
+        controller sweep of DESIGN.md §7), then encoding overlaps on the
+        pool — the paper's per-field independence makes both trivially
+        parallel.
+      mode / target_psnr / target_ratio: quality target per leaf, exactly
+        as in `compress`. The per-field targets are independent: in
+        fixed_psnr every leaf lands on the target dB against its own value
+        range; in fixed_ratio every compressible leaf meets the ratio, so
+        the tree-level ratio can exceed the target when raw-fallback
+        leaves are rare and undershoot it when they dominate.
+
+    Returns a `CompressedTree`: per-leaf `CompressedField`s (the {C_i}
+    streams) plus `.selection_bits` (the {s_i}).
     """
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     named: list[tuple[str, np.ndarray]] = []
@@ -83,10 +186,10 @@ def compress_pytree(
         if not np.issubdtype(arr.dtype, np.floating):
             continue
         compress_idx.append(len(named) - 1)
-    # original arrays go in; select_many casts to f32 one field at a time
-    sels = select_many(
+    # original arrays go in; the solvers cast to f32 one field at a time
+    sels = _mode_selections(
         [named[i][1] for i in compress_idx],
-        eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp,
+        mode, eb_abs, eb_rel, target_psnr, target_ratio, r_sp,
     )
     sel_of = dict(zip(compress_idx, sels))
 
@@ -109,6 +212,8 @@ def compress_pytree(
 
 
 def decompress_pytree(ct: CompressedTree) -> Any:
+    """Invert `compress_pytree`: every lossy leaf reconstructs within its
+    solved bound, every raw leaf bit-exactly (original dtype preserved)."""
     leaves = []
     for name, cf in ct.fields.items():
         if cf.codec == "raw" and cf.selection is None:
@@ -122,6 +227,7 @@ def decompress_pytree(ct: CompressedTree) -> Any:
 __all__ = [
     "CompressedField",
     "CompressedTree",
+    "compress",
     "compress_pytree",
     "decompress_pytree",
     "compression_ratio",

@@ -1,0 +1,659 @@
+"""Quality-target controller: fixed-PSNR and fixed-ratio modes (DESIGN.md §7).
+
+The selection engine (DESIGN.md §1) answers "which codec is cheapest at
+this error bound" — but callers usually hold a *quality* target ("give me
+60 dB", "give me 8x"), not an error bound. This module inverts the
+estimator math of DESIGN.md §4–§5 to solve for the per-field error bound
+that meets the target, then hands the resulting `Selection` to the
+ordinary encoders. There are NO trial compressions anywhere in the search
+loop — the objective is always the *estimated* (or sample-measured)
+rate-distortion curve:
+
+* ``fixed_psnr`` — iso-distortion at the target. The closed-form
+  inversion of Eq. (10) (`estimator.sz_delta_for_psnr`, snapped to
+  `estimator.PSNR_MATCH_QUANTUM`) seeds SZ's bin size; a few secant steps
+  against the *measured* quantization error of the sampled blocks absorb
+  what the uniform-noise model misses (fields with constant runs land up
+  to ~3 dB hot otherwise). ZFP's bound walks its estimated-PSNR staircase
+  the same way. The codec with the smaller estimated rate *within the
+  PSNR tolerance band* wins — Algorithm 1's iso-PSNR/min-rate rule,
+  anchored at the caller's target instead of ZFP's achieved-at-eb PSNR.
+* ``fixed_ratio`` — iso-rate. Both codecs are driven to the byte budget
+  by a high-rate-model seed (rate moves ~1 bit/value per octave of bound)
+  plus clamped secant steps, and the codec with the higher estimated PSNR
+  at the budget wins — the rate-distortion dual of Algorithm 1.
+* ``fixed_accuracy`` — the paper's bound-centric mode, delegated to
+  `select_many` so the three modes share one call signature.
+
+All candidate bounds for all fields are evaluated by ONE jitted launch
+per round: the packed block batches of `select_many` gain a vmapped
+candidate axis (`_sweep_jitted`), so each round is a `(1, fields)`-slot
+program over blocks gathered once per field. fixed_psnr rounds use a
+*light* sweep that returns only PSNR outputs, letting XLA dead-code-
+eliminate the exact-coder bit count and the SZ entropy sort — the two
+dominant costs — so the whole solve stays well under the encoders' time.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache as _lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import estimator as est
+from .selector import (
+    MAX_BATCH_FIELDS,
+    Selection,
+    _degenerate_selection,
+    _fold_ndim,
+    _max_batch_blocks,
+    _next_pow2,
+    select_many,
+)
+
+#: the codecs' working dtype is float32, so ratio targets are defined
+#: against 32 bits/value (matching `compression_ratio`)
+RAW_BITS = 32.0
+
+#: fixed_psnr: ZFP is eligible only when its estimated PSNR lands within
+#: this many dB above the target — the bit-plane staircase otherwise
+#: overshoots by up to ~6 dB/plane, and "hit the target" beats "free extra
+#: quality the caller did not ask to pay rate for". SZ's measured-error
+#: refinement lands on the target by construction, so SZ always competes.
+PSNR_TOL_DB = 0.5
+#: a probe counts as meeting a PSNR target when it clears it minus this
+#: slack (absorbs sampling noise without chasing ulps)
+PSNR_SLACK_DB = 0.25
+
+#: fixed_ratio: a codec is eligible when its estimated rate is within this
+#: relative window of the budget (the solve keeps rate <= budget; this
+#: rejects staircase undershoot past the ratio tolerance).
+RATIO_TOL = 0.10
+#: a rate probe counts as meeting the budget up to this relative overage —
+#: rejecting a probe 0.2% over the budget in favor of one 20% under it
+#: would miss the ratio window from the other side
+RATE_SLACK = 0.02
+
+#: the §4 SZ estimate carries the paper's flat +0.5 bits/value Huffman
+#: cushion — a selection-side worst case, not what the byte coder pays. A
+#: rate *target* cannot absorb a ~0.4-bit bias (it lands straight in the
+#: achieved ratio), so the controller retargets with an empirical overhead
+#: curve: near zero above ~1 bit/value of residual entropy, rising toward
+#: the 1-bit/symbol Huffman floor as the PDF peaks (DESIGN.md §7).
+SZ_HUFF_FLOOR = 0.08
+SZ_HUFF_PEAK_SLOPE = 0.85
+
+#: high-rate-model slopes used to seed and clamp the secant steps: one
+#: octave of bound costs ~1 bit/value (Eq. (9) at high rate; exactly one
+#: bit-plane for ZFP) == ~6.02 dB (Eq. (11))
+DB_PER_OCTAVE = 20.0 * math.log10(2.0)
+#: secant-slope clamps, [steepest, shallowest] (negative: metrics are
+#: nonincreasing in the bound)
+PSNR_SLOPE_CLAMP = (-30.0, -1.0)
+RATE_SLOPE_CLAMP = (-4.0, -0.25)
+
+#: refinement evals after the seed eval, by mode (fixed_psnr rounds are
+#: light-sweep; fixed_ratio rounds are full; both end in one full eval)
+DEFAULT_ROUNDS = {"fixed_psnr": 3, "fixed_ratio": 3}
+
+
+@dataclass
+class TargetSolution:
+    """One field's solved target: the `Selection` to encode with, plus the
+    estimates the solve ended on (what the controller *believes* it hit)."""
+
+    selection: Selection
+    mode: str
+    target: float        # dB (fixed_psnr), ratio (fixed_ratio), eb (fixed_accuracy)
+    est_psnr: float      # estimated/measured PSNR of the chosen codec
+    est_bitrate: float   # estimated bits/value of the chosen codec
+    on_target: bool      # False when the solve could only get best-effort close
+
+    @property
+    def est_ratio(self) -> float:
+        return RAW_BITS / max(self.est_bitrate, 1e-6)
+
+
+def _sz_coder_rate(br_est: np.ndarray) -> np.ndarray:
+    """Map the §4 SZ estimate (entropy + flat +0.5 cushion) to the rate the
+    byte coder actually pays: entropy + an overhead that decays to
+    `SZ_HUFF_FLOOR` for rich residual PDFs and grows to the 1-bit/symbol
+    Huffman floor as the PDF peaks. Monotone in `br_est` (slope >= 0.15),
+    so the root-finding invariant survives the correction."""
+    ent = np.maximum(np.asarray(br_est, np.float64) - est.SZ_BITRATE_OFFSET, 0.0)
+    return ent + np.maximum(1.0 - SZ_HUFF_PEAK_SLOPE * ent, SZ_HUFF_FLOOR)
+
+
+# ---------------------------------------------------------------------------
+# The sweep: batched estimators + a vmapped candidate axis
+# ---------------------------------------------------------------------------
+
+
+def _sz_measured_psnr(nohalo, seg, bounds, delta_f, vr_f):
+    """PSNR of the actual quantization error `x - delta*round(x/delta)` on
+    the sampled blocks — what the SZ codec really achieves, including the
+    sub-uniform error of fields with constant runs (values sitting exactly
+    on bin centers), which the Eq. (11) model misses by up to ~3 dB."""
+    nd = nohalo.ndim - 1
+    n_s = nohalo.shape[0]
+    d = delta_f[seg].reshape((-1,) + (1,) * nd)
+    err = nohalo - d * jnp.round(nohalo / d)
+    vr64 = jnp.maximum(vr_f, 1e-30)
+    err2_blk = jnp.sum(jnp.square(err).reshape(n_s, -1), axis=1) / jnp.square(
+        vr64[seg]
+    )
+    err2_f = est.field_sums(err2_blk, bounds)
+    n_f = (bounds[1:] - bounds[:-1]).astype(jnp.float32) * float(4**nd)
+    mse_over_vr2 = err2_f / jnp.maximum(n_f, 1.0)
+    return -10.0 * jnp.log10(jnp.maximum(mse_over_vr2, 1e-60))
+
+
+@_lru_cache(maxsize=64)
+def _sweep_jitted(
+    nd: int, n_blocks: int, n_fields: int, n_cand: int, transform: str, kind: str
+):
+    """Jitted (candidates x fields) estimator sweep over one packed batch.
+
+    vmap adds the candidate axis to the per-field bound arrays only — the
+    block batch is closed over, so XLA hoists the bound-independent work
+    (gather view, exponents, BOT coefficients) out of the candidate loop
+    instead of materializing `n_cand` copies of the blocks. kind='light'
+    returns only the PSNR outputs, and XLA dead-code-eliminates the
+    exact-coder bit count and the SZ entropy sort — the expensive
+    stages — making fixed_psnr refinement rounds cheap; kind='rate' swaps
+    the 31-plane exact ZFP coder for the one-pass closed-form block_bits
+    model (fixed_ratio refinement probes); kind='full' is decision-grade.
+    Cached per (ndim, padded blocks, padded fields, candidates, kind),
+    same pow2 bucketing as `select_many` (DESIGN.md §1).
+    """
+
+    def eval_one(eb_f, delta_f, halo, seg, bounds, vr_f, size_f):
+        # ZFP at eb_f and SZ at delta_f are independent estimators on the
+        # same blocks; one slot evaluates both (DESIGN.md §4–§5)
+        nohalo = halo[(slice(None),) + (slice(1, None),) * nd]
+        zfp_mode = "model" if kind == "rate" else "exact"
+        e_zfp = est.estimate_zfp_many(
+            nohalo, seg, bounds, eb_f, vr_f, transform, mode=zfp_mode
+        )
+        ps_meas = _sz_measured_psnr(nohalo, seg, bounds, delta_f, vr_f)
+        if kind == "light":
+            return e_zfp.psnr, ps_meas
+        e_sz = est.estimate_sz_many(halo, seg, bounds, delta_f, vr_f, size_f)
+        return e_sz.bitrate, e_sz.psnr, e_zfp.bitrate, e_zfp.psnr, ps_meas
+
+    def f(halo, seg, bounds, eb_cf, delta_cf, vr_f, size_f):
+        return jax.vmap(eval_one, in_axes=(0, 0, None, None, None, None, None))(
+            eb_cf, delta_cf, halo, seg, bounds, vr_f, size_f
+        )
+
+    return jax.jit(f)
+
+
+@dataclass
+class _Member:
+    idx: int             # position in the caller's field list
+    blocks: np.ndarray   # halo blocks, (n_blocks, 5, ..)
+    vr: float
+    size: int
+
+
+class _Sweep:
+    """One packed batch (same layout as `selector._select_batch`) exposing
+    `full` / `light` candidate sweeps. Inputs are (n_cand, n_real_fields)
+    per-field bounds (eb for ZFP, bin size delta for SZ); outputs are
+    (n_cand, n_real_fields) arrays."""
+
+    def __init__(self, nd: int, members: list[_Member], transform: str):
+        self.nd, self.transform = nd, transform
+        halo = np.concatenate([m.blocks for m in members], axis=0)
+        seg = np.concatenate(
+            [np.full(len(m.blocks), f, dtype=np.int32) for f, m in enumerate(members)]
+        )
+        n_real_blocks, self.n_real_fields = len(seg), len(members)
+        self.n_blocks = _next_pow2(n_real_blocks)
+        self.n_fields = _next_pow2(self.n_real_fields + 1)
+        pad = self.n_blocks - n_real_blocks
+        if pad:
+            halo = np.concatenate([halo, np.zeros((pad,) + halo.shape[1:], np.float32)])
+            seg = np.concatenate([seg, np.full(pad, self.n_fields - 1, np.int32)])
+        bounds = np.zeros(self.n_fields + 1, np.int32)
+        bounds[1 : self.n_real_fields + 1] = np.cumsum([len(m.blocks) for m in members])
+        bounds[self.n_real_fields + 1 :] = n_real_blocks
+        bounds[self.n_fields] = self.n_blocks
+        vr_p = np.ones(self.n_fields, np.float32)
+        vr_p[: self.n_real_fields] = [m.vr for m in members]
+        size_p = np.ones(self.n_fields, np.float32)
+        size_p[: self.n_real_fields] = [m.size for m in members]
+        self._args = (
+            jnp.asarray(halo), jnp.asarray(seg), jnp.asarray(bounds),
+            jnp.asarray(vr_p), jnp.asarray(size_p),
+        )
+
+    def _run(self, eb_c, delta_c, kind: str):
+        n_cand = eb_c.shape[0]
+        ebp = np.ones((n_cand, self.n_fields), np.float32)
+        ebp[:, : self.n_real_fields] = np.maximum(eb_c, 1e-38)
+        dp = np.ones((n_cand, self.n_fields), np.float32)
+        dp[:, : self.n_real_fields] = np.maximum(delta_c, 1e-38)
+        halo, seg, bounds, vr, size = self._args
+        fn = _sweep_jitted(
+            self.nd, self.n_blocks, self.n_fields, n_cand, self.transform, kind
+        )
+        out = fn(halo, seg, bounds, jnp.asarray(ebp), jnp.asarray(dp), vr, size)
+        return tuple(np.asarray(o)[:, : self.n_real_fields] for o in out)
+
+    def full(self, eb_c, delta_c):
+        """(br_sz, psnr_sz_model, br_zfp, psnr_zfp, psnr_sz_measured)."""
+        return self._run(eb_c, delta_c, "full")
+
+    def rate(self, eb_c, delta_c):
+        """Same 5-tuple with the one-pass block_bits ZFP coder model —
+        probe-grade rates for the fixed_ratio refinement rounds."""
+        return self._run(eb_c, delta_c, "rate")
+
+    def light(self, eb_c, delta_c):
+        """(psnr_zfp, psnr_sz_measured) only — coder bits / entropy DCE'd."""
+        return self._run(eb_c, delta_c, "light")
+
+
+# ---------------------------------------------------------------------------
+# Vectorized secant root-finding on a nonincreasing sampled curve
+# ---------------------------------------------------------------------------
+
+
+class _Secant:
+    """Per-field secant iteration for `g(x) = target` where g is
+    nonincreasing in x (= log2 bound) and only eval-able in batches.
+
+    Tracks the best *feasible* probe (g clears the target: `g >= target`
+    for PSNR, `g <= target` for rate — pass `ge=False`) closest to the
+    target, plus a bracket for safeguarding; steps are clamped to the
+    model slope range so a flat staircase section cannot fling the
+    iterate."""
+
+    def __init__(self, x0, g0, target, slope0, slope_clamp, ge: bool, x_lo, x_hi):
+        F = len(x0)
+        self.t, self.ge = np.asarray(target, np.float64), ge
+        self.slope0, self.clamp = slope0, slope_clamp
+        self.x_lo, self.x_hi = x_lo, x_hi
+        self.xp = np.full(F, np.nan)
+        self.gp = np.full(F, np.nan)
+        self.xc, self.gc = np.asarray(x0, np.float64), np.asarray(g0, np.float64)
+        # bracket: blo = largest x still clearing, bhi = smallest x missing
+        self.blo = np.full(F, -np.inf)
+        self.bhi = np.full(F, np.inf)
+        self.x_best = np.full(F, np.nan)
+        self.g_best = np.full(F, np.nan)
+        self._absorb(self.xc, self.gc)
+
+    def _clears(self, g):
+        if self.ge:
+            return g >= self.t - PSNR_SLACK_DB
+        return g <= self.t * (1.0 + RATE_SLACK)
+
+    def _absorb(self, x, g):
+        ok = self._clears(g)
+        # bracket sides follow g's direction, not feasibility: g is
+        # nonincreasing in x, so probes with g above the target sit below
+        # the root (-> blo) and probes below it sit above (-> bhi)
+        above = ok if self.ge else ~ok
+        self.blo = np.where(above, np.maximum(self.blo, x), self.blo)
+        self.bhi = np.where(~above, np.minimum(self.bhi, x), self.bhi)
+        # feasible-best: the clearing probe closest to the target
+        gap = np.abs(g - self.t)
+        better = ok & (np.isnan(self.g_best) | (gap < np.abs(self.g_best - self.t)))
+        self.x_best = np.where(better, x, self.x_best)
+        self.g_best = np.where(better, g, self.g_best)
+
+    def propose(self):
+        dx = self.xc - self.xp
+        dg = self.gc - self.gp
+        slope = np.where(np.abs(dx) > 1e-9, dg / np.maximum(np.abs(dx), 1e-9) * np.sign(dx), self.slope0)
+        slope = np.clip(np.nan_to_num(slope, nan=self.slope0), *self.clamp)
+        xn = self.xc + (self.t - self.gc) / slope
+        # safeguard: project into the bracket when the secant leaves it
+        have = np.isfinite(self.blo) & np.isfinite(self.bhi)
+        mid = 0.5 * (self.blo + self.bhi)
+        xn = np.where(have & ((xn <= self.blo) | (xn >= self.bhi)), mid, xn)
+        return np.clip(xn, self.x_lo, self.x_hi)
+
+    def step(self, xn, gn):
+        self.xp, self.gp = self.xc, self.gc
+        self.xc, self.gc = np.asarray(xn, np.float64), np.asarray(gn, np.float64)
+        self._absorb(self.xc, self.gc)
+
+    @property
+    def found(self):
+        return ~np.isnan(self.x_best)
+
+
+# ---------------------------------------------------------------------------
+# Mode solvers (vectorized across the fields of one batch)
+# ---------------------------------------------------------------------------
+
+
+#: refinement probes run on every k-th gathered block (the secant only
+#: needs the curve's trend; the final pricing eval uses the full sample)
+REFINE_STRIDE = 2
+
+
+def _solve_fixed_psnr(
+    sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target: float, rounds: int, r_sp: float
+) -> list[tuple[Selection, float, float, bool]]:
+    """Per field: (Selection, est_psnr, est_bitrate, on_target).
+
+    Seed: SZ bin size from the closed-form inversion of Eq. (10); ZFP
+    bound at delta*/2. Refine: `rounds` light-sweep secant steps drive
+    both codecs' *observed* curves (measured quantization error for SZ,
+    estimated truncation PSNR for ZFP) onto the target; one final full
+    eval prices the two solutions for the min-rate choice.
+    """
+    tq = round(target / est.PSNR_MATCH_QUANTUM) * est.PSNR_MATCH_QUANTUM
+    delta_star = np.asarray(
+        est.sz_delta_for_psnr(jnp.float32(target), jnp.asarray(vr, np.float32)),
+        np.float32,
+    )
+    lvr = np.log2(np.maximum(vr, 1e-30)).astype(np.float64)
+    ld0 = np.log2(np.maximum(delta_star, 1e-38)).astype(np.float64)
+    pz0, ps0 = refine.light(np.exp2(ld0 - 1.0)[None].astype(np.float32),
+                            np.exp2(ld0)[None].astype(np.float32))
+    s_sz = _Secant(ld0, ps0[0], tq, -DB_PER_OCTAVE, PSNR_SLOPE_CLAMP,
+                   ge=True, x_lo=lvr - 30.0, x_hi=lvr + 1.0)
+    s_z = _Secant(ld0 - 1.0, pz0[0], tq, -DB_PER_OCTAVE, PSNR_SLOPE_CLAMP,
+                  ge=True, x_lo=lvr - 30.0, x_hi=lvr + 1.0)
+    for _ in range(rounds):
+        xs, xz = s_sz.propose(), s_z.propose()
+        pz, ps = refine.light(np.exp2(xz)[None].astype(np.float32),
+                              np.exp2(xs)[None].astype(np.float32))
+        s_z.step(xz, pz[0])
+        s_sz.step(xs, ps[0])
+    # final bounds: feasible-best, falling back to the closed-form seed
+    # (model-exact) for SZ and the seed bound for ZFP
+    x_s = np.where(s_sz.found, s_sz.x_best, ld0)
+    x_z = np.where(s_z.found, s_z.x_best, ld0 - 1.0)
+    br_sz_raw, _, br_zfp, ps_zfp, ps_meas = sweep.full(
+        np.exp2(x_z)[None].astype(np.float32), np.exp2(x_s)[None].astype(np.float32)
+    )
+    br_s = _sz_coder_rate(br_sz_raw[0])
+    br_z, ps_z, ps_s = br_zfp[0], ps_zfp[0], ps_meas[0]
+    zfp_ok = s_z.found & (ps_z <= tq + PSNR_TOL_DB) & (ps_z >= tq - PSNR_SLACK_DB)
+    out = []
+    F = len(vr)
+    for f in range(F):
+        eb_s = float(np.exp2(x_s[f])) / 2.0
+        cands = [("sz", float(br_s[f]), float(ps_s[f]), eb_s)]
+        if zfp_ok[f]:
+            cands.append(("zfp", float(br_z[f]), float(ps_z[f]), float(np.exp2(x_z[f]))))
+        codec, br, ps, eb = min(cands, key=lambda c: c[1])
+        if br >= RAW_BITS:
+            # incompressible at this quality — raw is exact, PSNR = inf
+            codec, br, ps = "raw", RAW_BITS, math.inf
+        # raw is lossless (target exceeded by construction); a lossy codec
+        # is on-target only when it actually landed within the contract
+        on_target = codec == "raw" or abs(ps - tq) <= 2.0 * PSNR_TOL_DB
+        sel = Selection(
+            codec, eb, eb_s, float(br_s[f]), float(br_z[f]),
+            ps if codec != "raw" else tq, float(vr[f]), r_sp,
+        )
+        out.append((sel, ps, br, on_target))
+    return out
+
+
+def _solve_fixed_ratio(
+    sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target: float, rounds: int, r_sp: float
+) -> list[tuple[Selection, float, float, bool]]:
+    """Per field: (Selection, est_psnr, est_bitrate, on_target).
+
+    Both codecs are driven to `rate <= RAW_BITS/target` (maximum quality
+    inside the byte budget) from a mid-curve seed via the ~1 bit/octave
+    high-rate model plus clamped secant steps; the higher-PSNR codec at
+    the budget wins — iso-rate selection, the dual of Algorithm 1. SZ's
+    entropy curve is continuous in the bin size, so it can land inside
+    the ratio window even where ZFP's bit-plane staircase skips it.
+    """
+    br_t = RAW_BITS / float(target)
+    lvr = np.log2(np.maximum(vr, 1e-30)).astype(np.float64)
+    x0 = lvr - 8.0
+    b0 = np.exp2(x0)[None].astype(np.float32)
+    br_s0, _, br_z0, _, _ = refine.rate(b0, b0)
+    s_sz = _Secant(x0, _sz_coder_rate(br_s0[0]), br_t, -1.0, RATE_SLOPE_CLAMP,
+                   ge=False, x_lo=lvr - 26.0, x_hi=lvr)
+    s_z = _Secant(x0, br_z0[0], br_t, -1.0, RATE_SLOPE_CLAMP,
+                  ge=False, x_lo=lvr - 26.0, x_hi=lvr)
+    for _ in range(rounds):
+        xs, xz = s_sz.propose(), s_z.propose()
+        br_s, _, br_z, _, _ = refine.rate(np.exp2(xz)[None].astype(np.float32),
+                                          np.exp2(xs)[None].astype(np.float32))
+        s_sz.step(xs, _sz_coder_rate(br_s[0]))
+        s_z.step(xz, br_z[0])
+    # final bounds: feasible-best; an unreachable budget rails at the
+    # loosest bound evaluated (best effort, flagged off-target below).
+    # fmax, not maximum: with rounds=0 no secant step ran and xp is NaN
+    x_s = np.where(s_sz.found, s_sz.x_best, np.fmax(s_sz.xc, s_sz.xp))
+    x_z = np.where(s_z.found, s_z.x_best, np.fmax(s_z.xc, s_z.xp))
+
+    def _price(xs, xz):
+        br_sz_raw, _, br_zfp, ps_zfp, ps_meas = sweep.full(
+            np.exp2(xz)[None].astype(np.float32), np.exp2(xs)[None].astype(np.float32)
+        )
+        return _sz_coder_rate(br_sz_raw[0]), br_zfp[0], ps_zfp[0], ps_meas[0]
+
+    br_s, br_z, ps_z, ps_s = _price(x_s, x_z)
+    # polish: the strided refine probes can sit a few % off the
+    # full-sample curve; up to two corrective steps against the
+    # full-sample price recenter fields that landed outside the rate
+    # window (the first uses the ~1 bit/octave model slope, the second an
+    # empirical slope from the first correction)
+    lo_w, hi_w = br_t / (1.0 + RATIO_TOL), br_t * (1.0 + RATE_SLACK)
+    prev = None
+    for _ in range(2):
+        # no `found` gate: a field whose refine probes never cleared the
+        # budget (strided-sample bias, unreachable target) still gets
+        # walked toward it; the x-clip bounds genuinely unreachable ones
+        need_s = (br_s > hi_w) | (br_s < lo_w)
+        need_z = (br_z > hi_w) | (br_z < lo_w)
+        if not (need_s.any() or need_z.any()):
+            break
+        slope_s = np.full_like(br_s, -1.0)
+        slope_z = np.full_like(br_z, -1.0)
+        if prev is not None:
+            px_s, pbr_s, px_z, pbr_z = prev
+            ds, dz = x_s - px_s, x_z - px_z
+            slope_s = np.where(np.abs(ds) > 1e-9, (br_s - pbr_s) / np.where(np.abs(ds) > 1e-9, ds, 1.0), -1.0)
+            slope_z = np.where(np.abs(dz) > 1e-9, (br_z - pbr_z) / np.where(np.abs(dz) > 1e-9, dz, 1.0), -1.0)
+            slope_s = np.clip(slope_s, -4.0, -0.1)
+            slope_z = np.clip(slope_z, -4.0, -0.1)
+        prev = (x_s.copy(), br_s.copy(), x_z.copy(), br_z.copy())
+        x_s = np.clip(np.where(need_s, x_s + (br_t - br_s) / slope_s, x_s), lvr - 26.0, lvr)
+        x_z = np.clip(np.where(need_z, x_z + (br_t - br_z) / slope_z, x_z), lvr - 26.0, lvr)
+        br_s, br_z, ps_z, ps_s = _price(x_s, x_z)
+    out = []
+    for f in range(len(vr)):
+        cands = []
+        for name, br, ps, bound in (
+            ("sz", float(br_s[f]), float(ps_s[f]), float(np.exp2(x_s[f])) / 2.0),
+            ("zfp", float(br_z[f]), float(ps_z[f]), float(np.exp2(x_z[f]))),
+        ):
+            in_window = (br <= br_t * (1.0 + RATE_SLACK)) and (
+                br >= br_t / (1.0 + RATIO_TOL)
+            )
+            cands.append((name, br, ps, bound, in_window))
+        eligible = [c for c in cands if c[4]]
+        if eligible:
+            codec, br, ps, bound, _ = max(eligible, key=lambda c: c[2])
+            on_target = True
+        else:
+            # best effort: closest estimated rate to the budget
+            codec, br, ps, bound, _ = min(
+                cands, key=lambda c: abs(math.log(max(c[1], 1e-6) / br_t))
+            )
+            on_target = False
+        if br >= RAW_BITS:
+            codec, br, ps = "raw", RAW_BITS, math.inf
+            on_target = target <= 1.0 + 1e-9
+        eb_s = float(np.exp2(x_s[f])) / 2.0
+        sel = Selection(
+            codec, bound if codec == "zfp" else eb_s, eb_s,
+            float(br_s[f]), float(br_z[f]),
+            ps if codec != "raw" else 0.0, float(vr[f]), r_sp,
+        )
+        out.append((sel, ps, br, on_target))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def solve_many(
+    fields,
+    mode: str,
+    *,
+    target_psnr: float | None = None,
+    target_ratio: float | None = None,
+    eb_abs: float | None = None,
+    eb_rel: float | None = None,
+    r_sp: float = est.DEFAULT_SAMPLING_RATE,
+    transform: str = "zfp",
+    rounds: int | None = None,
+) -> list[TargetSolution]:
+    """Solve the quality target for MANY fields with batched launches.
+
+    mode='fixed_psnr'     — requires `target_psnr` (dB, relative to the
+                            field's value range, as everywhere else).
+    mode='fixed_ratio'    — requires `target_ratio` (x, vs 32-bit raw).
+    mode='fixed_accuracy' — requires `eb_abs` or `eb_rel`; delegates to
+                            `select_many` (the paper's bound-centric path).
+
+    Fields that cannot carry a target — too small, constant, NaN-poisoned —
+    fall back to raw exactly like `select_many` (`on_target=False` for
+    fixed_ratio, since raw pins their ratio to 1). Fields whose sample
+    would exceed a launch's block cap are strided down instead of being
+    kicked to a per-field path, so every field stays inside the batched
+    sweep. Returns one `TargetSolution` per input field, in order.
+    """
+    fields = list(fields)
+    if mode == "fixed_accuracy":
+        if eb_abs is None and eb_rel is None:
+            raise ValueError("fixed_accuracy needs eb_abs or eb_rel")
+        sels = select_many(fields, eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp, transform=transform)
+        # raw stores are lossless at exactly 32 b/v, whatever the estimates
+        # said — keep the telemetry consistent with the target modes
+        return [
+            TargetSolution(
+                s, mode, s.eb_abs,
+                math.inf if s.codec == "raw" else s.psnr_target,
+                RAW_BITS if s.codec == "raw" else min(s.br_sz, s.br_zfp),
+                True,
+            )
+            for s in sels
+        ]
+    if mode == "fixed_psnr":
+        if target_psnr is None:
+            raise ValueError("fixed_psnr needs target_psnr")
+        target = float(target_psnr)
+    elif mode == "fixed_ratio":
+        if target_ratio is None:
+            raise ValueError("fixed_ratio needs target_ratio")
+        if target_ratio <= 0:
+            raise ValueError("target_ratio must be positive")
+        target = float(target_ratio)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    n_rounds = DEFAULT_ROUNDS[mode] if rounds is None else rounds
+
+    results: list[TargetSolution | None] = [None] * len(fields)
+    groups: dict[int, list[_Member]] = {}
+    for i, x in enumerate(fields):
+        arr = np.asarray(x, dtype=np.float32)
+        view = _fold_ndim(arr)
+        vr = float(np.max(view) - np.min(view)) if view.size else 0.0
+        sel0 = _degenerate_selection(view, vr, None, None, r_sp)
+        if sel0 is not None:
+            on = mode == "fixed_psnr"  # raw is lossless: PSNR inf >= target
+            results[i] = TargetSolution(sel0, mode, target, math.inf, RAW_BITS, on)
+            continue
+        starts = est.block_starts(view.shape, r_sp)
+        cap = _max_batch_blocks(view.ndim)
+        if len(starts) > cap:
+            # monster field: stride the sample grid down to the launch cap
+            # (lower effective r_sp) so it still rides the batched sweep
+            starts = starts[:: -(-len(starts) // cap)]
+        groups.setdefault(view.ndim, []).append(
+            _Member(i, est.gather_blocks_np(view, starts, halo=True), vr, view.size)
+        )
+    for nd, members in groups.items():
+        cap = _max_batch_blocks(nd)
+        lo = 0
+        while lo < len(members):
+            hi, blocks = lo, 0
+            while hi < len(members) and (
+                hi == lo
+                or (
+                    blocks + len(members[hi].blocks) <= cap
+                    and hi - lo < MAX_BATCH_FIELDS
+                )
+            ):
+                blocks += len(members[hi].blocks)
+                hi += 1
+            batch = members[lo:hi]
+            sweep = _Sweep(nd, batch, transform)
+            # refinement probes run on a strided sub-sample of the blocks
+            # already in hand — the secant needs trends, not decision-grade
+            # estimates; the final pricing eval uses the full sample
+            refine = _Sweep(
+                nd,
+                [
+                    _Member(m.idx, m.blocks[::REFINE_STRIDE], m.vr, m.size)
+                    for m in batch
+                ],
+                transform,
+            )
+            vr_arr = np.asarray([m.vr for m in batch], np.float32)
+            solver = _solve_fixed_psnr if mode == "fixed_psnr" else _solve_fixed_ratio
+            solved = solver(sweep, refine, vr_arr, target, n_rounds, r_sp)
+            for m, (sel, ps, br, on) in zip(batch, solved):
+                results[m.idx] = TargetSolution(sel, mode, target, ps, br, on)
+            lo = hi
+    return results  # type: ignore[return-value]
+
+
+def solve(x, mode: str, **kw) -> TargetSolution:
+    """Single-field convenience wrapper over `solve_many`."""
+    return solve_many([x], mode, **kw)[0]
+
+
+def estimate_curves(
+    x,
+    bounds,
+    r_sp: float = est.DEFAULT_SAMPLING_RATE,
+    transform: str = "zfp",
+) -> dict[str, np.ndarray]:
+    """Evaluate both estimated rate-distortion curves of one field at an
+    array of bounds, in one vmapped launch (the controller's objective,
+    exposed for benchmarks/tests — e.g. the monotonicity invariant the
+    secant/bracket search relies on). `bounds[c]` is used as ZFP's error
+    bound AND as SZ's bin size delta for candidate c. Returns arrays of
+    len(bounds): ``br_sz``, ``psnr_sz``, ``br_zfp``, ``psnr_zfp``, and
+    ``psnr_sz_measured`` (the sampled quantization-error PSNR the
+    fixed_psnr refinement targets).
+    """
+    view = _fold_ndim(np.asarray(x, dtype=np.float32))
+    vr = float(np.max(view) - np.min(view)) if view.size else 0.0
+    if _degenerate_selection(view, vr, None, None, r_sp) is not None:
+        raise ValueError("degenerate field has no estimator curve")
+    starts = est.block_starts(view.shape, r_sp)
+    member = _Member(0, est.gather_blocks_np(view, starts, halo=True), vr, view.size)
+    sweep = _Sweep(view.ndim, [member], transform)
+    b = np.asarray(bounds, np.float32).reshape(-1, 1)
+    br_sz, psnr_sz, br_zfp, psnr_zfp, psnr_meas = sweep.full(b, b)
+    return dict(
+        br_sz=br_sz[:, 0], psnr_sz=psnr_sz[:, 0],
+        br_zfp=br_zfp[:, 0], psnr_zfp=psnr_zfp[:, 0],
+        psnr_sz_measured=psnr_meas[:, 0],
+    )

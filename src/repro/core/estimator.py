@@ -37,6 +37,26 @@ SZ_BITRATE_OFFSET = 0.5  # paper §6.2
 EC_POINTS = {1: 3, 2: 9, 3: 16}
 
 
+def _table_bits_per_symbol() -> float:
+    """Serialized Huffman-table cost per symbol, matching what entropy.py
+    will actually emit in THIS environment: ~5 bits with the zstd'd
+    delta+length serialization, the full 40 bits (4-byte symbol delta +
+    1-byte code length) when `zstandard` is absent and the table ships as
+    the flagged raw blob. On rich-alphabet fields the difference is
+    whole bits/value, so a fixed 5.0 would bias both Algorithm 1 and the
+    DESIGN.md §7 rate targeting in bare environments."""
+    try:
+        import zstandard  # noqa: F401
+
+        return 5.0
+    except ImportError:
+        return 40.0
+
+
+TABLE_BITS_PER_SYMBOL = _table_bits_per_symbol()
+LN2 = math.log(2.0)
+
+
 # ---------------------------------------------------------------------------
 # Step 1 — blockwise sampling
 # ---------------------------------------------------------------------------
@@ -195,16 +215,21 @@ def estimate_sz(
     ofrac = jnp.mean((jnp.abs(k_raw) > half).astype(jnp.float32))  # escapes
     k = jnp.clip(k_raw, -half, half)
     hist = jnp.histogram(k, bins=n_pdf, range=(-half - 0.5, half + 0.5))[0]
-    p = hist.astype(jnp.float32) / jnp.maximum(hist.sum(), 1)
+    n_samp = jnp.maximum(hist.sum(), 1)
+    p = hist.astype(jnp.float32) / n_samp
     ent = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0))
-    # Huffman-table cost: symbol richness extrapolated from the sample by
-    # the Chao1 estimator (f1 singletons / f2 doubletons), ~5 bits/symbol
-    # after the zstd'd delta+length serialization in entropy.py.
     n_obs = jnp.sum((hist > 0).astype(jnp.float32))
+    # Miller-Madow: the plug-in entropy of an r_sp sample under-reads a
+    # rich alphabet by ~(m-1)/(2n) nats — half a bit/value on intermittent
+    # fields — exactly the bias a rate estimate cannot afford.
+    ent = ent + (n_obs - 1.0) / (2.0 * n_samp.astype(jnp.float32) * LN2)
+    # Huffman-table cost: symbol richness extrapolated from the sample by
+    # the Chao1 estimator (f1 singletons / f2 doubletons), priced at what
+    # entropy.py will actually serialize (TABLE_BITS_PER_SYMBOL).
     f1 = jnp.sum((hist == 1).astype(jnp.float32))
     f2 = jnp.sum((hist == 2).astype(jnp.float32))
     chao1 = n_obs + f1 * jnp.maximum(f1 - 1.0, 0.0) / (2.0 * (f2 + 1.0))
-    table_bits = 5.0 * jnp.minimum(chao1, float(n_pdf))
+    table_bits = TABLE_BITS_PER_SYMBOL * jnp.minimum(chao1, float(n_pdf))
     # escape symbols carry a raw 64-bit residual payload (sz.py)
     br = ent + SZ_BITRATE_OFFSET + ofrac * 64.0 + table_bits / jnp.maximum(x.size, 1)
     return Estimate(bitrate=br, psnr=sz_psnr(delta / 2.0, vr))
@@ -328,16 +353,23 @@ def estimate_zfp_many(
     eb_f: jax.Array,
     vr_f: jax.Array,
     transform: str = "zfp",
+    mode: str = "exact",
 ) -> Estimate:
-    """`estimate_zfp(mode='exact')` for a packed batch of blocks from many
-    fields. `blocks` is (total_blocks, 4, ..) in field order, seg[i] = field
-    of block i, bounds the (n_fields+1,) block boundary array; returns
+    """`estimate_zfp` for a packed batch of blocks from many fields.
+    `blocks` is (total_blocks, 4, ..) in field order, seg[i] = field of
+    block i, bounds the (n_fields+1,) block boundary array; returns
     per-field Estimate arrays of shape (n_fields,).
 
+    mode='exact' — run the exact coder bit counter (31-plane loop), the
+    decision-grade default. mode='model' — the closed-form `block_bits`
+    coder model (one pass instead of 31): same staircase structure with a
+    small model bias, ~5-10x cheaper; the quality-target controller's
+    refinement probes use it and settle on an exact eval (DESIGN.md §7).
+
     Per-field results match the single-field path up to float reduction
-    order: the per-block compute (exponent alignment, BOT, exact coder bit
-    count, truncation error of the EC sample points) is identical; only the
-    final mean becomes a boundary-windowed prefix-sum.
+    order: the per-block compute (exponent alignment, BOT, coder bit
+    count, truncation error of the EC sample points) is identical; only
+    the final mean becomes a boundary-windowed prefix-sum.
     """
     nd = blocks.ndim - 1
     bsz = 4**nd
@@ -350,9 +382,14 @@ def estimate_zfp_many(
     coeffs = block_transform_nd(norm, T, nd)
     gain_n = bot_linf_gain(transform) ** nd
     step = plane_step(eb_f[seg], e, gain_n)
-    from .embedded import exact_coder_bits_blocks
+    if mode == "exact":
+        from .embedded import exact_coder_bits_blocks
 
-    bits_blk = exact_coder_bits_blocks(coeffs, step)  # (n_s,) integer-valued
+        bits_blk = exact_coder_bits_blocks(coeffs, step)  # (n_s,) integer-valued
+    else:
+        from .embedded import block_bits
+
+        bits_blk = block_bits(coeffs, step)  # integer-valued floats
     # PSNR from the EC sample points, exactly as in estimate_zfp
     pmask = _ec_point_mask(nd)
     sel = np.flatnonzero(pmask.reshape(-1))
@@ -448,7 +485,9 @@ def estimate_sz_many(
     ent = -field_sums(plogp, sbounds)
     isums = field_sums(icols, sbounds).astype(jnp.float32)  # (F, 3)
     n_obs, f1, f2 = isums[:, 0], isums[:, 1], isums[:, 2]
+    # Miller-Madow plug-in-bias correction, as in `estimate_sz`
+    ent = ent + (n_obs - 1.0) / (2.0 * jnp.maximum(n_samp_f, 1.0) * LN2)
     chao1 = n_obs + f1 * jnp.maximum(f1 - 1.0, 0.0) / (2.0 * (f2 + 1.0))
-    table_bits = 5.0 * jnp.minimum(chao1, float(n_pdf))
+    table_bits = TABLE_BITS_PER_SYMBOL * jnp.minimum(chao1, float(n_pdf))
     br = ent + SZ_BITRATE_OFFSET + ofrac * 64.0 + table_bits / jnp.maximum(size_f, 1.0)
     return Estimate(bitrate=br, psnr=sz_psnr(delta_f / 2.0, vr_f))

@@ -1,4 +1,4 @@
-"""KV-cache / activation compression helpers (DESIGN.md §2, third row).
+"""KV-cache / activation compression helpers (DESIGN.md §2 third row, §7).
 
 Two in-graph compressors for activation-resident tensors, both direct
 applications of the paper's Stage II:
@@ -9,13 +9,27 @@ applications of the paper's Stage II:
 * `bot_compress_kv` — the ZFP-style fused BOT+truncate surrogate from the
   Pallas kernel, for host-offloaded KV pages: returns the reconstruction and
   exact bits/block so the runtime can decide page-out format online
-  (Algorithm-1-style, per page).
+  (Algorithm-1-style, per page). Instead of a hard-coded error bound, pass
+  `target_ratio` to give the page a byte budget: an in-graph octave grid of
+  candidate bounds is scored by the sampled ZFP estimator (DESIGN.md §5)
+  and the tightest bound whose estimated rate meets the budget is used —
+  the quality-target controller's inversion (DESIGN.md §7) specialised to
+  a static grid so it never leaves the accelerator, with no trial
+  compressions: one fused kernel pass at the chosen bound.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import estimator as est
+
+#: in-graph candidate bounds for the ratio-budget path: VR * 2^-j. The
+#: octave spacing matches the ZFP bit-plane staircase (rate moves ~1
+#: bit/value per octave), so a finer grid would not land meaningfully
+#: closer; 2^-20 .. 2^-1 spans lossless-ish to 1-plane quality.
+_RATIO_GRID_OCTAVES = range(20, 0, -1)
 
 
 def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -29,14 +43,56 @@ def dequantize_kv(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Arr
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
-def bot_compress_kv(page: jax.Array, eb_rel: float = 1e-2) -> tuple[jax.Array, jax.Array]:
+def _budget_eb(page: jax.Array, vr: jax.Array, target_ratio: float) -> jax.Array:
+    """Smallest candidate bound whose *estimated* ZFP rate meets the byte
+    budget (jit-safe; DESIGN.md §7). Estimated on r_sp-sampled blocks with
+    the same closed-form `block_bits` accounting the fused kernel reports
+    (`estimate_zfp_many(mode='model')`) — scoring with a different bit
+    counter than the one the caller compares against the budget would
+    systematically miss it. One vmapped pass over the grid costs
+    ~r_sp * n_candidates of a full pass. Falls back to the loosest
+    candidate when even that misses the budget (the caller's bits output
+    still reports the truth)."""
+    br_budget = 32.0 / float(target_ratio)
+    starts = est.block_starts(page.shape, est.DEFAULT_SAMPLING_RATE)
+    blocks = est.gather_blocks(page, starts, halo=False)
+    seg = jnp.zeros(len(starts), jnp.int32)
+    bounds = jnp.asarray([0, len(starts)], jnp.int32)
+    ebs = vr * jnp.asarray([2.0**-j for j in _RATIO_GRID_OCTAVES], jnp.float32)
+
+    def rate(eb):
+        e = est.estimate_zfp_many(
+            blocks, seg, bounds, eb[None], vr[None], mode="model"
+        )
+        return e.bitrate[0]
+
+    rates = jax.vmap(rate)(ebs)  # nonincreasing along the grid
+    ok = rates <= br_budget
+    idx = jnp.argmax(ok)  # first (tightest) candidate meeting the budget
+    return jnp.where(jnp.any(ok), ebs[idx], ebs[-1])
+
+
+def bot_compress_kv(
+    page: jax.Array,
+    eb_rel: float = 1e-2,
+    target_ratio: float | None = None,
+) -> tuple[jax.Array, jax.Array]:
     """ZFP-path compression of a 2-D KV page (e.g. (tokens, heads*dh)).
+
+    With `target_ratio` set, the error bound is solved in-graph from the
+    page's byte budget (see module docstring) and `eb_rel` is ignored;
+    otherwise the bound is the hard `eb_rel * value_range` of the page.
 
     Returns (reconstruction, bits-per-block) from the fused Pallas kernel;
     callers compare sum(bits) against 8*page.nbytes to pick a page format.
     """
     from repro.kernels import ops
 
-    vr = jnp.maximum(jnp.max(page) - jnp.min(page), 1e-12)
-    recon, bits = ops.bot_fused(page.astype(jnp.float32), eb_rel * vr)
+    page32 = page.astype(jnp.float32)
+    vr = jnp.maximum(jnp.max(page32) - jnp.min(page32), 1e-12)
+    if target_ratio is None:
+        eb = eb_rel * vr
+    else:
+        eb = _budget_eb(page32, vr, target_ratio)
+    recon, bits = ops.bot_fused(page32, eb)
     return recon.astype(page.dtype), bits

@@ -1,0 +1,38 @@
+"""The docs-citation gate is tier-1: every `DESIGN.md §N` citation in the
+repo resolves to a real DESIGN.md section (see tools/check_design_citations)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_design_citations_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_design_citations.py")],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stderr or proc.stdout
+
+
+def test_checker_catches_dangling(tmp_path):
+    """The gate actually gates: a fabricated dangling citation fails."""
+    import shutil
+
+    root = tmp_path / "repo"
+    (root / "tools").mkdir(parents=True)
+    (root / "src").mkdir()
+    shutil.copy(ROOT / "tools" / "check_design_citations.py", root / "tools")
+    (root / "DESIGN.md").write_text("# D\n\n## §1 — only section\n")
+    # assembled so the dangling literal never appears in THIS file's source
+    dangling = "DESIGN" + ".md §" + "9"
+    (root / "src" / "m.py").write_text(f'"""Cites DESIGN.md §1 and {dangling}."""\n')
+    proc = subprocess.run(
+        [sys.executable, str(root / "tools" / "check_design_citations.py")],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 1
+    assert "§9" in proc.stderr

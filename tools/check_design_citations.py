@@ -1,0 +1,107 @@
+#!/usr/bin/env python
+"""CI gate: every `DESIGN.md §N` citation in the repo's Python sources
+must resolve to a real section header in DESIGN.md.
+
+ROADMAP asks that DESIGN.md stay the architecture reference future PRs can
+trust, which only works if docstring citations keep resolving as sections
+are added/renumbered. This script needs nothing beyond the stdlib:
+
+    python tools/check_design_citations.py [--list]
+
+Exit status 0 when every citation resolves, 1 otherwise (with a
+file:line report of the dangling ones). `--list` also prints every
+citation found, so you can eyeball coverage.
+
+What counts as a citation: any `§N` / `§N.M` token within a short window
+after the literal string ``DESIGN.md`` (covering "DESIGN.md §4–§5",
+"DESIGN.md §2, third row", "(DESIGN.md §1, §4–§5)", ...). Bare `§N`
+tokens without the DESIGN.md prefix are ignored — those cite the paper,
+not this repo's design doc.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+#: directories scanned for citations (every .py underneath, plus README.md)
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+#: how far past "DESIGN.md" section tokens are collected; a token must
+#: start within this many chars of the previous one (or of the prefix),
+#: so unrelated § later in the text are not swept in
+WINDOW = 16
+
+SECTION = re.compile(r"§(\d+(?:\.\d+)?)")
+
+
+def design_sections(design_path: Path) -> set[str]:
+    secs: set[str] = set()
+    for line in design_path.read_text().splitlines():
+        if line.startswith("#"):
+            secs.update(SECTION.findall(line))
+    return secs
+
+
+def citations_in(path: Path) -> list[tuple[int, str]]:
+    """[(line_number, section)] for every DESIGN.md §-citation in `path`."""
+    text = path.read_text()
+    out: list[tuple[int, str]] = []
+    for m in re.finditer(r"DESIGN\.md", text):
+        cursor = m.end()
+        while True:
+            nxt = SECTION.search(text, cursor, cursor + WINDOW + 6)
+            if nxt is None or nxt.start() > cursor + WINDOW:
+                break
+            line = text.count("\n", 0, nxt.start()) + 1
+            out.append((line, nxt.group(1)))
+            cursor = nxt.end()
+    return out
+
+
+def main(argv: list[str]) -> int:
+    list_all = "--list" in argv
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("check_design_citations: DESIGN.md not found", file=sys.stderr)
+        return 1
+    sections = design_sections(design)
+    files = [
+        p
+        for d in SCAN_DIRS
+        for p in sorted((ROOT / d).rglob("*.py"))
+        if (ROOT / d).is_dir()
+    ]
+    files.append(ROOT / "README.md")
+    n_cites = 0
+    dangling: list[str] = []
+    for path in files:
+        if not path.exists():
+            continue
+        for line, sec in citations_in(path):
+            n_cites += 1
+            rel = path.relative_to(ROOT)
+            if list_all:
+                print(f"  {rel}:{line}: §{sec}")
+            if sec not in sections:
+                dangling.append(f"{rel}:{line}: DESIGN.md §{sec} does not exist")
+    if dangling:
+        print("dangling DESIGN.md citations:", file=sys.stderr)
+        for d in dangling:
+            print(f"  {d}", file=sys.stderr)
+        print(
+            f"\n{len(dangling)} dangling of {n_cites} citations; "
+            f"DESIGN.md defines §{{{', '.join(sorted(sections, key=lambda s: tuple(map(int, s.split('.')))))}}}",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"check_design_citations: {n_cites} citations across "
+        f"{len(files)} files all resolve ({len(sections)} sections)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
