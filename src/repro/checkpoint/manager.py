@@ -1,7 +1,10 @@
 """Fault-tolerant checkpointing with the paper's per-field codec selection.
 
-Layout (mesh-agnostic — tensors are saved unsharded, so a restarted job may
-reload under ANY device count / mesh: elastic scaling):
+Two layouts, both behind one reader:
+
+v1 (unsharded — `CheckpointConfig.sharded=False`): tensors are gathered
+and saved whole, so a restarted job may reload under ANY device count /
+mesh (elastic scaling by gathering):
 
   <dir>/step_000123/
     manifest.json   # step, field table (name, codec s_i, shape, dtype,
@@ -9,19 +12,43 @@ reload under ANY device count / mesh: elastic scaling):
     data.bin        # concatenated per-field streams (SZ/ZFP/raw)
   <dir>/LATEST      # atomic pointer (written last)
 
+v2 (sharded — `CheckpointConfig.sharded=True`, DESIGN.md §6): the
+shard-local engine (`core/sharded.py`) makes every codec decision from
+per-shard statistics reconciled with a psum — no full-tensor gather —
+and each field is encoded as per-shard *segments*, written to per-host
+data files:
+
+  <dir>/step_000123/
+    manifest.json      # version: 2; per field: codec, eb, view_shape and
+                       # a segment table [{start, stop, codec, host,
+                       # offset, nbytes}] in folded-view coordinates
+    data.<host>.bin    # this host's segments, concatenated
+  <dir>/LATEST
+
+Restore is elastic for both layouts: `restore` reassembles full tensors
+from whatever segments exist (a v2 checkpoint saved on 8 devices reloads
+on 1, 4, or 32 — segment reassembly is mesh-free), and
+`restore_tree(shardings=...)` re-shards the result onto ANY target mesh.
+The v1 single-file layout stays readable forever.
+
 Writes are atomic (tmp dir + rename); `keep_n` old checkpoints are pruned;
 `async_save` runs serialization+IO off the training thread (the in-situ
-model of the paper: compress while the next step computes).
+model of the paper: compress while the next step computes) and re-raises
+any worker exception from `wait()` — encoder failures are never silently
+dropped.
 
 Codec selection is batched: ALL lossy fields go through one
 `select_many` estimator launch (one padded block batch, one device
-round-trip per checkpoint), then per-field SZ/ZFP byte encoding runs on a
-`workers`-wide thread pool so encoding of field i overlaps with encoding
-of field j and with the sequential writer draining results in order.
+round-trip per checkpoint) — or one shard-local `plan_tree` launch in v2 —
+then per-field SZ/ZFP byte encoding runs on a `workers`-wide thread pool
+so encoding of field i overlaps with encoding of field j and with the
+sequential writer draining results in order.
 
 Weights default to lossy (value-range-relative eb, Algorithm 1 per tensor);
 optimizer state defaults to raw (Adam moments are cheap to compress but
-sensitive near zero) — both policies are per-call overridable.
+sensitive near zero) — both policies are per-call overridable. In v2,
+policy-raw leaves also write per-shard segments (exact original-dtype
+bytes, codec ``none``), so optimizer state never gathers either.
 
 Quality targets (DESIGN.md §7): `CheckpointConfig.mode` switches the lossy
 policy from the bound-centric default (``fixed_accuracy`` + `eb_rel`) to
@@ -65,6 +92,9 @@ class CheckpointConfig:
     mode: str = "fixed_accuracy"
     target_psnr: float | None = None
     target_ratio: float | None = None
+    # shard-local engine (DESIGN.md §6): decisions from per-shard statistics,
+    # per-shard segment encoding, v2 manifest — no full-tensor gather
+    sharded: bool = False
 
 
 def _leaf_items(tree: Any) -> list[tuple[str, np.ndarray]]:
@@ -73,6 +103,19 @@ def _leaf_items(tree: Any) -> list[tuple[str, np.ndarray]]:
     for path, leaf in leaves:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         out.append((name, np.asarray(leaf)))
+    return out
+
+
+def _leaf_items_raw(tree: Any) -> list[tuple[str, Any]]:
+    """Like `_leaf_items` but WITHOUT materializing leaves on host — the
+    sharded writer must see the original jax.Arrays to reach their shards."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if not hasattr(leaf, "dtype"):
+            leaf = np.asarray(leaf)
+        out.append((name, leaf))
     return out
 
 
@@ -85,14 +128,19 @@ class CheckpointManager:
         self.cfg = cfg
         os.makedirs(cfg.directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
 
     # -- save ---------------------------------------------------------------
 
     def save(self, step: int, tree: Any, lossy: Callable[[str], bool] | None = None) -> str:
         """Synchronous atomic save. `lossy(name)` selects per-field policy
-        (default: float leaves not under 'opt/' are lossy-compressed)."""
+        (default: float leaves not under 'opt/' are lossy-compressed).
+        With `cfg.sharded`, writes the v2 per-shard segment layout via the
+        shard-local engine (DESIGN.md §6) — no full-tensor gather."""
         if lossy is None:
             lossy = lambda name: not name.startswith("opt/")
+        if self.cfg.sharded:
+            return self._save_sharded(step, tree, lossy)
         cfg = self.cfg
         tmp = os.path.join(cfg.directory, f".tmp_step_{step:09d}_{os.getpid()}")
         final = os.path.join(cfg.directory, f"step_{step:09d}")
@@ -131,40 +179,57 @@ class CheckpointManager:
             cf = sel.encode_with_selection(arr, s)  # casts to f32 internally
             return cf.data, cf.codec, s.eb_abs
 
+        with open(os.path.join(tmp, "data.bin"), "wb") as f:
+            off = 0
+            for (name, arr), (data, codec, eb) in zip(
+                items, self._encoded_in_order(items, _encode)
+            ):
+                f.write(data)
+                fields.append(
+                    dict(
+                        name=name, codec=codec, shape=list(arr.shape),
+                        dtype=str(arr.dtype), offset=off, nbytes=len(data), eb=eb,
+                    )
+                )
+                off += len(data)
+        manifest = self._manifest(step, fields, off, t0)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        return self._publish(tmp, final)
+
+    def _encoded_in_order(self, items: list, encode: Callable[[int], Any]):
+        """Yield `encode(i)` in input order while a bounded thread pool runs
+        ahead of the write cursor — only `2 * workers` results may sit
+        encoded-but-unwritten, so byte streams can't pile up past RAM.
+        Shared by the v1 and v2 writers so the window/drain logic cannot
+        drift between the layouts."""
+        cfg = self.cfg
         pool = (
             ThreadPoolExecutor(max_workers=cfg.workers)
             if cfg.workers > 1 and len(items) > 1
             else None
         )
-        # the writer drains results in field order while the pool encodes
-        # ahead of the write cursor — but only a bounded window ahead, so
-        # encoded-but-unwritten byte streams can't pile up past RAM
         window = 2 * cfg.workers if pool else 1
         futs: deque = deque()
         nxt = 0
         try:
-            with open(os.path.join(tmp, "data.bin"), "wb") as f:
-                off = 0
-                for i, (name, arr) in enumerate(items):
-                    if pool is not None:
-                        while nxt < len(items) and len(futs) < window:
-                            futs.append(pool.submit(_encode, nxt))
-                            nxt += 1
-                        data, codec, eb = futs.popleft().result()
-                    else:
-                        data, codec, eb = _encode(i)
-                    f.write(data)
-                    fields.append(
-                        dict(
-                            name=name, codec=codec, shape=list(arr.shape),
-                            dtype=str(arr.dtype), offset=off, nbytes=len(data), eb=eb,
-                        )
-                    )
-                    off += len(data)
+            for i in range(len(items)):
+                if pool is not None:
+                    while nxt < len(items) and len(futs) < window:
+                        futs.append(pool.submit(encode, nxt))
+                        nxt += 1
+                    yield futs.popleft().result()
+                else:
+                    yield encode(i)
         finally:
             if pool is not None:
                 pool.shutdown()
-        manifest = dict(
+
+    def _manifest(self, step: int, fields: list, total_bytes: int, t0: float,
+                  extra: dict | None = None) -> dict:
+        """Manifest fields shared by both layouts (v2 passes `extra`)."""
+        cfg = self.cfg
+        man = dict(
             step=step,
             mode=cfg.mode,
             target=(
@@ -173,40 +238,172 @@ class CheckpointManager:
                 else cfg.eb_rel
             ),
             fields=fields,
-            total_bytes=off,
-            raw_bytes=int(sum(int(np.prod(f["shape"] or [1])) * np.dtype(f["dtype"]).itemsize for f in fields)),
+            total_bytes=total_bytes,
+            raw_bytes=int(
+                sum(
+                    int(np.prod(fl["shape"] or [1])) * np.dtype(fl["dtype"]).itemsize
+                    for fl in fields
+                )
+            ),
             wall_time=time.time(),
             save_seconds=time.time() - t0,
-            selection_bits={f["name"]: f["codec"] for f in fields},
+            selection_bits={fl["name"]: fl["codec"] for fl in fields},
         )
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f, indent=1)
+        if extra:
+            man.update(extra)
+        return man
+
+    def _publish(self, tmp: str, final: str) -> str:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic publish
-        with open(os.path.join(cfg.directory, ".LATEST_tmp"), "w") as f:
+        with open(os.path.join(self.cfg.directory, ".LATEST_tmp"), "w") as f:
             f.write(os.path.basename(final))
         os.replace(
-            os.path.join(cfg.directory, ".LATEST_tmp"),
-            os.path.join(cfg.directory, "LATEST"),
+            os.path.join(self.cfg.directory, ".LATEST_tmp"),
+            os.path.join(self.cfg.directory, "LATEST"),
         )
         self._prune()
         return final
 
-    def async_save(self, step: int, tree: Any, **kw) -> threading.Thread:
-        """Snapshot to host memory now; serialize+write on a worker thread."""
-        host_tree = jax.tree_util.tree_map(lambda x: np.array(x), tree)
-        self.wait()
-        self._thread = threading.Thread(
-            target=self.save, args=(step, host_tree), kwargs=kw, daemon=True
+    def _save_sharded(self, step: int, tree: Any, lossy: Callable[[str], bool]) -> str:
+        """The v2 writer: shard-local decisions (`core/sharded.plan_tree`),
+        per-shard segment encoding on the thread pool, per-host data files.
+        Policy-raw and non-float leaves write exact original-dtype bytes,
+        also per shard (codec ``none``) — nothing in this path gathers a
+        tensor that the engine's layout analysis can keep sharded."""
+        from repro.core import sharded as shd
+        from repro.runtime import sharding as rsh
+
+        if jax.process_count() > 1:
+            # the v2 writer is single-controller: one process fetches every
+            # unique shard and writes one manifest. True multi-host saves
+            # need per-host segment tables + manifest assembly (§6.2).
+            raise NotImplementedError(
+                "sharded checkpoint writing is single-process for now; "
+                "run the save from a single-controller job or use sharded=False"
+            )
+        cfg = self.cfg
+        tmp = os.path.join(cfg.directory, f".tmp_step_{step:09d}_{os.getpid()}")
+        final = os.path.join(cfg.directory, f"step_{step:09d}")
+        os.makedirs(tmp, exist_ok=True)
+        t0 = time.time()
+        items = _leaf_items_raw(tree)
+        lossy_idx = [
+            i
+            for i, (name, leaf) in enumerate(items)
+            if cfg.compress
+            and lossy(name)
+            and np.issubdtype(leaf.dtype, np.floating)
+            and leaf.size >= 64
+        ]
+        if cfg.mode == "fixed_accuracy":
+            plans = shd.plan_tree(
+                [items[i][1] for i in lossy_idx], "fixed_accuracy",
+                eb_rel=cfg.eb_rel, r_sp=cfg.r_sp,
+            )
+        else:
+            plans = shd.plan_tree(
+                [items[i][1] for i in lossy_idx], cfg.mode,
+                target_psnr=cfg.target_psnr, target_ratio=cfg.target_ratio,
+                r_sp=cfg.r_sp,
+            )
+        plan_of = dict(zip(lossy_idx, plans))
+        host = int(jax.process_index())
+
+        def _encode(i: int):
+            """-> (view_shape, codec, eb, eb_sz, [(start, stop, codec, bytes)])"""
+            name, leaf = items[i]
+            plan = plan_of.get(i)
+            if plan is not None:
+                encoded = shd.encode_plan(leaf, plan)
+                segs = [(s.start, s.stop, s.codec, s.data) for s in encoded]
+                sel = plan.selection
+                codec = shd.field_codec(sel.codec, encoded)
+                return plan.view_shape, codec, sel.eb_abs, sel.eb_sz, segs
+            shape = tuple(int(s) for s in np.shape(leaf))
+            if rsh.mesh_of(leaf) is not None and np.ndim(leaf) > 0:
+                segs = [
+                    (start, stop, "none",
+                     rsh.shard_data(leaf, shd._local_device(devs)).tobytes())
+                    for start, stop, devs in rsh.unique_shards(leaf)
+                ]
+            else:
+                arr = np.asarray(leaf)
+                segs = [((0,) * arr.ndim, shape, "none", arr.tobytes())]
+            return shape, "none", 0.0, 0.0, segs
+
+        fields = []
+        with open(os.path.join(tmp, f"data.{host}.bin"), "wb") as f:
+            off = 0
+            for (name, leaf), (view_shape, codec, eb, eb_sz, segs) in zip(
+                items, self._encoded_in_order(items, _encode)
+            ):
+                seg_rows = []
+                for start, stop, seg_codec, data in segs:
+                    f.write(data)
+                    seg_rows.append(
+                        dict(
+                            start=list(start), stop=list(stop),
+                            codec=seg_codec, host=host,
+                            offset=off, nbytes=len(data),
+                        )
+                    )
+                    off += len(data)
+                fields.append(
+                    dict(
+                        name=name, codec=codec,
+                        shape=list(np.shape(leaf)), dtype=str(leaf.dtype),
+                        view_shape=list(view_shape), eb=eb, eb_sz=eb_sz,
+                        nbytes=sum(r["nbytes"] for r in seg_rows),
+                        segments=seg_rows,
+                    )
+                )
+        manifest = self._manifest(
+            step, fields, off, t0, extra=dict(version=2, hosts=[host])
         )
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        return self._publish(tmp, final)
+
+    def async_save(self, step: int, tree: Any, **kw) -> threading.Thread:
+        """Snapshot now; serialize+write on a worker thread. Unsharded saves
+        snapshot to host memory; sharded saves snapshot DEVICE-side
+        (`jnp.copy`, sharding-preserving) so a training step that donates
+        or overwrites its buffers cannot race the background writer — the
+        copy costs transient HBM, not a gather. Any exception the worker
+        hits — encoder failures included — is re-raised by `wait()`."""
+        if self.cfg.sharded:
+            import jax.numpy as jnp
+
+            host_tree = jax.tree_util.tree_map(
+                lambda x: jnp.copy(x) if isinstance(x, jax.Array) else np.array(x),
+                tree,
+            )
+        else:
+            host_tree = jax.tree_util.tree_map(lambda x: np.array(x), tree)
+        self.wait()
+        self._exc = None
+
+        def _run() -> None:
+            try:
+                self.save(step, host_tree, **kw)
+            except BaseException as e:  # noqa: BLE001 - surfaced by wait()
+                self._exc = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()
         return self._thread
 
     def wait(self) -> None:
+        """Join the async save, re-raising whatever it raised: a failed
+        checkpoint must fail loudly, not leave a stale LATEST behind."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        exc, self._exc = getattr(self, "_exc", None), None
+        if exc is not None:
+            raise exc
 
     def _prune(self) -> None:
         steps = sorted(
@@ -225,7 +422,10 @@ class CheckpointManager:
             return int(f.read().strip().split("_")[-1])
 
     def restore(self, step: int | None = None) -> tuple[int, dict[str, np.ndarray]]:
-        """Returns (step, {name: array}). Mesh-agnostic: caller reshards."""
+        """Returns (step, {name: array}). Mesh-agnostic for BOTH layouts:
+        the v1 single-file reader stays supported, and v2 per-shard
+        segments reassemble into full tensors regardless of the saving
+        mesh — the caller (or `restore_tree(shardings=...)`) reshards."""
         if step is None:
             step = self.latest_step()
             if step is None:
@@ -233,6 +433,8 @@ class CheckpointManager:
         d = os.path.join(self.cfg.directory, f"step_{step:09d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
+        if int(manifest.get("version", 1)) >= 2:
+            return step, self._restore_v2(d, manifest)
         out: dict[str, np.ndarray] = {}
         with open(os.path.join(d, "data.bin"), "rb") as f:
             blob = f.read()
@@ -247,8 +449,56 @@ class CheckpointManager:
             out[fl["name"]] = arr
         return step, out
 
-    def restore_tree(self, template: Any, step: int | None = None) -> tuple[int, Any]:
-        """Restore into the structure of `template` (names must match)."""
+    def _restore_v2(self, d: str, manifest: dict) -> dict[str, np.ndarray]:
+        """Elastic v2 reader: paste each field's segments into its folded
+        view (decompressing lossy ones), then reshape to the original
+        shape/dtype. Works for any saving mesh — segments carry their own
+        view coordinates."""
+        from repro.core import sharded as shd
+
+        blobs: dict[int, bytes] = {}
+
+        def blob(host: int) -> bytes:
+            if host not in blobs:
+                with open(os.path.join(d, f"data.{host}.bin"), "rb") as f:
+                    blobs[host] = f.read()
+            return blobs[host]
+
+        out: dict[str, np.ndarray] = {}
+        for fl in manifest["fields"]:
+            shape, dtype = tuple(fl["shape"]), np.dtype(fl["dtype"])
+            vshape = tuple(fl["view_shape"])
+            rows = fl["segments"]
+            if fl["codec"] == "none":
+                arr = np.empty(vshape, dtype)
+                for sg in rows:
+                    data = blob(sg["host"])[sg["offset"] : sg["offset"] + sg["nbytes"]]
+                    ext = tuple(b - a for a, b in zip(sg["start"], sg["stop"]))
+                    arr[tuple(slice(a, b) for a, b in zip(sg["start"], sg["stop"]))] = (
+                        np.frombuffer(data, dtype).reshape(ext)
+                    )
+                out[fl["name"]] = arr.reshape(shape)
+                continue
+            segments = [
+                shd.Segment(
+                    tuple(sg["start"]), tuple(sg["stop"]), sg["codec"],
+                    blob(sg["host"])[sg["offset"] : sg["offset"] + sg["nbytes"]],
+                )
+                for sg in rows
+            ]
+            view = shd.decode_segments(vshape, segments)
+            out[fl["name"]] = view.reshape(shape).astype(dtype)
+        return out
+
+    def restore_tree(
+        self, template: Any, step: int | None = None, shardings: Any = None
+    ) -> tuple[int, Any]:
+        """Restore into the structure of `template` (names must match).
+
+        `shardings` (optional pytree of `jax.sharding.Sharding` matching
+        `template`) re-shards every leaf onto a TARGET mesh as it loads —
+        the elastic-restore path: a checkpoint saved on one mesh resumes
+        under any other device count or layout (DESIGN.md §6)."""
         step, flat = self.restore(step)
         leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
         vals = []
@@ -256,6 +506,11 @@ class CheckpointManager:
             name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
             arr = flat[name]
             vals.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
-        return step, jax.tree_util.tree_unflatten(
+        tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(template), vals
         )
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda v, s: jax.device_put(v, s), tree, shardings
+            )
+        return step, tree

@@ -5,6 +5,7 @@ error-bounded lossy compression, plus the estimators that make it cheap."""
 from .api import (
     CompressedField,
     CompressedTree,
+    ShardedCompressedField,
     compress,
     compress_pytree,
     compression_ratio,
@@ -21,6 +22,7 @@ __all__ = [
     "CompressedField",
     "CompressedTree",
     "Selection",
+    "ShardedCompressedField",
     "SZStats",
     "TargetSolution",
     "ZFPStats",

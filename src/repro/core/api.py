@@ -40,6 +40,26 @@ from .selector import (
 
 
 @dataclass
+class ShardedCompressedField:
+    """A field compressed shard-by-shard (DESIGN.md §6): the global codec
+    decision plus one encoded `Segment` per unique data shard, each covering
+    `view[start:stop]` of the folded f32 view. Reconstruction is
+    bit-identical to whole-field encoding (SZ is elementwise, ZFP is
+    4-block-local and shard boundaries are 4-aligned)."""
+
+    codec: str
+    shape: tuple[int, ...]
+    dtype: str
+    view_shape: tuple[int, ...]
+    segments: list
+    selection: Selection | None = None
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(s.data) for s in self.segments)
+
+
+@dataclass
 class CompressedTree:
     fields: dict[str, CompressedField]
     treedef: Any
@@ -50,7 +70,7 @@ class CompressedTree:
 
     @property
     def nbytes(self) -> int:
-        return sum(len(v.data) for v in self.fields.values())
+        return sum(v.nbytes for v in self.fields.values())
 
     @property
     def raw_nbytes(self) -> int:
@@ -136,6 +156,14 @@ def compress(
     return encode_with_selection(x, sol.selection)
 
 
+def _is_multidevice(leaf: Any) -> bool:
+    sharding = getattr(leaf, "sharding", None)
+    try:
+        return sharding is not None and len(sharding.device_set) > 1
+    except Exception:  # noqa: BLE001 - any exotic sharding: stay unsharded
+        return False
+
+
 def compress_pytree(
     tree: Any,
     eb_rel: float = 1e-4,
@@ -146,6 +174,7 @@ def compress_pytree(
     mode: str = "fixed_accuracy",
     target_psnr: float | None = None,
     target_ratio: float | None = None,
+    sharded: bool | None = None,
 ) -> CompressedTree:
     """Compress every float leaf of `tree` under one quality mode.
 
@@ -170,11 +199,27 @@ def compress_pytree(
         range; in fixed_ratio every compressible leaf meets the ratio, so
         the tree-level ratio can exceed the target when raw-fallback
         leaves are rare and undershoot it when they dominate.
+      sharded: route sharded `jax.Array` leaves through the shard-local
+        engine (DESIGN.md §6): selection statistics are computed per
+        device shard under `shard_map` and reconciled with a cheap
+        collective — no full-tensor gather — and each leaf is encoded as
+        per-shard `Segment`s inside a `ShardedCompressedField`. Decisions
+        match the unsharded path (bit-identically for the sample-gather
+        reconciliation; see `core/sharded.py`). Default None auto-enables
+        when any leaf lives on more than one device; False forces the
+        gather path.
 
     Returns a `CompressedTree`: per-leaf `CompressedField`s (the {C_i}
     streams) plus `.selection_bits` (the {s_i}).
     """
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    if sharded is None:
+        sharded = any(_is_multidevice(leaf) for _, leaf in leaves)
+    if sharded:
+        return _compress_pytree_sharded(
+            leaves, treedef, eb_rel, eb_abs, r_sp, predicate, workers,
+            mode, target_psnr, target_ratio,
+        )
     named: list[tuple[str, np.ndarray]] = []
     compress_idx: list[int] = []
     for path, leaf in leaves:
@@ -211,12 +256,78 @@ def compress_pytree(
     return CompressedTree(fields=fields, treedef=treedef)
 
 
+def _compress_pytree_sharded(
+    leaves: list,
+    treedef: Any,
+    eb_rel: float,
+    eb_abs: float | None,
+    r_sp: float,
+    predicate: Callable[[str, np.ndarray], bool] | None,
+    workers: int | None,
+    mode: str,
+    target_psnr: float | None,
+    target_ratio: float | None,
+) -> CompressedTree:
+    """The shard-local engine behind `compress_pytree(sharded=True)`: one
+    `plan_tree` pass decides every float leaf without gathering it, then
+    per-shard encoders run on the thread pool (DESIGN.md §6)."""
+    from . import sharded as _sh
+
+    named: list[tuple[str, Any]] = []
+    compress_idx: list[int] = []
+    for path, leaf in leaves:
+        name = _leaf_name(path)
+        if not hasattr(leaf, "dtype"):
+            leaf = np.asarray(leaf)
+        named.append((name, leaf))
+        if predicate is not None and not predicate(name, leaf):
+            continue
+        if not np.issubdtype(leaf.dtype, np.floating):
+            continue
+        compress_idx.append(len(named) - 1)
+    plans = _sh.plan_tree(
+        [named[i][1] for i in compress_idx], mode,
+        eb_abs=eb_abs, eb_rel=eb_rel,
+        target_psnr=target_psnr, target_ratio=target_ratio, r_sp=r_sp,
+    )
+    plan_of = dict(zip(compress_idx, plans))
+
+    def encode(i: int):
+        name, leaf = named[i]
+        plan = plan_of.get(i)
+        if plan is None:
+            arr = np.asarray(leaf)
+            return CompressedField("raw", arr.tobytes(), arr.shape, str(arr.dtype))
+        segments = _sh.encode_plan(leaf, plan)
+        return ShardedCompressedField(
+            _sh.field_codec(plan.selection.codec, segments),
+            tuple(int(s) for s in np.shape(leaf)),
+            str(leaf.dtype), plan.view_shape, segments, plan.selection,
+        )
+
+    n_workers = _default_workers() if workers is None else workers
+    if n_workers > 1 and len(named) > 1:
+        with ThreadPoolExecutor(max_workers=n_workers) as ex:
+            encoded = list(ex.map(encode, range(len(named))))
+    else:
+        encoded = [encode(i) for i in range(len(named))]
+    fields = {named[i][0]: cf for i, cf in enumerate(encoded)}
+    return CompressedTree(fields=fields, treedef=treedef)
+
+
 def decompress_pytree(ct: CompressedTree) -> Any:
     """Invert `compress_pytree`: every lossy leaf reconstructs within its
-    solved bound, every raw leaf bit-exactly (original dtype preserved)."""
+    solved bound, every raw leaf bit-exactly (original dtype preserved).
+    Sharded fields reassemble from their per-shard segments — on any
+    device count, the elastic-restore contract of DESIGN.md §6."""
+    from . import sharded as _sh
+
     leaves = []
     for name, cf in ct.fields.items():
-        if cf.codec == "raw" and cf.selection is None:
+        if isinstance(cf, ShardedCompressedField):
+            view = _sh.decode_segments(cf.view_shape, cf.segments)
+            arr = view.reshape(cf.shape).astype(np.dtype(cf.dtype))
+        elif cf.codec == "raw" and cf.selection is None:
             arr = np.frombuffer(cf.data, dtype=np.dtype(cf.dtype)).reshape(cf.shape)
         else:
             arr = decompress(cf)
@@ -227,6 +338,7 @@ def decompress_pytree(ct: CompressedTree) -> Any:
 __all__ = [
     "CompressedField",
     "CompressedTree",
+    "ShardedCompressedField",
     "compress",
     "compress_pytree",
     "decompress_pytree",

@@ -568,8 +568,27 @@ def solve_many(
     n_rounds = DEFAULT_ROUNDS[mode] if rounds is None else rounds
 
     results: list[TargetSolution | None] = [None] * len(fields)
+    groups = _build_solve_members(fields, range(len(fields)), results, mode, target, r_sp)
+    _solve_groups(groups, results, mode, target, n_rounds, r_sp, transform)
+    return results  # type: ignore[return-value]
+
+
+def _build_solve_members(
+    fields,
+    indices,
+    results: list[TargetSolution | None],
+    mode: str,
+    target: float,
+    r_sp: float,
+) -> dict[int, list[_Member]]:
+    """Gather-side half of `solve_many`: fold + degenerate raw fallback
+    (written straight into `results`) + monster-field sample stride-down,
+    returning batchable members as nd -> [_Member]. Split out so the
+    shard-local engine (DESIGN.md §6) can merge device-gathered members
+    into the same batches as host-gathered ones — identical batch
+    composition, hence bit-identical target solves on mixed pytrees."""
     groups: dict[int, list[_Member]] = {}
-    for i, x in enumerate(fields):
+    for i, x in zip(indices, fields):
         arr = np.asarray(x, dtype=np.float32)
         view = _fold_ndim(arr)
         vr = float(np.max(view) - np.min(view)) if view.size else 0.0
@@ -587,6 +606,23 @@ def solve_many(
         groups.setdefault(view.ndim, []).append(
             _Member(i, est.gather_blocks_np(view, starts, halo=True), vr, view.size)
         )
+    return groups
+
+
+def _solve_groups(
+    groups: dict[int, list[_Member]],
+    results: list[TargetSolution | None],
+    mode: str,
+    target: float,
+    n_rounds: int,
+    r_sp: float,
+    transform: str,
+) -> None:
+    """Drive the per-batch target solvers over pre-gathered `_Member`s.
+    Shared by `solve_many` (host-gathered samples) and the shard-local
+    engine (device-gathered samples, DESIGN.md §6): the solvers see the
+    identical packed batches either way, so sharded target-mode decisions
+    are bit-identical to the unsharded path by construction."""
     for nd, members in groups.items():
         cap = _max_batch_blocks(nd)
         lo = 0
@@ -620,7 +656,6 @@ def solve_many(
             for m, (sel, ps, br, on) in zip(batch, solved):
                 results[m.idx] = TargetSolution(sel, mode, target, ps, br, on)
             lo = hi
-    return results  # type: ignore[return-value]
 
 
 def solve(x, mode: str, **kw) -> TargetSolution:

@@ -20,6 +20,7 @@ in-graph (gradient/KV compression); the checkpoint writer calls them on host.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 from functools import partial
 
@@ -44,7 +45,15 @@ def _table_bits_per_symbol() -> float:
     1-byte code length) when `zstandard` is absent and the table ships as
     the flagged raw blob. On rich-alphabet fields the difference is
     whole bits/value, so a fixed 5.0 would bias both Algorithm 1 and the
-    DESIGN.md §7 rate targeting in bare environments."""
+    DESIGN.md §7 rate targeting in bare environments.
+
+    `REPRO_SZ_TABLE_BITS` overrides the probe — a test hook that lets the
+    golden-decision suite regenerate its frozen expectations for *both*
+    environments (zstd and bare) from either one, since this constant is
+    baked into the jitted estimator programs at import time."""
+    override = os.environ.get("REPRO_SZ_TABLE_BITS")
+    if override:
+        return float(override)
     try:
         import zstandard  # noqa: F401
 
@@ -192,6 +201,40 @@ def sz_delta_for_psnr(psnr: jax.Array, vr: jax.Array | float) -> jax.Array:
     return jnp.asarray(vr, jnp.float32) * math.sqrt(12.0) * 10.0 ** (-psnr_q / 20.0)
 
 
+def sz_bitrate_from_hist(
+    hist: jax.Array, ofrac: jax.Array, size: jax.Array | float, n_pdf: int = PDF_BINS
+) -> jax.Array:
+    """Eq. (9) bit-rate from a dense residual-bin-count histogram: sample
+    entropy with the Miller-Madow plug-in-bias correction, the Chao1
+    Huffman-table cost, the +0.5 offset, and the 64-bit escape payload.
+
+    THE §4 reduction — shared by `estimate_sz` (one field's sampled
+    histogram) and the shard-local engine's statistics reconciliation
+    (`core/sharded.py`, DESIGN.md §6), whose psum merges per-shard bin
+    counts into exactly this input. Keeping it in one place is what lets
+    estimator fixes (the Miller-Madow / table-cost kind) land in every
+    path at once instead of silently diverging the sharded decisions.
+
+    * Miller-Madow: the plug-in entropy of an r_sp sample under-reads a
+      rich alphabet by ~(m-1)/(2n) nats — half a bit/value on intermittent
+      fields — exactly the bias a rate estimate cannot afford.
+    * Chao1 table cost: symbol richness extrapolated from singleton /
+      doubleton counts, priced at what entropy.py will actually serialize
+      (TABLE_BITS_PER_SYMBOL), amortized over the FULL field size.
+    """
+    n_samp = jnp.maximum(hist.sum(), 1).astype(jnp.float32)
+    p = hist.astype(jnp.float32) / n_samp
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0))
+    n_obs = jnp.sum((hist > 0).astype(jnp.float32))
+    ent = ent + (n_obs - 1.0) / (2.0 * n_samp * LN2)
+    f1 = jnp.sum((hist == 1).astype(jnp.float32))
+    f2 = jnp.sum((hist == 2).astype(jnp.float32))
+    chao1 = n_obs + f1 * jnp.maximum(f1 - 1.0, 0.0) / (2.0 * (f2 + 1.0))
+    table_bits = TABLE_BITS_PER_SYMBOL * jnp.minimum(chao1, float(n_pdf))
+    # escape symbols carry a raw 64-bit residual payload (sz.py)
+    return ent + SZ_BITRATE_OFFSET + ofrac * 64.0 + table_bits / jnp.maximum(size, 1)
+
+
 def estimate_sz(
     x: jax.Array,
     delta: jax.Array | float,
@@ -215,23 +258,7 @@ def estimate_sz(
     ofrac = jnp.mean((jnp.abs(k_raw) > half).astype(jnp.float32))  # escapes
     k = jnp.clip(k_raw, -half, half)
     hist = jnp.histogram(k, bins=n_pdf, range=(-half - 0.5, half + 0.5))[0]
-    n_samp = jnp.maximum(hist.sum(), 1)
-    p = hist.astype(jnp.float32) / n_samp
-    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0))
-    n_obs = jnp.sum((hist > 0).astype(jnp.float32))
-    # Miller-Madow: the plug-in entropy of an r_sp sample under-reads a
-    # rich alphabet by ~(m-1)/(2n) nats — half a bit/value on intermittent
-    # fields — exactly the bias a rate estimate cannot afford.
-    ent = ent + (n_obs - 1.0) / (2.0 * n_samp.astype(jnp.float32) * LN2)
-    # Huffman-table cost: symbol richness extrapolated from the sample by
-    # the Chao1 estimator (f1 singletons / f2 doubletons), priced at what
-    # entropy.py will actually serialize (TABLE_BITS_PER_SYMBOL).
-    f1 = jnp.sum((hist == 1).astype(jnp.float32))
-    f2 = jnp.sum((hist == 2).astype(jnp.float32))
-    chao1 = n_obs + f1 * jnp.maximum(f1 - 1.0, 0.0) / (2.0 * (f2 + 1.0))
-    table_bits = TABLE_BITS_PER_SYMBOL * jnp.minimum(chao1, float(n_pdf))
-    # escape symbols carry a raw 64-bit residual payload (sz.py)
-    br = ent + SZ_BITRATE_OFFSET + ofrac * 64.0 + table_bits / jnp.maximum(x.size, 1)
+    br = sz_bitrate_from_hist(hist, ofrac, x.size, n_pdf)
     return Estimate(bitrate=br, psnr=sz_psnr(delta / 2.0, vr))
 
 

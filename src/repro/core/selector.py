@@ -175,10 +175,34 @@ def select_many(
     """
     fields = list(fields)
     results: list[Selection | None] = [None] * len(fields)
-    # nd -> [(input index, halo blocks, eb, vr, size)] — the no-halo blocks
-    # are recovered in-graph by slicing off the leading halo row per axis
+    groups = _build_select_members(
+        fields, range(len(fields)), results, eb_abs, eb_rel, r_sp, transform
+    )
+    _run_select_batches(groups, results, r_sp, transform)
+    return results  # type: ignore[return-value]
+
+
+def _build_select_members(
+    fields,
+    indices,
+    results: list[Selection | None],
+    eb_abs: float | None,
+    eb_rel: float | None,
+    r_sp: float,
+    transform: str,
+) -> dict[int, list[tuple[int, np.ndarray, float, float, int]]]:
+    """Gather-side half of `select_many`: fold + value range + degenerate
+    short-circuit + monster-field per-field fallback (written straight into
+    `results` at the given indices), returning the batchable members as
+    nd -> [(result index, halo blocks, eb, vr, size)] — the no-halo blocks
+    are recovered in-graph by slicing off the leading halo row per axis.
+
+    Split out so the shard-local engine (DESIGN.md §6) can merge its
+    device-gathered members with host-gathered ones INTO THE SAME BATCHES:
+    batch composition then matches the unsharded call exactly, which is
+    what makes mixed eligible/fallback pytrees decide bit-identically."""
     groups: dict[int, list[tuple[int, np.ndarray, float, float, int]]] = {}
-    for i, x in enumerate(fields):
+    for i, x in zip(indices, fields):
         arr = np.asarray(x, dtype=np.float32)
         view = _fold_ndim(arr)
         vr = float(np.max(view) - np.min(view)) if view.size else 0.0
@@ -202,6 +226,20 @@ def select_many(
             est.gather_blocks_np(view, starts, halo=True),
             float(eb), vr, view.size,
         ))
+    return groups
+
+
+def _run_select_batches(
+    groups: dict[int, list[tuple[int, np.ndarray, float, float, int]]],
+    results: list[Selection | None],
+    r_sp: float,
+    transform: str,
+) -> None:
+    """Drive `_select_batch` over pre-gathered members, honoring the per-ndim
+    block cap and field cap. Members are (input index, halo blocks, eb, vr,
+    size) tuples; shared by `select_many` (host-gathered samples) and the
+    shard-local engine (device-gathered samples, DESIGN.md §6) so the two
+    paths run the identical decision program on identical inputs."""
     for nd, members in groups.items():
         cap = _max_batch_blocks(nd)
         lo = 0
@@ -215,7 +253,6 @@ def select_many(
                 hi += 1
             _select_batch(nd, members[lo:hi], results, r_sp, transform)
             lo = hi
-    return results  # type: ignore[return-value]
 
 
 def _select_batch(
@@ -300,6 +337,10 @@ class CompressedField:
     shape: tuple[int, ...]
     dtype: str
     selection: Selection | None = None
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.data)
 
 
 def encode_with_selection(x: np.ndarray, sel: Selection) -> CompressedField:

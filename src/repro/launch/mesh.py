@@ -17,3 +17,24 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh():
     """Single-device mesh for smoke/integration tests."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_emulated_mesh(shape=(2, 4), axes=("data", "model")):
+    """Mesh over emulated CPU devices (DESIGN.md §6 test harness).
+
+    Requires `XLA_FLAGS=--xla_force_host_platform_device_count=N` to be in
+    the environment BEFORE jax initializes — tests get this from
+    `tests/conftest.py`'s early-import hook; scripts (benchmarks, the
+    sharded-checkpoint dryrun) set it at the top of their own module,
+    before importing jax."""
+    n = int(jax.device_count())
+    need = 1
+    for s in shape:
+        need *= int(s)
+    if n < need:
+        raise RuntimeError(
+            f"make_emulated_mesh{tuple(shape)} needs {need} devices, have {n}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax "
+            "initializes"
+        )
+    return jax.make_mesh(shape, axes)

@@ -172,6 +172,64 @@ def cache_sharding(
     return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, _spec(s)), cache_desc)
 
 
+# ---------------------------------------------------------------------------
+# Shard-layout introspection (DESIGN.md §6): the plumbing the shard-local
+# compression engine (core/sharded.py) and the sharded checkpoint writer use
+# to reason about WHERE a jax.Array's bytes physically live without ever
+# gathering them.
+# ---------------------------------------------------------------------------
+
+
+def mesh_of(x: Any) -> Mesh | None:
+    """The concrete Mesh behind `x`'s sharding, or None for host arrays /
+    single-device / non-Named shardings (callers fall back to gathering)."""
+    sharding = getattr(x, "sharding", None)
+    if not isinstance(sharding, NamedSharding):
+        return None
+    mesh = sharding.mesh
+    # AbstractMesh (jax >= 0.5 tracing contexts) has no devices to address
+    return mesh if hasattr(mesh, "devices") else None
+
+
+def spec_entries(x: Any) -> tuple:
+    """`x`'s PartitionSpec padded with None to its rank (one entry per dim)."""
+    spec = tuple(x.sharding.spec)
+    return spec + (None,) * (np.ndim(x) - len(spec))
+
+
+def unique_shards(x: Any) -> list[tuple[tuple[int, ...], tuple[int, ...], tuple]]:
+    """[(start, stop, replica_devices)] — one entry per *unique* data shard
+    of `x`, in row-major shard order, with the devices holding each replica
+    ordered deterministically (by device id). Start/stop are global index
+    bounds per dim. This is the authoritative data-placement map the
+    sharded checkpoint writer iterates: fetching `addressable_shards` for
+    exactly one device per entry touches every byte exactly once."""
+    imap = x.sharding.devices_indices_map(np.shape(x))
+    by_slice: dict[tuple, list] = {}
+    for dev, idx in imap.items():
+        key = tuple(
+            (0 if sl.start is None else int(sl.start),
+             int(np.shape(x)[d]) if sl.stop is None else int(sl.stop))
+            for d, sl in enumerate(idx)
+        )
+        by_slice.setdefault(key, []).append(dev)
+    out = []
+    for key in sorted(by_slice):
+        devs = tuple(sorted(by_slice[key], key=lambda d: d.id))
+        start = tuple(k[0] for k in key)
+        stop = tuple(k[1] for k in key)
+        out.append((start, stop, devs))
+    return out
+
+
+def shard_data(x: Any, device) -> np.ndarray:
+    """Host copy of `x`'s local shard on `device` (no cross-device gather)."""
+    for sh in x.addressable_shards:
+        if sh.device == device:
+            return np.asarray(sh.data)
+    raise ValueError(f"device {device} holds no addressable shard of this array")
+
+
 @contextlib.contextmanager
 def activate(mesh: Mesh, rules: dict):
     """Bind the activation-constraint hook used by nn.shard()."""

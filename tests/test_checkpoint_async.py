@@ -1,0 +1,67 @@
+"""async_save error handling: a failed checkpoint must fail loudly.
+
+Before the fix, `async_save` ran `save` on a bare Thread — an encoder
+exception killed the worker silently, `wait()` joined cleanly, and the
+training loop kept running with NO checkpoint on disk (and a stale
+LATEST pointing at an older step). Now the worker parks the exception and
+`wait()` re-raises it."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.core import selector as sel
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": np.cumsum(rng.standard_normal((96, 96)), axis=0).astype(np.float32),
+        "b": rng.standard_normal((96,)).astype(np.float32),
+    }
+
+
+def test_async_save_surfaces_encoder_exception(tmp_path, monkeypatch):
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3))
+
+    def boom(*a, **k):
+        raise ValueError("encoder exploded")
+
+    monkeypatch.setattr(sel, "encode_with_selection", boom)
+    mgr.async_save(1, _tree())
+    with pytest.raises(ValueError, match="encoder exploded"):
+        mgr.wait()
+    # the failed save must not have published anything
+    assert mgr.latest_step() is None
+
+
+def test_async_save_recovers_after_failure(tmp_path, monkeypatch):
+    """A later good save works and wait() no longer re-raises stale errors."""
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3))
+    orig = sel.encode_with_selection
+
+    def boom(*a, **k):
+        raise RuntimeError("transient")
+
+    monkeypatch.setattr(sel, "encode_with_selection", boom)
+    mgr.async_save(1, _tree())
+    with pytest.raises(RuntimeError):
+        mgr.wait()
+    monkeypatch.setattr(sel, "encode_with_selection", orig)
+    mgr.async_save(2, _tree())
+    mgr.wait()  # no raise
+    step, flat = mgr.restore()
+    assert step == 2 and "w" in flat
+    mgr.wait()  # idempotent: the old exception is not replayed
+
+
+def test_sync_save_propagates_inline(tmp_path, monkeypatch):
+    """The synchronous path already propagated via Future.result(); keep it."""
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3))
+
+    def boom(*a, **k):
+        raise ValueError("encoder exploded")
+
+    monkeypatch.setattr(sel, "encode_with_selection", boom)
+    with pytest.raises(ValueError, match="encoder exploded"):
+        mgr.save(1, _tree())

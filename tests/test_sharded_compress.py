@@ -1,0 +1,315 @@
+"""Sharded-vs-unsharded parity: the DESIGN.md §6 correctness contract.
+
+On 8 emulated CPU devices (tests/conftest.py), the shard-local engine must
+produce the SAME per-field decisions as the single-host path — and
+decompressed bytes must match exactly — for mixed pytrees in all three
+quality modes, including the elastic restore-under-a-different-mesh case.
+Distributed correctness is easy to get silently wrong; every assertion
+here is equality, not tolerance.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.core import estimator as est
+from repro.core import sharded as shd
+from repro.core.api import ShardedCompressedField, compress_pytree, decompress_pytree
+from repro.core.selector import select_many
+
+pytestmark = [pytest.mark.usefixtures("emulated_devices"), pytest.mark.multidevice]
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+def _mixed_tree(mesh, seed=0):
+    """Mixed sharded pytree: DP/TP/2-D-sharded/replicated lossy fields, a
+    5-D fold, plus degenerate + non-float + policy-raw leaves."""
+    rng = np.random.default_rng(seed)
+
+    def mk(shape, spec, walk_axis=0):
+        x = np.cumsum(rng.standard_normal(shape), axis=walk_axis).astype(np.float32)
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return {
+        "dp": mk((128, 96), P("data", None)),
+        "tp": mk((96, 128), P(None, "model")),
+        "both": mk((64, 64, 32), P("data", "model", None)),
+        "repl": mk((128, 64), P()),
+        "conv": mk((2, 3, 8, 32, 32), P()),  # 5-D fold
+        "rough": jax.device_put(
+            rng.standard_normal((96, 96)).astype(np.float32),
+            NamedSharding(mesh, P("data", None)),
+        ),
+        # 50-row shards are not 4-aligned -> engine-ineligible host fallback;
+        # its members must merge into the SAME batches as the engine fields
+        "uneven": jax.device_put(
+            np.cumsum(rng.standard_normal((100, 64)), axis=0).astype(np.float32),
+            NamedSharding(mesh, P("data", None)),
+        ),
+        "tiny": mk((8,), P()),
+        "const": jax.device_put(
+            np.full((64, 64), 3.0, np.float32), NamedSharding(mesh, P("data", None))
+        ),
+        "ids": jax.device_put(
+            np.arange(1024, dtype=np.int32).reshape(32, 32),
+            NamedSharding(mesh, P("data", None)),
+        ),
+        "step": np.array(7, np.int64),
+    }
+
+
+def _host_tree(tree):
+    return jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+
+# ---------------------------------------------------------------------------
+# engine internals: the reconciliation building blocks
+# ---------------------------------------------------------------------------
+
+
+def test_gathered_sample_blocks_bit_identical(mesh):
+    """The samples reconciliation feeds the deciders the EXACT blocks the
+    unsharded host gather would produce — including halo values across
+    shard boundaries and zeros at the domain boundary."""
+    rng = np.random.default_rng(3)
+    x = np.cumsum(rng.standard_normal((128, 96)), axis=0).astype(np.float32)
+    xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+    lay = shd.analyze(xs)
+    assert lay is not None and lay.axis_of_dim == ("data", None)
+    starts = est.block_starts(lay.view_shape, 0.05)
+    ref = est.gather_blocks_np(x, starts, halo=True)
+
+    fn = shd._engine_fn(mesh, tuple(), "samples", "zfp")  # noqa: F841 warm cache path
+    plans = shd.plan_tree([xs], "fixed_accuracy", eb_rel=1e-3, reconcile="samples")
+    assert plans[0].reconcile == "samples"
+    # reproduce the gather the engine did and compare block-for-block
+    owned, mx, stacked = shd._starts_plan(
+        lay, np.ascontiguousarray(starts.astype(np.int64)).tobytes(), len(starts)
+    )
+    got_slots = sorted(s for _, slots in owned.values() for s in slots)
+    assert got_slots == list(range(len(starts)))  # every block owned exactly once
+
+    efn = shd._engine_fn(
+        mesh,
+        (shd._FieldDesc((64, 96), lay.orig_spec, lay.view_shape, lay.local_view, lay.axis_of_dim, mx),),
+        "samples",
+        "zfp",
+    )
+    z = np.zeros(1, np.float32)
+    blocks_g, slots_g = efn((xs,), (stacked,), z, z, z)
+    bl, sl = np.asarray(blocks_g[0]), np.asarray(slots_g[0])
+    out = np.zeros_like(ref)
+    keep = sl >= 0
+    out[sl[keep]] = bl[keep]
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_layout_eligibility_rules(mesh):
+    rng = np.random.default_rng(4)
+    f32 = np.float32
+    # shard not 4-aligned: 100 over 2-way 'data' gives 50-row shards
+    x = jax.device_put(rng.standard_normal((100, 64)).astype(f32), NamedSharding(mesh, P("data", None)))
+    assert shd.analyze(x) is None
+    # ...while 64 over 4-way 'model' (16-wide shards) is eligible
+    x = jax.device_put(rng.standard_normal((100, 64)).astype(f32), NamedSharding(mesh, P(None, "model")))
+    assert shd.analyze(x) is not None
+    # shard smaller than a block: 8 / 4-way model = 2 < 4
+    x = jax.device_put(rng.standard_normal((8, 64)).astype(f32), NamedSharding(mesh, P("model", None)))
+    assert shd.analyze(x) is None
+    # sharded middle dim of a >3-D fold interleaves -> ineligible
+    x = jax.device_put(
+        rng.standard_normal((4, 8, 16, 16)).astype(f32), NamedSharding(mesh, P(None, "data", None, None))
+    )
+    assert shd.analyze(x) is None
+    # leading dim of a >3-D fold is fine
+    x = jax.device_put(
+        rng.standard_normal((4, 8, 16, 16)).astype(f32), NamedSharding(mesh, P("data", None, None, None))
+    )
+    lay = shd.analyze(x)
+    assert lay is not None and lay.view_shape == (32, 16, 16)
+    assert lay.local_view == (16, 16, 16)
+    # host arrays have no layout
+    assert shd.analyze(np.zeros((64, 64), f32)) is None
+
+
+# ---------------------------------------------------------------------------
+# decision + roundtrip parity, all three modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("reconcile", ["samples", "stats"])
+def test_fixed_accuracy_decision_parity(mesh, reconcile):
+    """Manifest decisions (codec, eb, eb_sz) equal the unsharded path for
+    both reconciliation strategies — 'samples' bit-identically by
+    construction, 'stats' through the psum'd sufficient statistics."""
+    tree = _mixed_tree(mesh)
+    host = _host_tree(tree)
+    names = [k for k in tree if np.issubdtype(np.asarray(host[k]).dtype, np.floating)]
+    arrs = [tree[k] for k in names]
+    plans = shd.plan_tree(arrs, "fixed_accuracy", eb_rel=1e-3, reconcile=reconcile)
+    ref = select_many([host[k] for k in names], eb_rel=1e-3)
+    codecs = set()
+    reconciles = set()
+    for name, p, r in zip(names, plans, ref):
+        s = p.selection
+        assert s.codec == r.codec, (name, reconcile, s, r)
+        assert s.eb_abs == r.eb_abs, (name, reconcile)
+        assert s.eb_sz == r.eb_sz, (name, reconcile)
+        codecs.add(s.codec)
+        reconciles.add(p.reconcile)
+        if reconcile == "samples":
+            # bit-identical estimates for EVERY field — engine members and
+            # host-fallback members merge into the unsharded batch packing,
+            # so even the f32 cross-field reductions match exactly
+            assert s.br_sz == r.br_sz and s.br_zfp == r.br_zfp, (name, p.reconcile)
+    assert {"sz", "zfp", "raw"} <= codecs  # the tree exercises every branch
+    assert "host" in reconciles  # the mixed-composition case is really here
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "mode,kw",
+    [
+        ("fixed_accuracy", dict(eb_rel=1e-3)),
+        ("fixed_psnr", dict(target_psnr=60.0)),
+        ("fixed_ratio", dict(target_ratio=6.0)),
+    ],
+)
+def test_compress_pytree_parity_all_modes(mesh, mode, kw):
+    """compress_pytree(sharded) vs unsharded: identical selection bits and
+    bit-identical decompressed bytes for a mixed pytree in every mode."""
+    tree = _mixed_tree(mesh)
+    host = _host_tree(tree)
+    ct = compress_pytree(tree, mode=mode, **kw)
+    ct_ref = compress_pytree(host, mode=mode, sharded=False, **kw)
+    out = decompress_pytree(ct)
+    ref = decompress_pytree(ct_ref)
+    for name in ct_ref.fields:
+        cf, rf = ct.fields[name], ct_ref.fields[name]
+        assert cf.codec == rf.codec, (name, mode)
+        if isinstance(cf, ShardedCompressedField) and cf.selection and rf.selection:
+            assert cf.selection.eb_abs == rf.selection.eb_abs, (name, mode)
+            assert cf.selection.eb_sz == rf.selection.eb_sz, (name, mode)
+            # the per-shard safety net never quietly diverged on these trees
+            assert all(s.codec == cf.codec for s in cf.segments), name
+        np.testing.assert_array_equal(out[name], ref[name], err_msg=f"{name} ({mode})")
+        assert np.asarray(out[name]).dtype == np.asarray(ref[name]).dtype
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "mode,kw",
+    [
+        ("fixed_accuracy", dict()),
+        ("fixed_psnr", dict(mode="fixed_psnr", target_psnr=60.0)),
+        ("fixed_ratio", dict(mode="fixed_ratio", target_ratio=6.0)),
+    ],
+)
+def test_checkpoint_manifest_and_bytes_parity(mesh, tmp_path, mode, kw):
+    """Sharded CheckpointManager vs unsharded: same manifest decisions and
+    identical restored tensors, in all three CheckpointConfig modes."""
+    tree = _mixed_tree(mesh)
+    host = _host_tree(tree)
+    m_sh = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path / "sh"), eb_rel=1e-3, sharded=True, **kw)
+    )
+    m_un = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path / "un"), eb_rel=1e-3, **kw)
+    )
+    p_sh = m_sh.save(1, tree)
+    p_un = m_un.save(1, host)
+    man_sh = json.load(open(os.path.join(p_sh, "manifest.json")))
+    man_un = json.load(open(os.path.join(p_un, "manifest.json")))
+    assert man_sh["version"] == 2 and "version" not in man_un
+    assert man_sh["selection_bits"] == man_un["selection_bits"]
+    eb_sh = {f["name"]: f["eb"] for f in man_sh["fields"]}
+    eb_un = {f["name"]: f["eb"] for f in man_un["fields"]}
+    assert eb_sh == eb_un
+    _, f_sh = m_sh.restore()
+    _, f_un = m_un.restore()
+    assert set(f_sh) == set(f_un)
+    for name in f_un:
+        np.testing.assert_array_equal(f_sh[name], f_un[name], err_msg=name)
+        assert f_sh[name].dtype == f_un[name].dtype, name
+
+
+def test_restore_under_different_mesh(mesh, tmp_path):
+    """Elasticity: a checkpoint saved on a (2,4) mesh restores under (4,2)
+    and (8,1) meshes — and with no mesh at all — with identical values."""
+    tree = _mixed_tree(mesh)
+    mgr = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3, sharded=True)
+    )
+    mgr.save(5, tree)
+    _, flat = mgr.restore()  # mesh-free reassembly
+    for shape2 in [(4, 2), (8, 1)]:
+        mesh2 = jax.make_mesh(shape2, ("data", "model"))
+        shardings = {
+            "dp": NamedSharding(mesh2, P("data", None)),
+            "tp": NamedSharding(mesh2, P(None, "model")),
+            "both": NamedSharding(mesh2, P("data", "model", None)),
+            "repl": NamedSharding(mesh2, P()),
+            "conv": NamedSharding(mesh2, P()),
+            "rough": NamedSharding(mesh2, P("data", None)),
+            "uneven": NamedSharding(mesh2, P()),
+            "tiny": NamedSharding(mesh2, P()),
+            "const": NamedSharding(mesh2, P("data", None)),
+            "ids": NamedSharding(mesh2, P("data", None)),
+            "step": NamedSharding(mesh2, P()),
+        }
+        _, restored = mgr.restore_tree(tree, shardings=shardings)
+        for name in shardings:
+            leaf = restored[name]
+            assert leaf.sharding.mesh.devices.shape == shape2, name
+            np.testing.assert_array_equal(np.asarray(leaf), flat[name], err_msg=name)
+
+
+def test_v1_layout_still_readable(mesh, tmp_path):
+    """The sharded-era reader accepts old single-file checkpoints."""
+    tree = _host_tree(_mixed_tree(mesh))
+    m_v1 = CheckpointManager(CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3))
+    path = m_v1.save(2, tree)
+    assert os.path.exists(os.path.join(path, "data.bin"))
+    m_reader = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3, sharded=True)
+    )
+    step, flat = m_reader.restore()
+    assert step == 2
+    for name, arr in flat.items():
+        assert np.all(np.isfinite(arr)) or name in ("step",), name
+    np.testing.assert_array_equal(flat["ids"], np.asarray(tree["ids"]))
+
+
+def test_sharded_segments_layout(mesh, tmp_path):
+    """v2 manifests record per-shard segments whose extents tile each
+    field's folded view, and per-host data files hold exactly the
+    concatenated segment bytes."""
+    tree = _mixed_tree(mesh)
+    mgr = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3, sharded=True)
+    )
+    path = mgr.save(1, tree)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    by_name = {f["name"]: f for f in man["fields"]}
+    assert len(by_name["dp"]["segments"]) == 2  # 2-way 'data' sharding
+    assert len(by_name["tp"]["segments"]) == 4  # 4-way 'model' sharding
+    assert len(by_name["both"]["segments"]) == 8
+    for fl in man["fields"]:
+        covered = 0
+        for sg in fl["segments"]:
+            ext = [b - a for a, b in zip(sg["start"], sg["stop"])]
+            covered += int(np.prod(ext)) if ext else 1
+        view = int(np.prod(fl["view_shape"])) if fl["view_shape"] else 1
+        assert covered == view, fl["name"]
+    data = open(os.path.join(path, f"data.{man['hosts'][0]}.bin"), "rb").read()
+    assert len(data) == man["total_bytes"]

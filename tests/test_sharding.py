@@ -91,3 +91,97 @@ def test_mesh_builders():
     m = make_local_mesh()
     assert m.axis_names == ("data", "model")
     assert int(np.prod(m.devices.shape)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Multi-device cases — previously impossible on 1 CPU device, now running
+# for real on the 8 emulated devices tests/conftest.py provides.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.multidevice
+def test_emulated_mesh_builder(emulated_devices):
+    from repro.launch.mesh import make_emulated_mesh
+
+    m = make_emulated_mesh((2, 4), ("data", "model"))
+    assert m.devices.shape == (2, 4)
+    with pytest.raises(RuntimeError, match="devices"):
+        make_emulated_mesh((16, 16), ("data", "model"))
+
+
+@pytest.mark.multidevice
+def test_sharded_constraint_actually_shards(emulated_devices):
+    """On a real multi-device mesh, nn.shard() constraints materialize as
+    multi-device shardings with per-device shards of the expected size."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec
+    from repro.models import nn
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with sh.activate(mesh, sh.TRAIN_RULES):
+
+        @jax.jit
+        def f(x):
+            return nn.shard(x, "batch", None, "heads", None)
+
+        out = f(jnp.zeros((16, 8, 12, 32)))
+    assert len(out.sharding.device_set) == 8
+    # batch 16 over 2-way data, heads 12 over 4-way model (trailing Nones
+    # may be normalized away by the sharding)
+    spec = tuple(out.sharding.spec)
+    assert spec[:3] == ("data", None, "model") and all(p is None for p in spec[3:])
+    assert out.addressable_shards[0].data.shape == (8, 8, 3, 32)
+
+
+@pytest.mark.multidevice
+def test_unique_shards_and_replicas(emulated_devices):
+    """`unique_shards` dedupes replica groups and tiles the array exactly."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    x = jax.device_put(
+        np.arange(64 * 32, dtype=np.float32).reshape(64, 32),
+        NamedSharding(mesh, P("data", None)),
+    )
+    shards = sh.unique_shards(x)
+    assert len(shards) == 2  # 2 data shards, each replicated over 4 model devices
+    assert all(len(devs) == 4 for _, _, devs in shards)
+    assert [s[0] for s in shards] == [(0, 0), (32, 0)]
+    assert [s[1] for s in shards] == [(32, 32), (64, 32)]
+    got = np.empty((64, 32), np.float32)
+    for start, stop, devs in shards:
+        got[tuple(slice(a, b) for a, b in zip(start, stop))] = sh.shard_data(x, devs[0])
+    np.testing.assert_array_equal(got, np.asarray(x))
+    # replicated array: one segment, all devices in the group
+    r = jax.device_put(np.zeros((8, 8), np.float32), NamedSharding(mesh, P()))
+    (seg,) = sh.unique_shards(r)
+    assert seg[:2] == ((0, 0), (8, 8)) and len(seg[2]) == 8
+
+
+@pytest.mark.multidevice
+def test_mesh_of_and_spec_entries(emulated_devices):
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    x = jax.device_put(np.zeros((16, 8, 4), np.float32), NamedSharding(mesh, P("data")))
+    assert sh.mesh_of(x) is not None
+    assert sh.spec_entries(x) == ("data", None, None)
+    assert sh.mesh_of(np.zeros(3)) is None
+
+
+@pytest.mark.multidevice
+def test_cache_sharding_places_multidevice(emulated_devices):
+    """cache_sharding on a real (2,4) mesh: batch over data, heads over
+    model, and the seq fallback — checked against actual shard shapes."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cache = {"k": jax.ShapeDtypeStruct((4, 16, 256, 8, 16), np.float32)}
+    shd = sh.cache_sharding(cache, mesh, batch=16, head_sizes={8})
+    assert shd["k"].spec == P(None, "data", None, "model", None)
+    arr = jax.device_put(np.zeros((4, 16, 256, 8, 16), np.float32), shd["k"])
+    assert arr.addressable_shards[0].data.shape == (4, 8, 256, 2, 16)
