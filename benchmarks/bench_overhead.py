@@ -3,7 +3,6 @@ time, per sampling rate."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import select, sz_compress, zfp_compress
 from .common import SUITES, csv_row, timer

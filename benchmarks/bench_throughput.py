@@ -9,7 +9,6 @@ file-per-process POSIX I/O."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import (
     select_and_compress, decompress, sz_compress, sz_decompress,

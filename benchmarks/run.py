@@ -20,6 +20,7 @@ def main() -> None:
     from . import (
         bench_estimation,
         bench_grad_compress,
+        bench_kernels3d,
         bench_overhead,
         bench_quantizers,
         bench_roofline,
@@ -42,6 +43,9 @@ def main() -> None:
         ("grad_compress_beyond_paper",
          (lambda: bench_grad_compress.run(steps=10)) if args.quick
          else bench_grad_compress.run),
+        ("kernels3d_vs_fallback",
+         (lambda: bench_kernels3d.run(sizes=(128,), repeat=1)) if args.quick
+         else bench_kernels3d.run),
         ("roofline_from_dryrun", bench_roofline.run),
     ]
     summary = []

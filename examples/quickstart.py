@@ -25,10 +25,17 @@ from repro.core import (
 def make_fields(n=256):
     rng = np.random.default_rng(0)
     xx, yy = np.meshgrid(np.linspace(0, 6, n), np.linspace(0, 6, n))
+    # a Hurricane-like 3-D volume rides the 4x4x4 kernel tier
+    # (DESIGN.md §3.4, §3.5) through the very same API
+    zz3, yy3, xx3 = np.meshgrid(*[np.linspace(0, 4, n // 4)] * 3, indexing="ij")
     return {
         "CLDHGH-like (smooth)": (np.sin(xx) * np.cos(yy) + 1e-3 * rng.standard_normal((n, n))).astype(np.float32),
         "PRECIP-like (mid)": (np.sin(4 * xx) * np.cos(3 * yy) + 0.05 * rng.standard_normal((n, n))).astype(np.float32),
         "turbulent (rough)": rng.standard_normal((n, n)).astype(np.float32),
+        "Hurricane-like (3-D)": (
+            np.sin(3 * zz3) * np.cos(2 * yy3) * np.sin(xx3)
+            + 1e-2 * rng.standard_normal((n // 4,) * 3)
+        ).astype(np.float32),
     }
 
 

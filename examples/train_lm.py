@@ -7,7 +7,6 @@ with lossy-compressed checkpoints + error-feedback compressed gradients.
 """
 
 import argparse
-import sys
 
 from repro.launch import train as train_mod
 

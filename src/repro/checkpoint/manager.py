@@ -62,7 +62,6 @@ bounds, so restore-side tooling can audit what was promised.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 import os
 import shutil
@@ -138,7 +137,8 @@ class CheckpointManager:
         With `cfg.sharded`, writes the v2 per-shard segment layout via the
         shard-local engine (DESIGN.md §6) — no full-tensor gather."""
         if lossy is None:
-            lossy = lambda name: not name.startswith("opt/")
+            def lossy(name):
+                return not name.startswith("opt/")
         if self.cfg.sharded:
             return self._save_sharded(step, tree, lossy)
         cfg = self.cfg

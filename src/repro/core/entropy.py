@@ -4,7 +4,7 @@ Host-side (numpy) Huffman coder used by the byte-emitting SZ path, plus the
 Shannon-entropy bit-rate estimator used in-graph (Eqs. (5)/(6)).
 
 Entropy coding is byte-stream manipulation, not tensor compute, so it stays
-off the accelerator (DESIGN.md §3.4); in-graph callers use `entropy_bits`.
+off the accelerator (DESIGN.md §3.6); in-graph callers use `entropy_bits`.
 """
 
 from __future__ import annotations
@@ -82,13 +82,13 @@ def _canonical_codes(lens: np.ndarray) -> np.ndarray:
     code = 0
     prev_len = 0
     for s in order:
-        l = int(lens[s])
-        if l == 0:
+        ln = int(lens[s])
+        if ln == 0:
             continue
-        code <<= l - prev_len
+        code <<= ln - prev_len
         codes[s] = code
         code += 1
-        prev_len = l
+        prev_len = ln
     return codes
 
 

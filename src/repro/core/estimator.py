@@ -22,7 +22,6 @@ from __future__ import annotations
 import math
 import os
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

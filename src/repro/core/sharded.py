@@ -98,9 +98,15 @@ def _smap(f, mesh, in_specs, out_specs):
 # ---------------------------------------------------------------------------
 
 
-def _fold_plan(shape: tuple[int, ...]) -> tuple[tuple[int, ...], list[tuple[int, ...]]]:
+def fold_plan(shape: tuple[int, ...]) -> tuple[tuple[int, ...], list[tuple[int, ...]]]:
     """(view_shape, groups): the `selector._fold_ndim` fold expressed as a
-    plan — groups[i] lists the ORIGINAL dims merged into view dim i."""
+    plan — groups[i] lists the ORIGINAL dims merged into view dim i.
+
+    Genuinely-3-D fields (Hurricane/NYX volumes) keep all three dims:
+    ranks above 3 fold leading axes into view dim 0 but never below 3-D,
+    so the folded view stays eligible for the 3-D kernel tier
+    (DESIGN.md §3.4–§3.5) and for 3-D shard-local selection. Only a
+    leading dim too short for a 4-wide block (< 4) is merged away."""
     dims = list(shape)
     groups: list[tuple[int, ...]] = [(d,) for d in range(len(dims))]
     if len(dims) > 3:
@@ -148,7 +154,7 @@ def analyze(x: Any) -> FieldLayout | None:
         return None
     shape = tuple(int(s) for s in np.shape(x))
     spec = rsh.spec_entries(x)
-    view_shape, fold_groups = _fold_plan(shape)
+    view_shape, fold_groups = fold_plan(shape)
     axis_of_dim: list[str | None] = []
     for vdim, group in enumerate(fold_groups):
         sharded = [d for d in group if spec[d] is not None]
@@ -317,7 +323,10 @@ def _field_stats(halo, valid, eb, vr, size_f, nd, transform, all_axes):
     the PSNR whose `PSNR_MATCH_QUANTUM` snap absorbs reduction-order ulps
     before the SZ bound is derived (DESIGN.md §1, §6)."""
     bsz = 4**nd
-    psum = lambda v: jax.lax.psum(v, all_axes)
+
+    def psum(v):
+        return jax.lax.psum(v, all_axes)
+
     nohalo = halo[(slice(None),) + (slice(1, None),) * nd]
     # --- ZFP at eb: exact coder bits (int) + EC truncation error (§5) ---
     n_s = nohalo.shape[0]
@@ -622,7 +631,7 @@ def plan_tree(
 
 def _host_view_shape(arr: np.ndarray) -> tuple[int, ...]:
     """Folded-view shape without materializing the f32 view (0-d -> (1,))."""
-    vs = _fold_plan(tuple(int(s) for s in np.shape(arr)))[0]
+    vs = fold_plan(tuple(int(s) for s in np.shape(arr)))[0]
     return vs if vs else (1,)
 
 

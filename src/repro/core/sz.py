@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import entropy as _entropy
-from .transforms import lorenzo_forward, lorenzo_inverse
+from .transforms import lorenzo_forward
 
 #: symbols: 0 = escape (outlier), 1..2R+1 = residual shifted by R+1
 RESIDUAL_RADIUS = 32767  # 2n-1 = 65535 bins, paper §6.3.2

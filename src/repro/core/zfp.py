@@ -27,9 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .embedded import (
-    BLOCK_HEADER_BITS,
     align_blocks,
-    block_bits,
     exact_coder_bits,
     plane_step,
     reconstruct_truncated,

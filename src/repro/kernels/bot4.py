@@ -1,14 +1,15 @@
-"""Pallas TPU kernel: fused ZFP Stage I+II surrogate for 2-D fields.
+"""Pallas TPU kernels: fused ZFP Stage I+II surrogate for 2-D/3-D fields.
 
-Per VMEM tile: 4x4 blocking -> exponent alignment -> block orthogonal
-transform T(t) (paper §4.2) -> bit-plane truncation -> (reconstruction,
-bits-per-block). This is the in-graph hot spot for KV-cache / activation
-compression and for accelerating `zfp_stats`.
+Per VMEM tile: 4x4 (or 4x4x4) blocking -> exponent alignment -> block
+orthogonal transform T(t) (paper §4.2) -> bit-plane truncation ->
+(reconstruction, bits-per-block). This is the in-graph hot spot for
+KV-cache / activation compression and for accelerating `zfp_stats`.
 
-TPU mapping notes (DESIGN.md §3.2):
-  * the 4x4 transform is expressed as two small tensordots against a
-    constant 4x4 matrix — batched over (bm/4 * bn/4) blocks these hit the
-    MXU as (nblk*4, 4) x (4, 4) matmuls;
+TPU mapping notes (DESIGN.md §3.2, §3.5):
+  * the 4-point transform is expressed as small tensordots against a
+    constant 4x4 matrix — two per block in 2-D, three in 3-D; batched over
+    the tile's blocks these hit the MXU as (nblk*4^{n-1}, 4) x (4, 4)
+    matmuls;
   * exponent alignment uses exp2/log2 on the VPU instead of integer
     exponent plumbing (no bit-twiddling datapath on TPU vector lanes);
   * the bits output uses the closed-form `block_bits` model (the exact
@@ -29,6 +30,7 @@ from jax.experimental import pallas as pl
 from repro.core.transforms import bot_linf_gain, bot_matrix
 
 DEFAULT_BLOCK = (128, 256)
+DEFAULT_BLOCK3 = (8, 64, 256)
 BLOCK_HEADER_BITS = 24  # must match repro.core.embedded
 
 
@@ -102,6 +104,88 @@ def bot2d_fused(
         out_shape=[
             jax.ShapeDtypeStruct((m, n), jnp.float32),
             jax.ShapeDtypeStruct((m // 4, n // 4), jnp.float32),
+        ],
+        interpret=interpret,
+    )(eb_arr, jnp.asarray(T), x)
+
+
+def _bot3d_kernel(eb_ref, T_ref, x_ref, recon_ref, bits_ref, *, gain3):
+    """4x4x4 generalization of `_bot_kernel` (DESIGN.md §3.5): one more
+    blocked axis, T(t) applied along all three block axes (three batched
+    tensordots on the MXU), and the same closed-form `block_bits` rate
+    model with the 3-D coder constants (w = ceil(log2(64+1)) = 7)."""
+    bz, bm, bn = x_ref.shape
+    nb_z, nb_r, nb_c = bz // 4, bm // 4, bn // 4
+    eb = eb_ref[0, 0]
+    x = x_ref[...]
+    # -> (nb_z, nb_r, nb_c, 4, 4, 4) block layout
+    b = x.reshape(nb_z, 4, nb_r, 4, nb_c, 4).transpose(0, 2, 4, 1, 3, 5)
+    mx = jnp.maximum(jnp.max(jnp.abs(b), axis=(3, 4, 5)), 1e-30)
+    e = jnp.ceil(jnp.log2(mx))
+    scale = jnp.exp2(-e)[..., None, None, None]
+    norm = b * scale
+    # c = T applied along each block axis, as three batched 4x4 matmuls
+    Tm = T_ref[...]
+    c = jnp.einsum("ai,bj,ck,xyzijk->xyzabc", Tm, Tm, Tm, norm)
+    # conservative power-of-two bit-plane cutoff (over-preservation, §6.4)
+    raw = eb / (jnp.exp2(e) * gain3)
+    step = jnp.exp2(jnp.floor(jnp.log2(jnp.maximum(raw, 2.0**-60))))[
+        ..., None, None, None
+    ]
+    q = jnp.abs(c) / step
+    m = jnp.trunc(q)
+    nsb = jnp.where(m >= 1.0, jnp.floor(jnp.log2(jnp.maximum(m, 1.0))) + 1.0, 0.0)
+    # rate model (see module docstring): header + w*maxplane + sum nsb + 2*nsig
+    w = math.ceil(math.log2(64 + 1))
+    sig = jnp.sum(nsb, axis=(3, 4, 5))
+    nsig = jnp.sum((nsb > 0.0).astype(jnp.float32), axis=(3, 4, 5))
+    maxp = jnp.max(nsb, axis=(3, 4, 5))
+    bits_ref[...] = BLOCK_HEADER_BITS + w * maxp + sig + 2.0 * nsig
+    # midpoint reconstruction + inverse transform + de-normalization
+    rc = jnp.sign(c) * jnp.where(m > 0, (m + 0.5) * step, 0.0)
+    rb = jnp.einsum("ia,jb,kc,xyzijk->xyzabc", Tm, Tm, Tm, rc)
+    rb = rb / scale
+    recon_ref[...] = rb.transpose(0, 3, 1, 4, 2, 5).reshape(bz, bm, bn)
+
+
+@functools.partial(jax.jit, static_argnames=("transform", "block", "interpret"))
+def bot3d_fused(
+    x: jax.Array,
+    eb: jax.Array | float,
+    transform: str = "zfp",
+    block: tuple[int, int, int] = DEFAULT_BLOCK3,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused ZFP-style transform+truncate for a 3-D f32 field.
+
+    Returns (reconstruction (z, m, n) f32, bits (z/4, m/4, n/4) f32).
+    Requires shape divisible by `block` (ops.py pads).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    z, m, n = x.shape
+    bz, bm, bn = block
+    assert z % bz == 0 and m % bm == 0 and n % bn == 0
+    assert bz % 4 == 0 and bm % 4 == 0 and bn % 4 == 0
+    T = np.asarray(bot_matrix(transform), np.float32)
+    gain3 = float(bot_linf_gain(transform) ** 3)
+    eb_arr = jnp.full((1, 1), eb, jnp.float32)
+    kernel = functools.partial(_bot3d_kernel, gain3=gain3)
+    return pl.pallas_call(
+        kernel,
+        grid=(z // bz, m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, g: (0, 0)),
+            pl.BlockSpec((4, 4), lambda i, j, g: (0, 0)),
+            pl.BlockSpec((bz, bm, bn), lambda i, j, g: (i, j, g)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bz, bm, bn), lambda i, j, g: (i, j, g)),
+            pl.BlockSpec((bz // 4, bm // 4, bn // 4), lambda i, j, g: (i, j, g)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((z, m, n), jnp.float32),
+            jax.ShapeDtypeStruct((z // 4, m // 4, n // 4), jnp.float32),
         ],
         interpret=interpret,
     )(eb_arr, jnp.asarray(T), x)

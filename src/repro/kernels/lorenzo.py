@@ -1,15 +1,18 @@
-"""Pallas TPU kernel: fused prequantize + 2-D integer-Lorenzo encode/decode.
+"""Pallas TPU kernels: fused prequantize + 2-D/3-D integer-Lorenzo encode.
 
-The SZ Stage I+II hot spot (DESIGN.md §3.1, §3.3). One pass over HBM:
-round(x / 2eb) and the 2-D Lorenzo difference of the integer codes, tiled
-through VMEM. Tile-boundary neighbors are fetched with one extra row / one
-extra column / one corner *view* of the same input (1-element-granular
-index maps on (1, bn)/(bm, 1)/(1, 1) blocks), so no halo padding or
-materialized shifted copies are needed.
+The SZ Stage I+II hot spot (DESIGN.md §3.1, §3.3, §3.4). One pass over
+HBM: round(x / 2eb) and the n-D Lorenzo difference of the integer codes,
+tiled through VMEM. Tile-boundary neighbors are fetched with extra *views*
+of the same input one element back (1-element-granular index maps on
+blocks with size-1 dims), so no halo padding or materialized shifted
+copies are needed. In 2-D that is one row + one column + one corner view;
+in 3-D it is the full lower halo shell — three faces, three edges, and
+one corner over a (bz, bm, bn) grid (DESIGN.md §3.4).
 
 TPU mapping notes:
-  * (bm, bn) = (256, 256) default — 256 KiB f32 per tile, lane dim a
-    multiple of 128 for clean (8,128) VREG tiling.
+  * (bm, bn) = (256, 256) default in 2-D — 256 KiB f32 per tile, lane dim
+    a multiple of 128 for clean (8,128) VREG tiling; (8, 128, 256) in 3-D
+    (1 MiB f32 per tile) with the same trailing-dim alignment.
   * round / sub are VPU element ops; the whole kernel is memory-bound, so
     fusing quantize+stencil halves HBM traffic vs running them separately.
   * grid is fully parallel (no carried state — this is the entire point of
@@ -26,6 +29,7 @@ from jax.experimental import pallas as pl
 
 
 DEFAULT_BLOCK = (256, 256)
+DEFAULT_BLOCK3 = (8, 128, 256)
 
 
 def _encode_kernel(eb_ref, x_ref, top_ref, left_ref, corner_ref, out_ref):
@@ -82,6 +86,99 @@ def lorenzo2d_encode(
     )(eb_arr, x, x, x, x)
 
 
+def _encode3d_kernel(
+    eb_ref, x_ref, zf_ref, yf_ref, xf_ref, zy_ref, zx_ref, yx_ref, c_ref, out_ref
+):
+    """3-D extension of `_encode_kernel` (DESIGN.md §3.4): the lower halo
+    shell of the (bz, bm, bn) tile arrives as seven views of the same
+    input one element back — faces (1,bm,bn)/(bz,1,bn)/(bz,bm,1), edges
+    (1,1,bn)/(1,bm,1)/(bz,1,1) and the (1,1,1) corner. They are assembled
+    into the (bz+1, bm+1, bn+1) extended cube, and the 3-D Lorenzo
+    residual is the composition of one backward difference per axis —
+    exactly `transforms.lorenzo_forward` restricted to the tile."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    g = pl.program_id(2)
+    delta = 2.0 * eb_ref[0, 0]
+
+    def q(ref, keep):
+        # quantize a halo view, masking the domain boundary (Lorenzo
+        # predicts 0 outside the domain)
+        return jnp.round(ref[...] / delta) * keep
+
+    k = jnp.round(x_ref[...] / delta)  # (bz, bm, bn)
+    zf = q(zf_ref, i > 0)  # (1, bm, bn) plane at z-1
+    yf = q(yf_ref, j > 0)  # (bz, 1, bn) plane at y-1
+    xf = q(xf_ref, g > 0)  # (bz, bm, 1) plane at x-1
+    zy = q(zy_ref, (i > 0) & (j > 0))  # (1, 1, bn)
+    zx = q(zx_ref, (i > 0) & (g > 0))  # (1, bm, 1)
+    yx = q(yx_ref, (j > 0) & (g > 0))  # (bz, 1, 1)
+    c = q(c_ref, (i > 0) & (j > 0) & (g > 0))  # (1, 1, 1)
+    # extended cube: plane 0 carries the z-1 halo, row/col 0 of every
+    # plane carry the y-1 / x-1 halos, composed exactly like the shard
+    # engine's dim-by-dim halo extension (core/sharded.py)
+    plane0 = jnp.concatenate(
+        [
+            jnp.concatenate([c, zy], axis=2),  # (1, 1, bn+1)
+            jnp.concatenate([zx, zf], axis=2),  # (1, bm, bn+1)
+        ],
+        axis=1,
+    )
+    body = jnp.concatenate(
+        [
+            jnp.concatenate([yx, yf], axis=2),  # (bz, 1, bn+1)
+            jnp.concatenate([xf, k], axis=2),  # (bz, bm, bn+1)
+        ],
+        axis=1,
+    )
+    d = jnp.concatenate([plane0, body], axis=0)  # (bz+1, bm+1, bn+1)
+    for ax in range(3):
+        d = jax.lax.slice_in_dim(d, 1, d.shape[ax], axis=ax) - jax.lax.slice_in_dim(
+            d, 0, d.shape[ax] - 1, axis=ax
+        )
+    out_ref[...] = d.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def lorenzo3d_encode(
+    x: jax.Array,
+    eb: jax.Array | float,
+    block: tuple[int, int, int] = DEFAULT_BLOCK3,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused quantize+Lorenzo for a 3-D f32 field -> int32 residual codes.
+
+    Requires shape divisible by `block` (ops.py pads).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    z, m, n = x.shape
+    bz, bm, bn = block
+    assert z % bz == 0 and m % bm == 0 and n % bn == 0, (x.shape, block)
+    grid = (z // bz, m // bm, n // bn)
+    eb_arr = jnp.full((1, 1), eb, jnp.float32)
+    # each halo view starts one element back along its offset dims (clamped
+    # at 0 by pallas; the kernel masks the boundary programs anyway)
+    return pl.pallas_call(
+        _encode3d_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, g: (0, 0)),
+            pl.BlockSpec((bz, bm, bn), lambda i, j, g: (i, j, g)),
+            pl.BlockSpec((1, bm, bn), lambda i, j, g: (i * bz - 1, j, g)),
+            pl.BlockSpec((bz, 1, bn), lambda i, j, g: (i, j * bm - 1, g)),
+            pl.BlockSpec((bz, bm, 1), lambda i, j, g: (i, j, g * bn - 1)),
+            pl.BlockSpec((1, 1, bn), lambda i, j, g: (i * bz - 1, j * bm - 1, g)),
+            pl.BlockSpec((1, bm, 1), lambda i, j, g: (i * bz - 1, j, g * bn - 1)),
+            pl.BlockSpec((bz, 1, 1), lambda i, j, g: (i, j * bm - 1, g * bn - 1)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, g: (i * bz - 1, j * bm - 1, g * bn - 1)),
+        ],
+        out_specs=pl.BlockSpec((bz, bm, bn), lambda i, j, g: (i, j, g)),
+        out_shape=jax.ShapeDtypeStruct((z, m, n), jnp.int32),
+        interpret=interpret,
+    )(eb_arr, x, x, x, x, x, x, x, x)
+
+
 def _dequant_kernel(eb_ref, k_ref, out_ref):
     delta = 2.0 * eb_ref[0, 0]
     out_ref[...] = k_ref[...].astype(jnp.float32) * delta
@@ -113,5 +210,33 @@ def dequantize2d(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(eb_arr, k)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequantize3d(
+    k: jax.Array,
+    eb: jax.Array | float,
+    block: tuple[int, int, int] = DEFAULT_BLOCK3,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """3-D twin of `dequantize2d`: elementwise dequantize of integer codes
+    (the Lorenzo inverse — a 3-D cumsum — stays with XLA's optimized scan)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    z, m, n = k.shape
+    bz, bm, bn = block
+    assert z % bz == 0 and m % bm == 0 and n % bn == 0
+    eb_arr = jnp.full((1, 1), eb, jnp.float32)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(z // bz, m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, g: (0, 0)),
+            pl.BlockSpec((bz, bm, bn), lambda i, j, g: (i, j, g)),
+        ],
+        out_specs=pl.BlockSpec((bz, bm, bn), lambda i, j, g: (i, j, g)),
+        out_shape=jax.ShapeDtypeStruct((z, m, n), jnp.float32),
         interpret=interpret,
     )(eb_arr, k)

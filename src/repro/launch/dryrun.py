@@ -187,7 +187,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, units: int | None = None,
 
     with sharding.activate(mesh, rules):
         if kind == "train":
-            f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+            def f32(s):
+                return jax.ShapeDtypeStruct(s.shape, jnp.float32)
             opt_abs = {
                 "m": jax.tree_util.tree_map(f32, params_abs),
                 "v": jax.tree_util.tree_map(f32, params_abs),

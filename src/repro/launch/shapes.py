@@ -5,6 +5,12 @@ LM transformer shapes are seq_len x global_batch. decode_*/long_* lower
 long_500k requires sub-quadratic attention: runs for SSM/hybrid archs
 (xlstm, zamba2 — the latter with a 4k sliding window on its shared
 attention block), skipped for pure full-attention archs (DESIGN.md §6).
+
+`FIELD_SHAPES` / `compression_view` are the compression-side counterpart:
+the canonical scientific-field shapes the 3-D kernel bench drives through
+the kernel tiers, plus the fold plan each will compress as — genuinely-
+3-D fields stay 3-D (the paper's Hurricane/NYX workloads ride the 3-D
+Pallas kernels, DESIGN.md §3.4–§3.5) instead of being flattened to 2-D.
 """
 
 from __future__ import annotations
@@ -22,6 +28,28 @@ SHAPES = {
     "decode_32k": dict(kind="decode", seq=32_768, batch=128),
     "long_500k": dict(kind="decode", seq=524_288, batch=1),
 }
+
+#: canonical scientific-field shapes per paper workload, CPU-bench scaled
+#: (the *_full variants carry the real dataset dims for TPU runs);
+#: benchmarks/bench_kernels3d.py derives its default cube sizes from here
+FIELD_SHAPES = {
+    "atm_2d": (384, 768),             # ATM climate plane (1800x3600 full)
+    "hurricane_3d": (96, 256, 256),   # Hurricane volume (100x500x500 full)
+    "nyx_3d": (128, 128, 128),        # NYX cosmology cube (512^3 full)
+    "hurricane_full": (100, 500, 500),
+    "nyx_full": (512, 512, 512),
+}
+
+
+def compression_view(shape: tuple[int, ...]) -> tuple[int, ...]:
+    """The folded view shape `core.selector` / the kernel tier will see for
+    a field of `shape` (delegates to `core.sharded.fold_plan`): rank > 3
+    folds leading axes but never below 3-D, short (< 4) leading dims merge
+    away — so e.g. a (T, Z, Y, X) time-stacked volume compresses as a 3-D
+    stack, not a 2-D sheet."""
+    from repro.core.sharded import fold_plan
+
+    return fold_plan(tuple(int(s) for s in shape))[0]
 
 I32 = jnp.int32
 F32 = jnp.float32

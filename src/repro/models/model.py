@@ -13,9 +13,7 @@ Public API (built by `build_model(cfg)`):
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -212,7 +210,8 @@ class TransformerLM(BaseLM):
             else blocks.attn_cache_desc(cfg, batch, max_len)
         )
         one = {k: v for k, v in one.items() if k != "len"}
-        stack = lambda s, n: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+        def stack(s, n):
+            return jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
         out = {
             "pos": jax.ShapeDtypeStruct((), jnp.int32),
             "blocks": jax.tree_util.tree_map(partial(stack, n=cfg.n_layers - nd), one),
@@ -298,7 +297,8 @@ class XLSTMLM(BaseLM):
         cfg = self.cfg
         xc = cfg.xlstm
         g = self._gcount()
-        stackn = lambda s, n: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+        def stackn(s, n):
+            return jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
         group = {
             "m": jax.tree_util.tree_map(
                 partial(stackn, n=xc.m_per_group), xlstm.mlstm_cache_desc(cfg, batch)
@@ -407,7 +407,8 @@ class HybridLM(BaseLM):
     def cache_desc(self, batch: int, max_len: int):
         cfg = self.cfg
         n_groups, k, tail = self._layout()
-        stackn = lambda s, n: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+        def stackn(s, n):
+            return jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
         mc = ssm.mamba_cache_desc(cfg, batch)
         ac = {k_: v for k_, v in blocks.attn_cache_desc(cfg, batch, max_len).items() if k_ != "len"}
         out = {
@@ -508,7 +509,8 @@ class EncDecLM(BaseLM):
         cfg = self.cfg
         enc_len = enc_len or cfg.frontend_len
         one = {k: v for k, v in blocks.attn_cache_desc(cfg, batch, max_len).items() if k != "len"}
-        stackn = lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype)
+        def stackn(s):
+            return jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype)
         return {
             "pos": jax.ShapeDtypeStruct((), jnp.int32),
             "memory": jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model), _dt(cfg)),

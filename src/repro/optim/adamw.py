@@ -34,7 +34,8 @@ def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def init(params: Any) -> dict:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree_util.tree_map(zeros, params),
         "v": jax.tree_util.tree_map(zeros, params),

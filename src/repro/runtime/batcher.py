@@ -9,7 +9,6 @@ addressing; no recompilation as requests come and go (shapes are static).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

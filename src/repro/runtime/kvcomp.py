@@ -77,7 +77,10 @@ def bot_compress_kv(
     eb_rel: float = 1e-2,
     target_ratio: float | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """ZFP-path compression of a 2-D KV page (e.g. (tokens, heads*dh)).
+    """ZFP-path compression of a 2-D or 3-D KV page: (tokens, heads*dh)
+    flat pages, or (pages, page_tokens, heads*dh) paged-attention stacks —
+    the latter ride the 4x4x4 kernel tier (DESIGN.md §3.5), which exploits
+    cross-page correlation of adjacent pages instead of flattening it away.
 
     With `target_ratio` set, the error bound is solved in-graph from the
     page's byte budget (see module docstring) and `eb_rel` is ignored;

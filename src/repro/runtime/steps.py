@@ -6,13 +6,11 @@ explicit param/optimizer trees (no global state) and are pure.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import nn as rnn
 from repro.models.model import BaseLM
 from repro.optim import adamw, compress
 

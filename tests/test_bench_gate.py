@@ -1,0 +1,115 @@
+"""Unit tests for the CI bench gate's comparator (tools/bench_gate.py).
+
+The gate's measurement half runs real benches (too slow for tier-1 — the
+CI `bench` job runs it end to end); the COMPARATOR half is pure dict
+logic and must be airtight: a missed decision flip or a mis-thresholded
+ratio silently re-opens the regression hole the gate exists to close.
+"""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _load_gate():
+    spec = importlib.util.spec_from_file_location(
+        "bench_gate", ROOT / "tools" / "bench_gate.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["bench_gate"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _metrics(codec="sz", eb_sz=1.0, speedup=3.0, err=0.1):
+    return {
+        "decisions": {"f": {"codec": codec, "eb_sz": eb_sz}},
+        "ratios": {"kernels3d_encode_stats_speedup": speedup},
+        "estimation_error_b": err,
+    }
+
+
+def _baseline():
+    return {
+        "decisions": {"table40": {"f": {"codec": "sz", "eb_sz": 1.0}}},
+        "ratios": {"kernels3d_encode_stats_speedup": 3.0},
+        "estimation_error_b": 0.1,
+    }
+
+
+def test_gate_passes_on_identical_metrics(monkeypatch):
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    checks = bg.gate(_metrics(), _baseline())
+    assert checks and all(c["passed"] for c in checks)
+
+
+def test_gate_fails_on_decision_flip(monkeypatch):
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    checks = bg.gate(_metrics(codec="zfp"), _baseline())
+    bad = [c for c in checks if not c["passed"]]
+    assert len(bad) == 1 and bad[0]["name"] == "decisions[table40]"
+    # a moved iso-PSNR bound (eb_sz) is a flip too
+    checks = bg.gate(_metrics(eb_sz=1.001), _baseline())
+    assert not [c for c in checks if c["name"] == "decisions[table40]"][0]["passed"]
+
+
+def test_gate_ratio_threshold_is_20_percent(monkeypatch):
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    ok = bg.gate(_metrics(speedup=2.5), _baseline())  # floor = 2.4
+    assert all(c["passed"] for c in ok)
+    bad = bg.gate(_metrics(speedup=2.3), _baseline())
+    assert not [c for c in bad if "kernels3d" in c["name"]][0]["passed"]
+
+
+def test_gate_estimation_error_ceiling(monkeypatch):
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    # ceil = 0.1 * 1.2 + 0.05 = 0.17
+    ok = bg.gate(_metrics(err=0.16), _baseline())
+    assert all(c["passed"] for c in ok)
+    bad = bg.gate(_metrics(err=0.2), _baseline())
+    assert not [c for c in bad if c["name"] == "estimation_error_b"][0]["passed"]
+
+
+def test_gate_fails_closed_on_unbaselined_field(monkeypatch):
+    """A field added to the smoke suite without --update-baseline must
+    fail the decision check, not ride along ungated."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    m = _metrics()
+    m["decisions"]["new_field"] = {"codec": "sz", "eb_sz": 2.0}
+    checks = bg.gate(m, _baseline())
+    dec = [c for c in checks if c["name"] == "decisions[table40]"][0]
+    assert not dec["passed"] and "new_field (no baseline)" in dec["detail"]
+
+
+def test_gate_fails_closed_without_baseline_key(monkeypatch):
+    """A missing env key / metric must FAIL, not silently pass — fail-open
+    gates rot."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table5")
+    checks = bg.gate(_metrics(), _baseline())
+    assert not [c for c in checks if c["name"] == "decisions[table5]"][0]["passed"]
+    checks = bg.gate(_metrics(), {})
+    assert not any(c["passed"] for c in checks)
+
+
+def test_committed_baseline_covers_both_env_keys():
+    """benchmarks/baseline.json must carry decisions for BOTH Huffman-table
+    environments (zstd and bare), like the golden suite, so the gate works
+    in the bare tier-1 env and in the full CI env."""
+    import json
+
+    base = json.loads((ROOT / "benchmarks" / "baseline.json").read_text())
+    assert {"table5", "table40"} <= set(base["decisions"])
+    assert set(base["ratios"]) == {
+        "kernels3d_encode_stats_speedup",
+        "selection_batched_speedup",
+        "sharded_save_speedup",
+    }
+    assert base["estimation_error_b"] >= 0.0

@@ -43,13 +43,16 @@ BR_ATOL = 5e-3
 
 
 def _suite_fields():
-    from benchmarks.common import atm_suite, hurricane_suite
+    from benchmarks.common import atm_suite, hurricane_suite, nyx_suite
 
     fields = {}
     fields.update({f"atm/{k}": v for k, v in atm_suite(8, size=(96, 192)).items()})
     fields.update(
         {f"hur/{k}": v for k, v in hurricane_suite(6, size=(16, 48, 48)).items()}
     )
+    # genuinely-3-D volumes big enough for the 3-D kernel tier (ISSUE 4):
+    # exercises the 4x4x4 batched Stage I/II stats end to end
+    fields.update({f"nyx/{k}": v for k, v in nyx_suite(4, size=(32, 32, 32)).items()})
     return fields
 
 

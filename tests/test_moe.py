@@ -1,6 +1,5 @@
 """MoE dispatch correctness: sort-based capacity dispatch vs direct compute."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -44,6 +44,9 @@ def _mixed_tree(mesh, seed=0):
         "dp": mk((128, 96), P("data", None)),
         "tp": mk((96, 128), P(None, "model")),
         "both": mk((64, 64, 32), P("data", "model", None)),
+        # genuinely-3-D volume with the LAST view dim sharded: the halo
+        # plane ppermutes along the minor axis too (ISSUE 4, 4x4x4 tier)
+        "vol": mk((32, 64, 64), P("data", None, "model"), walk_axis=2),
         "repl": mk((128, 64), P()),
         "conv": mk((2, 3, 8, 32, 32), P()),  # 5-D fold
         "rough": jax.device_put(
@@ -167,6 +170,8 @@ def test_fixed_accuracy_decision_parity(mesh, reconcile):
         assert s.eb_sz == r.eb_sz, (name, reconcile)
         codecs.add(s.codec)
         reconciles.add(p.reconcile)
+        if name == "vol":  # the 3-D volume must ride the engine, not gather
+            assert p.reconcile == reconcile, (name, p.reconcile)
         if reconcile == "samples":
             # bit-identical estimates for EVERY field — engine members and
             # host-fallback members merge into the unsharded batch packing,
@@ -258,6 +263,7 @@ def test_restore_under_different_mesh(mesh, tmp_path):
             "dp": NamedSharding(mesh2, P("data", None)),
             "tp": NamedSharding(mesh2, P(None, "model")),
             "both": NamedSharding(mesh2, P("data", "model", None)),
+            "vol": NamedSharding(mesh2, P("data", None, "model")),
             "repl": NamedSharding(mesh2, P()),
             "conv": NamedSharding(mesh2, P()),
             "rough": NamedSharding(mesh2, P("data", None)),
@@ -304,6 +310,7 @@ def test_sharded_segments_layout(mesh, tmp_path):
     assert len(by_name["dp"]["segments"]) == 2  # 2-way 'data' sharding
     assert len(by_name["tp"]["segments"]) == 4  # 4-way 'model' sharding
     assert len(by_name["both"]["segments"]) == 8
+    assert len(by_name["vol"]["segments"]) == 8  # 3-D: 2-way z x 4-way x
     for fl in man["fields"]:
         covered = 0
         for sg in fl["segments"]:

@@ -1,0 +1,258 @@
+#!/usr/bin/env python
+"""CI benchmark-regression gate (ISSUE 4): a small-shape smoke subset of
+the benchmark harness, compared against a committed baseline.
+
+Per FRaZ (Underwood et al. 2020) and the black-box ratio-prediction work
+(Underwood et al. 2023), compressor throughput/ratio regressions are
+silent and workload-dependent — nothing in the unit tests notices when a
+refactor halves the batched engine's speedup or flips a borderline
+selection. This gate runs four smoke benches and fails the job when:
+
+* any **decision flips** vs the committed baseline (exact codec + matched
+  SZ bound per smoke field, keyed by the environment's Huffman-table cost
+  like the golden suite), or
+* any **throughput ratio regresses by more than 20%** vs the baseline.
+
+Throughput is tracked as *ratios* (batched-vs-per-field selection speedup,
+3-D-kernel-vs-fallback speedup, shard-local-vs-gather save speedup) and
+estimation quality as bits/value error — machine-relative numbers a
+committed baseline can gate across runner generations; raw wall times are
+recorded in the report but never gated.
+
+  python tools/bench_gate.py --out BENCH_4.json     # gate (CI `bench` job)
+  python tools/bench_gate.py --update-baseline      # refresh the baseline
+  REPRO_SZ_TABLE_BITS=5 python tools/bench_gate.py --update-baseline \
+      --decisions-only                              # other env's decisions
+
+Needs PYTHONPATH=src (and the repo root on sys.path for `benchmarks.*`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+# the sharded smoke needs the emulated devices BEFORE jax initializes
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+ROOT = Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+if str(ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(ROOT / "src"))
+
+BASELINE = ROOT / "benchmarks" / "baseline.json"
+#: a ratio may lose at most this fraction vs its committed baseline
+MAX_REGRESSION = 0.20
+#: absolute slack (bits/value) on the estimation-error metric, so a
+#: near-zero baseline does not gate on noise
+EST_ABS_SLACK = 0.05
+
+
+def _env_key() -> str:
+    from repro.core import estimator as est
+
+    return f"table{int(est.TABLE_BITS_PER_SYMBOL)}"
+
+
+def _smoke_fields() -> dict:
+    """Small fixed suite spanning 2-D and genuinely-3-D fields (ATM /
+    Hurricane / NYX-like, the paper's three datasets at smoke scale)."""
+    from benchmarks.common import atm_suite, hurricane_suite, nyx_suite
+
+    fields = {}
+    fields.update({f"atm/{k}": v for k, v in atm_suite(4, size=(96, 192)).items()})
+    fields.update(
+        {f"hur/{k}": v for k, v in hurricane_suite(3, size=(16, 48, 48)).items()}
+    )
+    fields.update({f"nyx/{k}": v for k, v in nyx_suite(3, size=(32, 32, 32)).items()})
+    return fields
+
+
+def _smoke_selections():
+    """One selection pass shared by the decision and estimation metrics."""
+    from repro.core import select_many
+
+    fields = _smoke_fields()
+    sels = select_many(list(fields.values()), eb_rel=1e-3)
+    return fields, sels
+
+
+def bench_decisions(fields, sels) -> dict:
+    """Selection smoke: the full decision tuple per field (flip gate)."""
+    return {
+        name: {"codec": s.codec, "eb_sz": round(float(s.eb_sz), 10)}
+        for name, s in zip(fields, sels)
+    }
+
+
+def bench_estimation_error(fields, sels) -> float:
+    """Estimation smoke: mean |estimated - actual| bits/value over the
+    smoke fields on each field's SELECTED codec (the §4–§5 estimators'
+    end-to-end job; rises when either estimator drifts)."""
+    import numpy as np
+
+    from repro.core import sz_compress, zfp_compress
+
+    errs = []
+    for f, s in zip(fields.values(), sels):
+        if s.codec == "sz":
+            actual = 8.0 * len(sz_compress(f, s.eb_sz)) / f.size
+            errs.append(abs(float(s.br_sz) - actual))
+        elif s.codec == "zfp":
+            actual = 8.0 * len(zfp_compress(f, s.eb_abs)) / f.size
+            errs.append(abs(float(s.br_zfp) - actual))
+    return float(np.mean(errs))
+
+
+def _csv_cell(rows: list[str], row: int, col_name: str) -> str:
+    header = rows[0].split(",")
+    return rows[row].split(",")[header.index(col_name)]
+
+
+def bench_ratios(repeat: int) -> tuple[dict, dict]:
+    """The three throughput ratios + raw timings (recorded, not gated)."""
+    from benchmarks import bench_kernels3d, bench_selection, bench_sharded
+
+    raw: dict = {}
+    k3 = bench_kernels3d.run(sizes=(64,), repeat=repeat)
+    raw["kernels3d"] = k3
+    sel = bench_selection.run_many(n_fields=12, repeat=repeat)
+    raw["selection_many"] = sel
+    sh = bench_sharded.run(n_fields=6, dim=768, repeat=repeat)
+    raw["sharded"] = sh
+    ratios = {
+        "kernels3d_encode_stats_speedup": float(
+            _csv_cell(k3, 1, "speedup_encode_stats")
+        ),
+        "selection_batched_speedup": float(_csv_cell(sel, 1, "speedup")),
+        "sharded_save_speedup": float(_csv_cell(sh, 2, "speedup_vs_gather")),
+    }
+    return ratios, raw
+
+
+def gate(metrics: dict, baseline: dict) -> list[dict]:
+    """Compare current metrics against the baseline -> list of checks."""
+    checks: list[dict] = []
+    key = _env_key()
+    base_dec = baseline.get("decisions", {}).get(key)
+    if base_dec is None:
+        checks.append(
+            dict(
+                name=f"decisions[{key}]",
+                passed=False,
+                detail=f"no baseline for {key}; run --update-baseline "
+                "(with REPRO_SZ_TABLE_BITS if cross-generating)",
+            )
+        )
+    else:
+        cur = metrics["decisions"]
+        flips = [
+            n
+            for n in base_dec
+            if n not in cur
+            or cur[n]["codec"] != base_dec[n]["codec"]
+            or abs(cur[n]["eb_sz"] - base_dec[n]["eb_sz"])
+            > 1e-5 * max(abs(base_dec[n]["eb_sz"]), 1e-30)
+        ]
+        # fields in the smoke suite but not in the baseline are UNGATED —
+        # fail closed so an extended suite forces an --update-baseline
+        flips += sorted(f"{n} (no baseline)" for n in set(cur) - set(base_dec))
+        checks.append(
+            dict(
+                name=f"decisions[{key}]",
+                passed=not flips,
+                detail=f"flipped/moved/unbaselined: {flips}" if flips else
+                f"{len(base_dec)} decisions stable",
+            )
+        )
+    for name, cur in metrics["ratios"].items():
+        base = baseline.get("ratios", {}).get(name)
+        if base is None:
+            checks.append(dict(name=name, passed=False, detail="no baseline"))
+            continue
+        floor = base * (1.0 - MAX_REGRESSION)
+        checks.append(
+            dict(
+                name=name,
+                passed=cur >= floor,
+                detail=f"{cur:.2f}x vs baseline {base:.2f}x (floor {floor:.2f}x)",
+            )
+        )
+    base_err = baseline.get("estimation_error_b")
+    cur_err = metrics["estimation_error_b"]
+    if base_err is None:
+        checks.append(dict(name="estimation_error_b", passed=False, detail="no baseline"))
+    else:
+        ceil = base_err * (1.0 + MAX_REGRESSION) + EST_ABS_SLACK
+        checks.append(
+            dict(
+                name="estimation_error_b",
+                passed=cur_err <= ceil,
+                detail=f"{cur_err:.3f} b/v vs baseline {base_err:.3f} (ceil {ceil:.3f})",
+            )
+        )
+    return checks
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_4.json", help="report path")
+    ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument(
+        "--decisions-only",
+        action="store_true",
+        help="with --update-baseline: merge only this env's decisions "
+        "(keeps committed ratios — for REPRO_SZ_TABLE_BITS cross-keys)",
+    )
+    ap.add_argument("--repeat", type=int, default=3)
+    args = ap.parse_args()
+
+    key = _env_key()
+    print(f"bench gate: environment key {key}", flush=True)
+    fields, sels = _smoke_selections()
+    metrics: dict = {"decisions": bench_decisions(fields, sels)}
+    print(f"  decisions: {len(metrics['decisions'])} fields", flush=True)
+    if not (args.update_baseline and args.decisions_only):
+        metrics["estimation_error_b"] = bench_estimation_error(fields, sels)
+        print(f"  estimation error: {metrics['estimation_error_b']:.3f} b/v", flush=True)
+        metrics["ratios"], raw = bench_ratios(args.repeat)
+        for n, v in metrics["ratios"].items():
+            print(f"  {n}: {v:.2f}x", flush=True)
+
+    if args.update_baseline:
+        baseline = json.loads(BASELINE.read_text()) if BASELINE.exists() else {}
+        baseline.setdefault("decisions", {})[key] = metrics["decisions"]
+        if not args.decisions_only:
+            baseline["ratios"] = metrics["ratios"]
+            baseline["estimation_error_b"] = metrics["estimation_error_b"]
+        BASELINE.write_text(json.dumps(baseline, indent=1, sort_keys=True) + "\n")
+        print(f"baseline updated: {BASELINE}")
+        return 0
+
+    baseline = json.loads(BASELINE.read_text()) if BASELINE.exists() else {}
+    checks = gate(metrics, baseline)
+    ok = all(c["passed"] for c in checks)
+    report = {
+        "env_key": key,
+        "pass": ok,
+        "checks": checks,
+        "metrics": metrics,
+        "raw_rows": raw,
+    }
+    Path(args.out).write_text(json.dumps(report, indent=1, sort_keys=True) + "\n")
+    for c in checks:
+        print(f"  [{'PASS' if c['passed'] else 'FAIL'}] {c['name']}: {c['detail']}")
+    print(("PASS" if ok else "FAIL") + f" — report at {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
