@@ -15,15 +15,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import decompress, encode_with_selection, solve_many
+from repro.core import Policy, decompress, encode_with_selection, solve_many
 from .common import SUITES, csv_row, psnr as _psnr, timer
 
 
 def _run_mode(fields, mode, target):
-    kw = {"target_psnr": target} if mode == "fixed_psnr" else {"target_ratio": target}
+    pol = Policy.fixed_psnr(target) if mode == "fixed_psnr" else Policy.fixed_ratio(target)
     arrs = list(fields.values())
-    solve_many(arrs, mode, **kw)  # warm the sweep jit cache before timing
-    sols, t_solve = timer(solve_many, arrs, mode, **kw)
+    solve_many(arrs, pol)  # warm the sweep jit cache before timing
+    sols, t_solve = timer(solve_many, arrs, pol)
     encs, t_encode = timer(
         lambda: [encode_with_selection(a, s.selection) for a, s in zip(arrs, sols)]
     )

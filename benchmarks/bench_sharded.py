@@ -39,6 +39,7 @@ def run(n_fields: int = 8, dim: int = 1024, repeat: int = 3, eb_rel: float = 1e-
     import jax
 
     from repro.checkpoint import CheckpointConfig, CheckpointManager
+    from repro.core import Policy
     from repro.launch.mesh import make_emulated_mesh
     from repro.launch.shardckpt import synth_state
 
@@ -55,7 +56,10 @@ def run(n_fields: int = 8, dim: int = 1024, repeat: int = 3, eb_rel: float = 1e-
     for strategy, sharded in (("gather_then_compress", False), ("shard_local", True)):
         with tempfile.TemporaryDirectory() as d:
             mgr = CheckpointManager(
-                CheckpointConfig(directory=d, eb_rel=eb_rel, sharded=sharded, keep_n=1)
+                CheckpointConfig(
+                    directory=d, policy=Policy.fixed_accuracy(eb_rel=eb_rel),
+                    sharded=sharded, keep_n=1,
+                )
             )
             t0 = time.perf_counter()
             mgr.save(0, tree)  # compiles (shard_map program / jit cache)

@@ -2,8 +2,9 @@
 (the paper's fields == named tensors), report per-field selection bits,
 compression ratio, and verify the error bound on every tensor — then do
 the same under quality targets (DESIGN.md §7): a fixed-PSNR checkpoint
-("every tensor at 60 dB") and a fixed-ratio checkpoint ("8x smaller"),
-where the controller solves each tensor's bound instead of being told.
+("every tensor at 60 dB"), a fixed-ratio checkpoint ("8x smaller"), and
+finally a MIXED `PolicySet` tree — weights on a fixed-accuracy bound,
+optimizer state on a fixed-ratio budget — one checkpoint, two contracts.
 
   PYTHONPATH=src python examples/compress_checkpoint.py
 """
@@ -14,6 +15,7 @@ import jax
 from repro.configs import get_config
 from repro.models import build_model, reduced_for_smoke
 from repro.models import nn as rnn
+from repro.core import Policy, PolicySet
 from repro.core.api import compress_pytree, decompress_pytree
 
 
@@ -22,7 +24,7 @@ def main():
     model = build_model(cfg)
     params = rnn.init_tree(model.desc(), jax.random.key(0))
     eb_rel = 1e-4
-    ct = compress_pytree(params, eb_rel=eb_rel)
+    ct = compress_pytree(params, Policy.fixed_accuracy(eb_rel=eb_rel))
     print(f"tensors: {len(ct.fields)}; raw {ct.raw_nbytes/1e6:.1f} MB -> "
           f"{ct.nbytes/1e6:.1f} MB (CR {ct.ratio:.2f}x) at eb_rel={eb_rel:g}")
     picks = {}
@@ -49,7 +51,7 @@ def main():
     # (raw-fallback tensors — constant, tiny — are bit-exact, not "on
     # target", so filter by the selection bit, not by size)
     target_db = 60.0
-    ct = compress_pytree(params, mode="fixed_psnr", target_psnr=target_db)
+    ct = compress_pytree(params, Policy.fixed_psnr(target_db))
     rec = decompress_pytree(ct)
     names = list(ct.fields)
     psnrs = [
@@ -66,9 +68,26 @@ def main():
 
     # fixed-ratio checkpoint: a storage contract, not a bound
     target_ratio = 8.0
-    ct = compress_pytree(params, mode="fixed_ratio", target_ratio=target_ratio)
+    ct = compress_pytree(params, Policy.fixed_ratio(target_ratio))
     print(f"fixed_ratio {target_ratio:g}x: tree CR {ct.ratio:.2f}x "
           f"(raw-fallback leaves drag the tree total below the per-leaf target)")
+
+    # mixed PolicySet: one train state, two contracts — weights keep a
+    # hard bound, optimizer moments fit a byte budget (first match wins)
+    state = {
+        "params": params,
+        "opt": jax.tree_util.tree_map(lambda p: 0.1 * np.asarray(p), params),
+    }
+    pset = PolicySet(
+        default=Policy.fixed_accuracy(eb_rel=eb_rel),
+        rules=[("opt/*", Policy.fixed_ratio(target_ratio))],
+    )
+    ct = compress_pytree(state, pset)
+    n_opt = sum(1 for n in ct.fields if n.startswith("opt/"))
+    print(f"mixed PolicySet: {len(ct.fields) - n_opt} weight tensors at "
+          f"eb_rel={eb_rel:g}, {n_opt} optimizer tensors at "
+          f"{target_ratio:g}x; tree CR {ct.ratio:.2f}x")
+    decompress_pytree(ct)  # round-trips like any single-policy tree
 
 
 if __name__ == "__main__":

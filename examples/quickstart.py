@@ -12,6 +12,7 @@ then flips the contract around with the quality-target controller
 import numpy as np
 
 from repro.core import (
+    Policy,
     compress,
     select,
     select_and_compress,
@@ -63,16 +64,17 @@ def main():
         print(f"  selection bit s_i = {cf.codec!r}; CR = {compression_ratio(cf):.2f}x")
         print(f"  max |err| / eb = {err / eb:.3f}  (bounded: {err <= eb * 1.001})\n")
 
-    # quality targets (DESIGN.md §7): name the quality, not the bound
+    # quality targets (DESIGN.md §7): a Policy names the quality, not the
+    # bound — the same object every other layer takes (core/policy.py)
     print("fixed-PSNR: 'give me 60 dB'")
     for name, field in make_fields().items():
-        cf = compress(field, "fixed_psnr", target_psnr=60.0)
+        cf = compress(field, Policy.fixed_psnr(60.0))
         rec = decompress(cf)
         print(f"  {name}: codec={cf.codec!r} achieved {psnr(field, rec):.2f} dB "
               f"at CR {compression_ratio(cf):.2f}x")
     print("fixed-ratio: 'give me 8x'")
     for name, field in make_fields().items():
-        cf = compress(field, "fixed_ratio", target_ratio=8.0)
+        cf = compress(field, Policy.fixed_ratio(8.0))
         rec = decompress(cf)
         print(f"  {name}: codec={cf.codec!r} achieved CR {compression_ratio(cf):.2f}x "
               f"at {psnr(field, rec):.2f} dB")

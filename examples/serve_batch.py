@@ -1,15 +1,32 @@
 """Batched serving example: prefill + greedy decode with a KV cache on the
-smoke-size smollm config.
+smoke-size smollm config, then page-out compression of a KV page under a
+byte-budget `Policy` (DESIGN.md §2 layer 3, §7) — the same quality object
+the checkpoint and pytree layers take.
 
   PYTHONPATH=src python examples/serve_batch.py
 """
 
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Policy
 from repro.launch import serve as serve_mod
+from repro.runtime import kvcomp
 
 
 def main():
     serve_mod.main(["--arch", "smollm-360m", "--smoke", "--batch", "4",
                     "--prompt-len", "64", "--gen", "32"])
+
+    # KV page-out under a Policy: give the page a byte budget and let the
+    # in-graph estimator solve the bound (no trial compressions)
+    rng = np.random.default_rng(0)
+    page = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    for policy in (Policy.fixed_accuracy(eb_rel=1e-2), Policy.fixed_ratio(8.0)):
+        recon, bits = kvcomp.bot_compress_kv(page, policy)
+        achieved = 32.0 * page.size / float(jnp.sum(bits))
+        err = float(jnp.max(jnp.abs(recon - page)))
+        print(f"[kv] {policy.mode}: page CR {achieved:.2f}x, max|err| {err:.3g}")
 
 
 if __name__ == "__main__":

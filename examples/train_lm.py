@@ -1,5 +1,8 @@
 """End-to-end driver: train a ~100M-param dense LM for a few hundred steps
 with lossy-compressed checkpoints + error-feedback compressed gradients.
+Checkpoints carry a mixed `PolicySet` (DESIGN.md §2): weights on a
+fixed-accuracy bound, optimizer state on an 8x fixed-ratio budget
+(`--ckpt-opt-ratio` in launch/train.py).
 
   PYTHONPATH=src python examples/train_lm.py [--steps 300]
 
@@ -26,6 +29,7 @@ def main():
             "--batch", "8",
             "--ckpt-dir", args.ckpt_dir,
             "--ckpt-every", "100",
+            "--ckpt-opt-ratio", "8",
             "--compress-ckpt",
             "--compress-grads",
             "--resume",

@@ -1,35 +1,40 @@
 """Fault-tolerant checkpointing with the paper's per-field codec selection.
 
-Two layouts, both behind one reader:
+Two layouts, both behind one reader (manifest v3; the `layout` key picks
+the reader):
 
-v1 (unsharded — `CheckpointConfig.sharded=False`): tensors are gathered
-and saved whole, so a restarted job may reload under ANY device count /
-mesh (elastic scaling by gathering):
+flat (`CheckpointConfig.sharded=False`): tensors are gathered and saved
+whole, so a restarted job may reload under ANY device count / mesh
+(elastic scaling by gathering):
 
   <dir>/step_000123/
-    manifest.json   # step, field table (name, codec s_i, shape, dtype,
-                    # offset, nbytes, eb), config hash, wall time
-    data.bin        # concatenated per-field streams (SZ/ZFP/raw)
+    manifest.json   # version: 3, layout: "flat"; the Policy/PolicySet
+                    # spec; field table (name, codec s_i, shape, dtype,
+                    # offset, nbytes, eb, resolved policy); wall time
+    data.bin        # concatenated per-field streams (codec registry)
   <dir>/LATEST      # atomic pointer (written last)
 
-v2 (sharded — `CheckpointConfig.sharded=True`, DESIGN.md §6): the
+segments (`CheckpointConfig.sharded=True`, DESIGN.md §6): the
 shard-local engine (`core/sharded.py`) makes every codec decision from
 per-shard statistics reconciled with a psum — no full-tensor gather —
 and each field is encoded as per-shard *segments*, written to per-host
 data files:
 
   <dir>/step_000123/
-    manifest.json      # version: 2; per field: codec, eb, view_shape and
-                       # a segment table [{start, stop, codec, host,
+    manifest.json      # version: 3, layout: "segments"; per field:
+                       # codec, eb, view_shape, resolved policy and a
+                       # segment table [{start, stop, codec, host,
                        # offset, nbytes}] in folded-view coordinates
     data.<host>.bin    # this host's segments, concatenated
   <dir>/LATEST
 
 Restore is elastic for both layouts: `restore` reassembles full tensors
-from whatever segments exist (a v2 checkpoint saved on 8 devices reloads
-on 1, 4, or 32 — segment reassembly is mesh-free), and
+from whatever segments exist (a segment checkpoint saved on 8 devices
+reloads on 1, 4, or 32 — segment reassembly is mesh-free), and
 `restore_tree(shardings=...)` re-shards the result onto ANY target mesh.
-The v1 single-file layout stays readable forever.
+Pre-policy checkpoints stay readable forever: v1 manifests (no version
+key, flat) and v2 manifests (version: 2, segments) dispatch to the same
+readers. Every restored leaf is a WRITEABLE array.
 
 Writes are atomic (tmp dir + rename); `keep_n` old checkpoints are pruned;
 `async_save` runs serialization+IO off the training thread (the in-situ
@@ -37,26 +42,41 @@ model of the paper: compress while the next step computes) and re-raises
 any worker exception from `wait()` — encoder failures are never silently
 dropped.
 
-Codec selection is batched: ALL lossy fields go through one
-`select_many` estimator launch (one padded block batch, one device
-round-trip per checkpoint) — or one shard-local `plan_tree` launch in v2 —
-then per-field SZ/ZFP byte encoding runs on a `workers`-wide thread pool
-so encoding of field i overlaps with encoding of field j and with the
-sequential writer draining results in order.
+Codec selection is batched: ALL lossy fields of one policy group go
+through one `select_many`/`solve_many` estimator launch (one padded
+block batch, one device round-trip per group) — or one shard-local
+`plan_tree` launch in the segment layout — then per-field byte encoding
+runs on a `workers`-wide thread pool so encoding of field i overlaps
+with encoding of field j and with the sequential writer draining results
+in order.
 
-Weights default to lossy (value-range-relative eb, Algorithm 1 per tensor);
-optimizer state defaults to raw (Adam moments are cheap to compress but
-sensitive near zero) — both policies are per-call overridable. In v2,
-policy-raw leaves also write per-shard segments (exact original-dtype
-bytes, codec ``none``), so optimizer state never gathers either.
+Quality travels as a `Policy` / `PolicySet` (`core/policy.py`,
+DESIGN.md §2, §7): `CheckpointConfig.policy` holds the per-tensor
+contract — the bound-centric default (``Policy.fixed_accuracy()``),
+``Policy.fixed_psnr(db)`` / ``Policy.fixed_ratio(x)`` solved by the
+quality-target controller ("every checkpoint is 8x smaller" as a storage
+contract), or a `PolicySet` mixing contracts per tensor name
+("weights at eb_rel 1e-4, `opt/*` at 8x"). Tensors are grouped by
+resolved policy and each group rides one batched decision launch.
 
-Quality targets (DESIGN.md §7): `CheckpointConfig.mode` switches the lossy
-policy from the bound-centric default (``fixed_accuracy`` + `eb_rel`) to
-``fixed_psnr`` / ``fixed_ratio``, where the quality-target controller
-solves each tensor's error bound from `target_psnr` (dB) or `target_ratio`
-(x vs 32-bit raw) — e.g. "every checkpoint is 8x smaller" as a storage
-contract. The manifest records the mode and target next to the per-field
-bounds, so restore-side tooling can audit what was promised.
+With a bare `Policy`, weights default to lossy and optimizer state
+(`opt/*`) to raw (Adam moments are cheap to compress but sensitive near
+zero) via the default `lossy` callable; with a `PolicySet`, the set's
+rules govern everything (map `opt/*` to `Policy.raw()` — or to a lossy
+policy — yourself). In the segment layout, policy-raw leaves also write per-shard
+segments (exact original-dtype bytes, codec ``none``), so optimizer
+state never gathers either.
+
+Manifests are **v3**: `layout` ("flat" | "segments") picks the reader,
+the top-level `policy` records the configured Policy/PolicySet spec, and
+every field row records its *resolved* policy next to the codec and
+bound — restore-side tooling can audit exactly what each tensor was
+promised. v1 (no version key) and v2 (`version: 2`, segment layout)
+checkpoints stay readable behind the same `restore`.
+
+The legacy kwarg spelling (`CheckpointConfig(eb_rel=...)`, `mode=`,
+`target_psnr=`, `target_ratio=`, `r_sp=`) shims onto an equivalent
+`Policy` with a `DeprecationWarning`; decisions and bytes are unchanged.
 """
 
 from __future__ import annotations
@@ -74,26 +94,62 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
-from repro.core import controller
+from repro.core import codecs, controller
 from repro.core import selector as sel
+from repro.core.policy import (
+    Policy,
+    PolicySet,
+    as_policy_set,
+    group_by_policy,
+    policy_from_kwargs,
+    policy_set_spec,
+)
 
 
 @dataclasses.dataclass
 class CheckpointConfig:
     directory: str
     keep_n: int = 3
-    eb_rel: float = 1e-4
+    # the quality contract (DESIGN.md §2, §7): one Policy for every lossy
+    # tensor, or a PolicySet resolving one per tensor name. Default:
+    # Policy.fixed_accuracy() (eb_rel 1e-4).
+    policy: Policy | PolicySet | None = None
     compress: bool = True
-    r_sp: float = 0.05
     workers: int = 4  # thread-pool width for per-field byte encoding (0 = serial)
-    # quality-target mode (DESIGN.md §7): "fixed_accuracy" uses eb_rel;
-    # "fixed_psnr" / "fixed_ratio" solve per-tensor bounds from the target
-    mode: str = "fixed_accuracy"
+    # shard-local engine (DESIGN.md §6): decisions from per-shard statistics,
+    # per-shard segment encoding, segment-layout manifest — no gather
+    sharded: bool = False
+    # deprecated kwarg spelling (None = unset) — shimmed onto `policy`
+    eb_rel: float | None = None
+    r_sp: float | None = None
+    mode: str | None = None
     target_psnr: float | None = None
     target_ratio: float | None = None
-    # shard-local engine (DESIGN.md §6): decisions from per-shard statistics,
-    # per-shard segment encoding, v2 manifest — no full-tensor gather
-    sharded: bool = False
+
+    def __post_init__(self):
+        if isinstance(self.policy, (int, float)):
+            # old positional `eb_rel` in the policy slot
+            if self.eb_rel is not None:
+                raise ValueError("CheckpointConfig: eb_rel given twice")
+            self.eb_rel, self.policy = float(self.policy), None
+        legacy = (self.eb_rel, self.r_sp, self.mode, self.target_psnr, self.target_ratio)
+        if any(v is not None for v in legacy):
+            if self.policy is not None:
+                raise ValueError(
+                    "CheckpointConfig: pass either policy= or the legacy "
+                    "quality kwargs, not both"
+                )
+            self.policy = policy_from_kwargs(
+                "CheckpointConfig", mode=self.mode, eb_rel=self.eb_rel,
+                target_psnr=self.target_psnr, target_ratio=self.target_ratio,
+                r_sp=self.r_sp, default_eb_rel=1e-4, stacklevel=4,
+            )
+        elif self.policy is None:
+            self.policy = Policy.fixed_accuracy()
+
+    @property
+    def policy_set(self) -> PolicySet:
+        return as_policy_set(self.policy)
 
 
 def _leaf_items(tree: Any) -> list[tuple[str, np.ndarray]]:
@@ -122,6 +178,15 @@ def _treedef_of(tree: Any):
     return jax.tree_util.tree_structure(tree)
 
 
+#: spec recorded for leaves that ride raw (non-float, lossy-rejected, or
+#: policy-raw) — the manifest row's `policy` key is always present in v3
+_RAW_SPEC = {"mode": "raw"}
+
+
+def _field_policy_spec(pol: Policy | None) -> dict:
+    return pol.spec() if pol is not None else dict(_RAW_SPEC)
+
+
 class CheckpointManager:
     def __init__(self, cfg: CheckpointConfig):
         self.cfg = cfg
@@ -131,14 +196,45 @@ class CheckpointManager:
 
     # -- save ---------------------------------------------------------------
 
+    def _default_lossy(self) -> Callable[[str], bool]:
+        """With a bare Policy, optimizer state (`opt/*`) defaults to raw;
+        with a PolicySet the rules govern raw-ness themselves, so every
+        eligible leaf goes through policy resolution."""
+        if isinstance(self.cfg.policy, PolicySet):
+            return lambda name: True
+        return lambda name: not name.startswith("opt/")
+
+    def _resolve_policies(
+        self, items: list, lossy: Callable[[str], bool]
+    ) -> dict[int, Policy]:
+        """index -> resolved Policy for every leaf that will compress:
+        float, >= 64 values, accepted by `lossy`, and not policy-raw."""
+        cfg = self.cfg
+        pset = cfg.policy_set
+        pol_of: dict[int, Policy] = {}
+        for i, (name, leaf) in enumerate(items):
+            if not (
+                cfg.compress
+                and lossy(name)
+                and np.issubdtype(leaf.dtype, np.floating)
+                and leaf.size >= 64
+            ):
+                continue
+            pol = pset.resolve(name)
+            if pol.mode == "raw":
+                continue
+            pol_of[i] = pol
+        return pol_of
+
     def save(self, step: int, tree: Any, lossy: Callable[[str], bool] | None = None) -> str:
-        """Synchronous atomic save. `lossy(name)` selects per-field policy
-        (default: float leaves not under 'opt/' are lossy-compressed).
-        With `cfg.sharded`, writes the v2 per-shard segment layout via the
-        shard-local engine (DESIGN.md §6) — no full-tensor gather."""
+        """Synchronous atomic save. Each tensor's quality policy comes from
+        `cfg.policy` (a `PolicySet` resolves per name); `lossy(name)` is a
+        hard per-call override forcing names to raw (default: with a bare
+        Policy, float leaves under 'opt/' ride raw). With `cfg.sharded`,
+        writes the per-shard segment layout via the shard-local engine
+        (DESIGN.md §6) — no full-tensor gather."""
         if lossy is None:
-            def lossy(name):
-                return not name.startswith("opt/")
+            lossy = self._default_lossy()
         if self.cfg.sharded:
             return self._save_sharded(step, tree, lossy)
         cfg = self.cfg
@@ -148,28 +244,21 @@ class CheckpointManager:
         fields = []
         t0 = time.time()
         items = _leaf_items(tree)
-        lossy_idx = [
-            i
-            for i, (name, arr) in enumerate(items)
-            if cfg.compress
-            and lossy(name)
-            and np.issubdtype(arr.dtype, np.floating)
-            and arr.size >= 64
-        ]
+        pol_of = self._resolve_policies(items, lossy)
         # Steps 1-3 for every lossy field in ONE batched estimator launch
-        # per round (the solvers cast to f32 one field at a time and keep
-        # only the sampled blocks, so no full-tree f32 copy materializes)
-        lossy_fields = [items[i][1] for i in lossy_idx]
-        if cfg.mode == "fixed_accuracy":
-            sels = sel.select_many(lossy_fields, eb_rel=cfg.eb_rel, r_sp=cfg.r_sp)
-        else:
-            sols = controller.solve_many(
-                lossy_fields, cfg.mode,
-                target_psnr=cfg.target_psnr, target_ratio=cfg.target_ratio,
-                r_sp=cfg.r_sp,
-            )
-            sels = [s.selection for s in sols]
-        sel_of = dict(zip(lossy_idx, sels))
+        # per round AND policy group (the solvers cast to f32 one field at
+        # a time and keep only the sampled blocks, so no full-tree f32
+        # copy materializes; a single-policy tree is one group, exactly
+        # the pre-policy batch composition)
+        sel_of: dict[int, sel.Selection] = {}
+        for pol, idxs in group_by_policy(pol_of).items():
+            arrs = [items[i][1] for i in idxs]
+            if pol.mode == "fixed_accuracy":
+                sels = sel.select_many(arrs, policy=pol)
+            else:
+                sols = controller.solve_many(arrs, pol)
+                sels = [s.selection for s in sols]
+            sel_of.update(zip(idxs, sels))
 
         def _encode(i: int) -> tuple[bytes, str, float]:
             name, arr = items[i]
@@ -181,18 +270,19 @@ class CheckpointManager:
 
         with open(os.path.join(tmp, "data.bin"), "wb") as f:
             off = 0
-            for (name, arr), (data, codec, eb) in zip(
-                items, self._encoded_in_order(items, _encode)
+            for i, ((name, arr), (data, codec, eb)) in enumerate(
+                zip(items, self._encoded_in_order(items, _encode))
             ):
                 f.write(data)
                 fields.append(
                     dict(
                         name=name, codec=codec, shape=list(arr.shape),
                         dtype=str(arr.dtype), offset=off, nbytes=len(data), eb=eb,
+                        policy=_field_policy_spec(pol_of.get(i)),
                     )
                 )
                 off += len(data)
-        manifest = self._manifest(step, fields, off, t0)
+        manifest = self._manifest(step, fields, off, t0, extra=dict(layout="flat"))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
         return self._publish(tmp, final)
@@ -227,15 +317,21 @@ class CheckpointManager:
 
     def _manifest(self, step: int, fields: list, total_bytes: int, t0: float,
                   extra: dict | None = None) -> dict:
-        """Manifest fields shared by both layouts (v2 passes `extra`)."""
-        cfg = self.cfg
+        """Manifest fields shared by both layouts (v3: `layout` comes in
+        `extra`; `policy` records the configured Policy/PolicySet, and the
+        legacy `mode`/`target` keys mirror the DEFAULT policy so pre-v3
+        tooling keeps reading something sensible)."""
+        default = self.cfg.policy_set.default
         man = dict(
             step=step,
-            mode=cfg.mode,
+            version=3,
+            policy=policy_set_spec(self.cfg.policy_set),
+            mode=default.mode,
             target=(
-                cfg.target_psnr if cfg.mode == "fixed_psnr"
-                else cfg.target_ratio if cfg.mode == "fixed_ratio"
-                else cfg.eb_rel
+                default.target_psnr if default.mode == "fixed_psnr"
+                else default.target_ratio if default.mode == "fixed_ratio"
+                else default.eb_rel if default.eb_rel is not None
+                else default.eb_abs
             ),
             fields=fields,
             total_bytes=total_bytes,
@@ -267,8 +363,9 @@ class CheckpointManager:
         return final
 
     def _save_sharded(self, step: int, tree: Any, lossy: Callable[[str], bool]) -> str:
-        """The v2 writer: shard-local decisions (`core/sharded.plan_tree`),
-        per-shard segment encoding on the thread pool, per-host data files.
+        """The segment-layout writer: shard-local decisions
+        (`core/sharded.plan_tree`, one launch per policy group), per-shard
+        segment encoding on the thread pool, per-host data files.
         Policy-raw and non-float leaves write exact original-dtype bytes,
         also per shard (codec ``none``) — nothing in this path gathers a
         tensor that the engine's layout analysis can keep sharded."""
@@ -276,9 +373,9 @@ class CheckpointManager:
         from repro.runtime import sharding as rsh
 
         if jax.process_count() > 1:
-            # the v2 writer is single-controller: one process fetches every
-            # unique shard and writes one manifest. True multi-host saves
-            # need per-host segment tables + manifest assembly (§6.2).
+            # the segment writer is single-controller: one process fetches
+            # every unique shard and writes one manifest. True multi-host
+            # saves need per-host segment tables + manifest assembly (§6.2).
             raise NotImplementedError(
                 "sharded checkpoint writing is single-process for now; "
                 "run the save from a single-controller job or use sharded=False"
@@ -289,26 +386,11 @@ class CheckpointManager:
         os.makedirs(tmp, exist_ok=True)
         t0 = time.time()
         items = _leaf_items_raw(tree)
-        lossy_idx = [
-            i
-            for i, (name, leaf) in enumerate(items)
-            if cfg.compress
-            and lossy(name)
-            and np.issubdtype(leaf.dtype, np.floating)
-            and leaf.size >= 64
-        ]
-        if cfg.mode == "fixed_accuracy":
-            plans = shd.plan_tree(
-                [items[i][1] for i in lossy_idx], "fixed_accuracy",
-                eb_rel=cfg.eb_rel, r_sp=cfg.r_sp,
-            )
-        else:
-            plans = shd.plan_tree(
-                [items[i][1] for i in lossy_idx], cfg.mode,
-                target_psnr=cfg.target_psnr, target_ratio=cfg.target_ratio,
-                r_sp=cfg.r_sp,
-            )
-        plan_of = dict(zip(lossy_idx, plans))
+        pol_of = self._resolve_policies(items, lossy)
+        plan_of: dict[int, Any] = {}
+        for pol, idxs in group_by_policy(pol_of).items():
+            plans = shd.plan_tree([items[i][1] for i in idxs], pol)
+            plan_of.update(zip(idxs, plans))
         host = int(jax.process_index())
 
         def _encode(i: int):
@@ -336,8 +418,8 @@ class CheckpointManager:
         fields = []
         with open(os.path.join(tmp, f"data.{host}.bin"), "wb") as f:
             off = 0
-            for (name, leaf), (view_shape, codec, eb, eb_sz, segs) in zip(
-                items, self._encoded_in_order(items, _encode)
+            for i, ((name, leaf), (view_shape, codec, eb, eb_sz, segs)) in enumerate(
+                zip(items, self._encoded_in_order(items, _encode))
             ):
                 seg_rows = []
                 for start, stop, seg_codec, data in segs:
@@ -357,10 +439,11 @@ class CheckpointManager:
                         view_shape=list(view_shape), eb=eb, eb_sz=eb_sz,
                         nbytes=sum(r["nbytes"] for r in seg_rows),
                         segments=seg_rows,
+                        policy=_field_policy_spec(pol_of.get(i)),
                     )
                 )
         manifest = self._manifest(
-            step, fields, off, t0, extra=dict(version=2, hosts=[host])
+            step, fields, off, t0, extra=dict(layout="segments", hosts=[host])
         )
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
@@ -433,7 +516,11 @@ class CheckpointManager:
         d = os.path.join(self.cfg.directory, f"step_{step:09d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
-        if int(manifest.get("version", 1)) >= 2:
+        # layout dispatch: v3 records it explicitly; v2 is always the
+        # segment layout, v1 (no version key) always the flat one
+        version = int(manifest.get("version", 1))
+        layout = manifest.get("layout", "segments" if version == 2 else "flat")
+        if layout == "segments":
             return step, self._restore_v2(d, manifest)
         out: dict[str, np.ndarray] = {}
         with open(os.path.join(d, "data.bin"), "rb") as f:
@@ -442,7 +529,15 @@ class CheckpointManager:
             seg = blob[fl["offset"] : fl["offset"] + fl["nbytes"]]
             shape, dtype = tuple(fl["shape"]), np.dtype(fl["dtype"])
             if fl["codec"] == "none":
-                arr = np.frombuffer(seg, dtype=dtype).reshape(shape)
+                # exact original-dtype bytes (non-float / policy-raw rows)
+                arr = codecs.writeable_frombuffer(seg, dtype).reshape(shape)
+            elif fl["codec"] == "raw":
+                # selection-era raw rows hold f32 working-dtype bytes
+                arr = (
+                    codecs.writeable_frombuffer(seg, np.float32)
+                    .reshape(shape)
+                    .astype(dtype)
+                )
             else:
                 cf = sel.CompressedField(fl["codec"], seg, shape, fl["dtype"])
                 arr = sel.decompress(cf)
@@ -470,7 +565,7 @@ class CheckpointManager:
             vshape = tuple(fl["view_shape"])
             rows = fl["segments"]
             if fl["codec"] == "none":
-                arr = np.empty(vshape, dtype)
+                arr = np.empty(vshape, dtype)  # writeable by construction
                 for sg in rows:
                     data = blob(sg["host"])[sg["offset"] : sg["offset"] + sg["nbytes"]]
                     ext = tuple(b - a for a, b in zip(sg["start"], sg["stop"]))

@@ -2,6 +2,7 @@
 selection between SZ-style (prediction-based) and ZFP-style (transform-based)
 error-bounded lossy compression, plus the estimators that make it cheap."""
 
+from . import codecs
 from .api import (
     CompressedField,
     CompressedTree,
@@ -14,6 +15,7 @@ from .api import (
     select_and_compress,
 )
 from .controller import TargetSolution, estimate_curves, solve, solve_many
+from .policy import Policy, PolicySet
 from .selector import Selection, encode_with_selection, select, select_many
 from .sz import SZStats, sz_compress, sz_decompress, sz_stats
 from .zfp import ZFPStats, zfp_compress, zfp_decompress, zfp_stats
@@ -21,11 +23,14 @@ from .zfp import ZFPStats, zfp_compress, zfp_decompress, zfp_stats
 __all__ = [
     "CompressedField",
     "CompressedTree",
+    "Policy",
+    "PolicySet",
     "Selection",
     "ShardedCompressedField",
     "SZStats",
     "TargetSolution",
     "ZFPStats",
+    "codecs",
     "compress",
     "compress_pytree",
     "compression_ratio",

@@ -1,0 +1,161 @@
+"""Codec registry — one dispatch point for every compression layer (DESIGN.md §2.1).
+
+The paper fixes the codec set at {SZ, ZFP} (+ verbatim raw), but nothing in
+Algorithm 1 is specific to those two: FRaZ (Underwood et al., 2020) layers
+fixed-quality control over *any* error-bounded compressor, and the
+black-box ratio-prediction line (Underwood et al., 2023) shows the
+estimator idea generalizes too. This module therefore makes the codec set
+a *registry*: the selector, the §7 controller, the shard-local engine, and
+the checkpoint manifest all dispatch byte encode/decode through
+`get(name)` instead of string-comparing "sz"/"zfp"/"raw" inline, and
+`Policy.codecs` allowlists are validated against `names()`.
+
+A codec is anything satisfying the `Codec` protocol:
+
+* ``encode(view32, selection) -> bytes`` — Step 4 on a folded f32 view
+  (or a shard of one), reading whatever bound it needs off the
+  `Selection` (`eb_abs` for ZFP-style, `eb_sz` for SZ-style);
+* ``decode(data) -> np.ndarray`` — the inverse, returning a *writeable*
+  flat/shaped f32 array (callers reshape to the recorded view);
+* capability flags the engines consult instead of hardcoding names:
+  - ``blockwise``: reconstruction is 4^n-block-local, so shard-split
+    encoding is bit-identical only on 4-aligned boundaries (ZFP);
+  - ``pointwise_bound``: the reconstruction honors a pointwise
+    |err| <= eb contract (everything registered today);
+  - ``lossless``: reconstructs bit-exactly (raw).
+
+The built-in three register at import. Registering a fourth codec makes it
+addressable by `Policy(codecs=...)` allowlists and decodable from
+manifests; plugging it into the *estimators* (so Algorithm 1 can price it)
+is the follow-on step DESIGN.md §2.1 sketches.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Protocol, runtime_checkable
+
+import numpy as np
+
+from . import sz as _sz
+from . import zfp as _zfp
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """The codec contract every registered compressor satisfies."""
+
+    name: str
+    blockwise: bool
+    pointwise_bound: bool
+    lossless: bool
+
+    def encode(self, view32: np.ndarray, selection) -> bytes:  # pragma: no cover
+        ...
+
+    def decode(self, data: bytes) -> np.ndarray:  # pragma: no cover
+        ...
+
+
+@dataclass(frozen=True)
+class _FnCodec:
+    """A codec assembled from plain functions (how the built-ins register)."""
+
+    name: str
+    blockwise: bool
+    pointwise_bound: bool
+    lossless: bool
+    _encode: Callable[[np.ndarray, object], bytes]
+    _decode: Callable[[bytes], np.ndarray]
+
+    def encode(self, view32: np.ndarray, selection) -> bytes:
+        return self._encode(view32, selection)
+
+    def decode(self, data: bytes) -> np.ndarray:
+        return self._decode(data)
+
+
+_REGISTRY: dict[str, Codec] = {}
+
+
+def register(codec: Codec, *, replace: bool = False) -> Codec:
+    """Register `codec` under `codec.name`; returns it for chaining."""
+    name = codec.name
+    if not replace and name in _REGISTRY:
+        raise ValueError(f"codec {name!r} is already registered")
+    _REGISTRY[name] = codec
+    return codec
+
+
+def get(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown codec {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def is_registered(name: str) -> bool:
+    return name in _REGISTRY
+
+
+def lossy_names() -> tuple[str, ...]:
+    return tuple(n for n, c in _REGISTRY.items() if not c.lossless)
+
+
+def writeable_frombuffer(data: bytes, dtype) -> np.ndarray:
+    """`np.frombuffer` that returns a WRITEABLE array: the bytearray
+    round-trip costs one copy, where frombuffer over immutable bytes would
+    hand back a read-only view — and restored trees must be trainable in
+    place. The one place this contract lives; every raw/none decode path
+    (registry raw codec, `decompress_pytree`, the checkpoint readers)
+    routes through it."""
+    return np.frombuffer(bytearray(data), dtype=np.dtype(dtype))
+
+
+def _raw_decode(data: bytes) -> np.ndarray:
+    return writeable_frombuffer(data, np.float32)
+
+
+register(
+    _FnCodec(
+        "sz", blockwise=False, pointwise_bound=True, lossless=False,
+        _encode=lambda view, sel: _sz.sz_compress(view, sel.eb_sz),
+        _decode=_sz.sz_decompress,
+    )
+)
+register(
+    _FnCodec(
+        "zfp", blockwise=True, pointwise_bound=True, lossless=False,
+        _encode=lambda view, sel: _zfp.zfp_compress(view, sel.eb_abs),
+        _decode=_zfp.zfp_decompress,
+    )
+)
+register(
+    _FnCodec(
+        "raw", blockwise=False, pointwise_bound=True, lossless=True,
+        _encode=lambda view, sel: view.tobytes(),
+        _decode=_raw_decode,
+    )
+)
+
+#: the full built-in candidate set, in decision order — the default
+#: `Policy.codecs` allowlist
+DEFAULT_CODECS: tuple[str, ...] = ("sz", "zfp", "raw")
+
+
+__all__ = [
+    "Codec",
+    "DEFAULT_CODECS",
+    "get",
+    "is_registered",
+    "lossy_names",
+    "names",
+    "register",
+    "writeable_frombuffer",
+]

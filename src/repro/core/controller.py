@@ -44,7 +44,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import codecs as _codecs
 from . import estimator as est
+from .policy import Policy, policy_from_kwargs
 from .selector import (
     MAX_BATCH_FIELDS,
     Selection,
@@ -342,7 +344,8 @@ REFINE_STRIDE = 2
 
 
 def _solve_fixed_psnr(
-    sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target: float, rounds: int, r_sp: float
+    sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target: float, rounds: int,
+    r_sp: float, allowed: tuple[str, ...] = _codecs.DEFAULT_CODECS,
 ) -> list[tuple[Selection, float, float, bool]]:
     """Per field: (Selection, est_psnr, est_bitrate, on_target).
 
@@ -385,9 +388,15 @@ def _solve_fixed_psnr(
     F = len(vr)
     for f in range(F):
         eb_s = float(np.exp2(x_s[f])) / 2.0
-        cands = [("sz", float(br_s[f]), float(ps_s[f]), eb_s)]
-        if zfp_ok[f]:
+        cands = []
+        if "sz" in allowed:
+            cands.append(("sz", float(br_s[f]), float(ps_s[f]), eb_s))
+        if zfp_ok[f] and "zfp" in allowed:
             cands.append(("zfp", float(br_z[f]), float(ps_z[f]), float(np.exp2(x_z[f]))))
+        if not cands:
+            # allowlist left only ZFP and its staircase missed the band:
+            # best-effort on its solved bound (flagged off-target below)
+            cands = [("zfp", float(br_z[f]), float(ps_z[f]), float(np.exp2(x_z[f])))]
         codec, br, ps, eb = min(cands, key=lambda c: c[1])
         if br >= RAW_BITS:
             # incompressible at this quality — raw is exact, PSNR = inf
@@ -404,7 +413,8 @@ def _solve_fixed_psnr(
 
 
 def _solve_fixed_ratio(
-    sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target: float, rounds: int, r_sp: float
+    sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target: float, rounds: int,
+    r_sp: float, allowed: tuple[str, ...] = _codecs.DEFAULT_CODECS,
 ) -> list[tuple[Selection, float, float, bool]]:
     """Per field: (Selection, est_psnr, est_bitrate, on_target).
 
@@ -478,6 +488,8 @@ def _solve_fixed_ratio(
             ("sz", float(br_s[f]), float(ps_s[f]), float(np.exp2(x_s[f])) / 2.0),
             ("zfp", float(br_z[f]), float(ps_z[f]), float(np.exp2(x_z[f]))),
         ):
+            if name not in allowed:
+                continue
             in_window = (br <= br_t * (1.0 + RATE_SLACK)) and (
                 br >= br_t / (1.0 + RATIO_TOL)
             )
@@ -512,23 +524,32 @@ def _solve_fixed_ratio(
 
 def solve_many(
     fields,
-    mode: str,
+    policy: Policy | str,
     *,
     target_psnr: float | None = None,
     target_ratio: float | None = None,
     eb_abs: float | None = None,
     eb_rel: float | None = None,
-    r_sp: float = est.DEFAULT_SAMPLING_RATE,
+    r_sp: float | None = None,
     transform: str = "zfp",
     rounds: int | None = None,
 ) -> list[TargetSolution]:
     """Solve the quality target for MANY fields with batched launches.
 
-    mode='fixed_psnr'     — requires `target_psnr` (dB, relative to the
-                            field's value range, as everywhere else).
-    mode='fixed_ratio'    — requires `target_ratio` (x, vs 32-bit raw).
-    mode='fixed_accuracy' — requires `eb_abs` or `eb_rel`; delegates to
-                            `select_many` (the paper's bound-centric path).
+    `policy` is the quality contract (`core/policy.py`, DESIGN.md §2):
+
+    * `Policy.fixed_psnr(db)`   — target dB, relative to each field's
+                                  value range (as everywhere else);
+    * `Policy.fixed_ratio(x)`   — x vs 32-bit raw;
+    * `Policy.fixed_accuracy(...)` — delegates to `select_many` (the
+                                  paper's bound-centric path) so the three
+                                  modes share one entry point.
+
+    The policy's `codecs` allowlist restricts which registered codecs
+    compete (DESIGN.md §2.1); its `r_sp` sets the estimator sampling rate.
+    Passing a mode *string* plus the old target/eb/r_sp keyword arguments
+    is deprecated — the shim maps them onto the equivalent `Policy` (and
+    therefore solves bit-identically) but warns.
 
     Fields that cannot carry a target — too small, constant, NaN-poisoned —
     fall back to raw exactly like `select_many` (`on_target=False` for
@@ -537,11 +558,21 @@ def solve_many(
     kicked to a per-field path, so every field stays inside the batched
     sweep. Returns one `TargetSolution` per input field, in order.
     """
+    if isinstance(policy, str):
+        policy = policy_from_kwargs(
+            "solve_many", mode=policy, eb_abs=eb_abs, eb_rel=eb_rel,
+            target_psnr=target_psnr, target_ratio=target_ratio, r_sp=r_sp,
+        )
+    elif not isinstance(policy, Policy):
+        raise TypeError(f"expected a Policy (or legacy mode str), got {policy!r}")
+    elif any(v is not None for v in (target_psnr, target_ratio, eb_abs, eb_rel, r_sp)):
+        raise ValueError("pass either policy= or the legacy target kwargs, not both")
     fields = list(fields)
+    mode = policy.mode
+    if mode == "raw":
+        raise ValueError("solve_many has nothing to solve for Policy.raw()")
     if mode == "fixed_accuracy":
-        if eb_abs is None and eb_rel is None:
-            raise ValueError("fixed_accuracy needs eb_abs or eb_rel")
-        sels = select_many(fields, eb_abs=eb_abs, eb_rel=eb_rel, r_sp=r_sp, transform=transform)
+        sels = select_many(fields, policy=policy, transform=transform)
         # raw stores are lossless at exactly 32 b/v, whatever the estimates
         # said — keep the telemetry consistent with the target modes
         return [
@@ -553,23 +584,19 @@ def solve_many(
             )
             for s in sels
         ]
-    if mode == "fixed_psnr":
-        if target_psnr is None:
-            raise ValueError("fixed_psnr needs target_psnr")
-        target = float(target_psnr)
-    elif mode == "fixed_ratio":
-        if target_ratio is None:
-            raise ValueError("fixed_ratio needs target_ratio")
-        if target_ratio <= 0:
-            raise ValueError("target_ratio must be positive")
-        target = float(target_ratio)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
+    target = float(
+        policy.target_psnr if mode == "fixed_psnr" else policy.target_ratio
+    )
     n_rounds = DEFAULT_ROUNDS[mode] if rounds is None else rounds
 
     results: list[TargetSolution | None] = [None] * len(fields)
-    groups = _build_solve_members(fields, range(len(fields)), results, mode, target, r_sp)
-    _solve_groups(groups, results, mode, target, n_rounds, r_sp, transform)
+    groups = _build_solve_members(
+        fields, range(len(fields)), results, mode, target, policy.r_sp
+    )
+    _solve_groups(
+        groups, results, mode, target, n_rounds, policy.r_sp, transform,
+        policy.codecs,
+    )
     return results  # type: ignore[return-value]
 
 
@@ -617,6 +644,7 @@ def _solve_groups(
     n_rounds: int,
     r_sp: float,
     transform: str,
+    codecs: tuple[str, ...] = _codecs.DEFAULT_CODECS,
 ) -> None:
     """Drive the per-batch target solvers over pre-gathered `_Member`s.
     Shared by `solve_many` (host-gathered samples) and the shard-local
@@ -652,15 +680,15 @@ def _solve_groups(
             )
             vr_arr = np.asarray([m.vr for m in batch], np.float32)
             solver = _solve_fixed_psnr if mode == "fixed_psnr" else _solve_fixed_ratio
-            solved = solver(sweep, refine, vr_arr, target, n_rounds, r_sp)
+            solved = solver(sweep, refine, vr_arr, target, n_rounds, r_sp, codecs)
             for m, (sel, ps, br, on) in zip(batch, solved):
                 results[m.idx] = TargetSolution(sel, mode, target, ps, br, on)
             lo = hi
 
 
-def solve(x, mode: str, **kw) -> TargetSolution:
+def solve(x, policy: Policy | str, **kw) -> TargetSolution:
     """Single-field convenience wrapper over `solve_many`."""
-    return solve_many([x], mode, **kw)[0]
+    return solve_many([x], policy, **kw)[0]
 
 
 def estimate_curves(

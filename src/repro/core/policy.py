@@ -1,0 +1,337 @@
+"""Policy objects — ONE quality contract across every compression layer
+(DESIGN.md §2, §7).
+
+The paper's output is a per-field decision {C_i, s_i}; what a caller holds
+is a per-field *quality contract*: "pointwise bound eb", "land on T dB",
+"fit in 1/R of raw". Before this module, that contract traveled as ~9
+duplicated kwargs (`mode`, `eb_abs`, `eb_rel`, `target_psnr`,
+`target_ratio`, `r_sp`, ...) copied across `core/api.py`,
+`core/controller.py`, `core/sharded.plan_tree`,
+`checkpoint.CheckpointConfig`, and `runtime/kvcomp.py`. A `Policy` is that
+contract as one frozen, validated value object:
+
+    Policy.fixed_accuracy(eb_rel=1e-4)      # the paper's bound-centric mode
+    Policy.fixed_psnr(60.0)                 # §7 controller solves the bound
+    Policy.fixed_ratio(8.0)                 # §7 iso-rate dual
+    Policy.raw()                            # store verbatim (exact bytes)
+
+plus the estimator sampling rate (`r_sp`) and a codec *allowlist*
+(`codecs`, validated against the DESIGN.md §2.1 registry) restricting
+which registered codecs may compete for the field — `raw` is always
+available as the safety-net fallback.
+
+A `PolicySet` maps field *names* to policies with ordered first-match-wins
+rules, so one checkpoint/serving tree can mix contracts:
+
+    PolicySet(
+        default=Policy.fixed_accuracy(eb_rel=1e-4),
+        rules=[("*/kv/*", Policy.fixed_ratio(8.0)),
+               ("opt/*", Policy.raw())],
+    )
+
+Rule patterns are globs (`fnmatch` over the full leaf name) or, with an
+``re:`` prefix, regexes (`re.search`). Policies are frozen and hashable:
+`compress_pytree` groups leaves by resolved policy so each group rides one
+packed `select_many`/`solve_many` batch (DESIGN.md §1) and the pow2 jit
+bucketing still hits across groups.
+
+Legacy keyword calls (`mode=`, `eb_rel=`, ...) are mapped onto a `Policy`
+by `policy_from_kwargs` and emit `DeprecationWarning` — decisions are
+bit-identical because the shim feeds the exact same solver path.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+import warnings
+from dataclasses import dataclass, field
+from fnmatch import fnmatchcase
+from typing import Iterable
+
+from . import codecs as _codecs
+
+#: estimator block sampling rate default (the paper's 5%; matches
+#: `estimator.DEFAULT_SAMPLING_RATE` without importing the jax stack here)
+DEFAULT_R_SP = 0.05
+#: the bound-centric default of `compress_pytree` since PR 1
+DEFAULT_EB_REL = 1e-4
+
+MODES = ("fixed_accuracy", "fixed_psnr", "fixed_ratio", "raw")
+
+
+@dataclass(frozen=True)
+class Policy:
+    """One field's quality contract: mode + target + sampling + codec set.
+
+    Construct through the classmethods (`fixed_accuracy` / `fixed_psnr` /
+    `fixed_ratio` / `raw`) — the bare constructor validates but does not
+    default the mode-specific target fields. Frozen and hashable, so
+    policies are usable as grouping keys and jit-static arguments.
+    """
+
+    mode: str
+    eb_abs: float | None = None
+    eb_rel: float | None = None
+    target_psnr: float | None = None
+    target_ratio: float | None = None
+    r_sp: float = DEFAULT_R_SP
+    codecs: tuple[str, ...] = _codecs.DEFAULT_CODECS
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; one of {MODES}")
+        # normalize the allowlist: tuple, deduped, raw always available as
+        # the degenerate/safety-net fallback
+        cods = tuple(dict.fromkeys(self.codecs))
+        for name in cods:
+            if not _codecs.is_registered(name):
+                raise ValueError(
+                    f"codec {name!r} is not registered; known: "
+                    f"{sorted(_codecs.names())} (core/codecs.py)"
+                )
+        if "raw" not in cods:
+            cods = cods + ("raw",)
+        object.__setattr__(self, "codecs", cods)
+        if not (0.0 < self.r_sp <= 1.0):
+            raise ValueError(f"r_sp must be in (0, 1], got {self.r_sp}")
+        if self.mode == "fixed_accuracy":
+            if self.eb_abs is None and self.eb_rel is None:
+                raise ValueError("fixed_accuracy needs eb_abs or eb_rel")
+            for v, n in ((self.eb_abs, "eb_abs"), (self.eb_rel, "eb_rel")):
+                if v is not None and not (v > 0 and math.isfinite(v)):
+                    raise ValueError(f"{n} must be finite and > 0, got {v}")
+        elif self.mode == "fixed_psnr":
+            if self.target_psnr is None or not math.isfinite(self.target_psnr):
+                raise ValueError("fixed_psnr needs a finite target_psnr (dB)")
+        elif self.mode == "fixed_ratio":
+            if self.target_ratio is None or not self.target_ratio > 0:
+                raise ValueError("fixed_ratio needs target_ratio > 0")
+        if self.mode != "raw" and not any(
+            c for c in cods if c != "raw" and not _codecs.get(c).lossless
+        ):
+            raise ValueError(
+                f"mode {self.mode!r} needs at least one lossy codec in the "
+                f"allowlist (got {cods}); use Policy.raw() for verbatim storage"
+            )
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def fixed_accuracy(
+        cls,
+        eb_rel: float | None = None,
+        eb_abs: float | None = None,
+        *,
+        r_sp: float = DEFAULT_R_SP,
+        codecs: Iterable[str] = _codecs.DEFAULT_CODECS,
+    ) -> "Policy":
+        """The paper's bound-centric contract (Algorithm 1 at this bound).
+        `eb_abs` wins when both bounds are given (matching the legacy
+        kwargs); with neither, defaults to `eb_rel=1e-4`."""
+        if eb_abs is not None:
+            eb_rel = None
+        elif eb_rel is None:
+            eb_rel = DEFAULT_EB_REL
+        return cls("fixed_accuracy", eb_abs=eb_abs, eb_rel=eb_rel,
+                   r_sp=r_sp, codecs=tuple(codecs))
+
+    @classmethod
+    def fixed_psnr(
+        cls,
+        db: float,
+        *,
+        r_sp: float = DEFAULT_R_SP,
+        codecs: Iterable[str] = _codecs.DEFAULT_CODECS,
+    ) -> "Policy":
+        """Land on `db` dB (value-range PSNR); §7 controller solves the bound."""
+        return cls("fixed_psnr", target_psnr=float(db), r_sp=r_sp,
+                   codecs=tuple(codecs))
+
+    @classmethod
+    def fixed_ratio(
+        cls,
+        x: float,
+        *,
+        r_sp: float = DEFAULT_R_SP,
+        codecs: Iterable[str] = _codecs.DEFAULT_CODECS,
+    ) -> "Policy":
+        """Meet a byte budget: ratio `x` vs 32-bit raw (§7 iso-rate dual)."""
+        return cls("fixed_ratio", target_ratio=float(x), r_sp=r_sp,
+                   codecs=tuple(codecs))
+
+    @classmethod
+    def raw(cls) -> "Policy":
+        """Store verbatim — exact bytes, original dtype (replaces the old
+        `predicate`-rejected path)."""
+        return cls("raw", codecs=("raw",))
+
+    # -- serialization (manifest v3) ----------------------------------------
+
+    def spec(self) -> dict:
+        """Compact JSON-safe form recorded per field in manifest v3."""
+        out: dict = {"mode": self.mode}
+        for k in ("eb_abs", "eb_rel", "target_psnr", "target_ratio"):
+            v = getattr(self, k)
+            if v is not None:
+                out[k] = v
+        if self.mode != "raw":
+            out["r_sp"] = self.r_sp
+            if self.codecs != _codecs.DEFAULT_CODECS:
+                out["codecs"] = list(self.codecs)
+        return out
+
+    @classmethod
+    def from_spec(cls, spec: dict) -> "Policy":
+        kw = dict(spec)
+        mode = kw.pop("mode")
+        if "codecs" in kw:
+            kw["codecs"] = tuple(kw["codecs"])
+        if mode == "raw":
+            return cls.raw()
+        return cls(mode, **kw)
+
+
+def _rule_matches(pattern, name: str) -> bool:
+    if isinstance(pattern, re.Pattern):
+        return pattern.search(name) is not None
+    if pattern.startswith("re:"):
+        return re.search(pattern[3:], name) is not None
+    return fnmatchcase(name, pattern)
+
+
+@dataclass(frozen=True)
+class PolicySet:
+    """Per-field policy resolution: ordered rules, first match wins, else
+    `default`. Patterns are globs over the full leaf name ("opt/*",
+    "*/kv/*"), ``re:``-prefixed regexes, or pre-compiled `re.Pattern`s."""
+
+    default: Policy
+    rules: tuple = field(default_factory=tuple)
+
+    def __post_init__(self):
+        if not isinstance(self.default, Policy):
+            raise TypeError(f"default must be a Policy, got {type(self.default)}")
+        rules = tuple(tuple(r) for r in self.rules)
+        for pat, pol in rules:
+            if not isinstance(pol, Policy):
+                raise TypeError(f"rule {pat!r}: expected a Policy, got {type(pol)}")
+            if isinstance(pat, str) and pat.startswith("re:"):
+                re.compile(pat[3:])  # fail loudly at construction
+            elif not isinstance(pat, (str, re.Pattern)):
+                raise TypeError(f"rule pattern must be str or re.Pattern, got {pat!r}")
+        object.__setattr__(self, "rules", rules)
+
+    def resolve(self, name: str) -> Policy:
+        for pat, pol in self.rules:
+            if _rule_matches(pat, name):
+                return pol
+        return self.default
+
+
+def group_by_policy(pol_of: dict[int, Policy]) -> "dict[Policy, list[int]]":
+    """Leaf indices grouped by resolved policy: groups in first-appearance
+    order, members in index order. A single-policy tree is ONE group with
+    every index in the original order, so its packed decision batches —
+    and therefore its decisions — are bit-identical to a direct
+    `select_many`/`solve_many` call over the same fields."""
+    groups: dict[Policy, list[int]] = {}
+    for i in sorted(pol_of):
+        groups.setdefault(pol_of[i], []).append(i)
+    return groups
+
+
+def policy_set_spec(pset: PolicySet) -> dict:
+    """JSON-safe form of a PolicySet (manifest v3's top-level record)."""
+
+    def pat_str(pat) -> str:
+        return f"re:{pat.pattern}" if isinstance(pat, re.Pattern) else pat
+
+    out: dict = {"default": pset.default.spec()}
+    if pset.rules:
+        out["rules"] = [[pat_str(p), pol.spec()] for p, pol in pset.rules]
+    return out
+
+
+def as_policy_set(policy) -> PolicySet:
+    """Coerce a Policy | PolicySet into a PolicySet."""
+    if isinstance(policy, PolicySet):
+        return policy
+    if isinstance(policy, Policy):
+        return PolicySet(default=policy)
+    raise TypeError(
+        f"expected Policy or PolicySet, got {type(policy).__name__}: {policy!r}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy-kwarg shim
+# ---------------------------------------------------------------------------
+
+
+def policy_from_kwargs(
+    where: str,
+    *,
+    mode: str | None = None,
+    eb_abs: float | None = None,
+    eb_rel: float | None = None,
+    target_psnr: float | None = None,
+    target_ratio: float | None = None,
+    r_sp: float | None = None,
+    default_eb_rel: float | None = None,
+    stacklevel: int = 3,
+) -> Policy:
+    """Map the deprecated kwarg spray onto a `Policy`, warning once per call
+    site. The mapping reproduces each call site's legacy defaults exactly
+    (eb_abs wins over eb_rel; `default_eb_rel` is the bound the old
+    signature defaulted to, None where it used to raise), so shimmed calls
+    decide — and encode — bit-identically to the old API."""
+    mode = mode or "fixed_accuracy"
+    r_sp = DEFAULT_R_SP if r_sp is None else r_sp
+    if mode == "fixed_accuracy":
+        if eb_abs is None and eb_rel is None:
+            if default_eb_rel is None:
+                raise ValueError("fixed_accuracy needs eb_abs or eb_rel")
+            eb_rel = default_eb_rel
+        pol = Policy.fixed_accuracy(eb_rel=eb_rel, eb_abs=eb_abs, r_sp=r_sp)
+    elif mode == "fixed_psnr":
+        if target_psnr is None:
+            raise ValueError("fixed_psnr needs target_psnr")
+        pol = Policy.fixed_psnr(target_psnr, r_sp=r_sp)
+    elif mode == "fixed_ratio":
+        if target_ratio is None:
+            raise ValueError("fixed_ratio needs target_ratio")
+        pol = Policy.fixed_ratio(target_ratio, r_sp=r_sp)
+    else:
+        raise ValueError(f"unknown mode {mode!r}; one of {MODES[:3]}")
+    warnings.warn(
+        f"{where}: mode/eb/target keyword arguments are deprecated; pass "
+        f"policy={_policy_repr(pol)} instead (repro.core.policy)",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+    return pol
+
+
+def _policy_repr(p: Policy) -> str:
+    if p.mode == "fixed_accuracy":
+        arg = f"eb_abs={p.eb_abs!r}" if p.eb_abs is not None else f"eb_rel={p.eb_rel!r}"
+        return f"Policy.fixed_accuracy({arg})"
+    if p.mode == "fixed_psnr":
+        return f"Policy.fixed_psnr({p.target_psnr!r})"
+    if p.mode == "fixed_ratio":
+        return f"Policy.fixed_ratio({p.target_ratio!r})"
+    return "Policy.raw()"
+
+
+__all__ = [
+    "DEFAULT_EB_REL",
+    "DEFAULT_R_SP",
+    "MODES",
+    "Policy",
+    "PolicySet",
+    "as_policy_set",
+    "group_by_policy",
+    "policy_from_kwargs",
+    "policy_set_spec",
+]

@@ -15,19 +15,38 @@ always holds). We implement the consistent reading.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import lru_cache as _lru_cache
-from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import codecs as _codecs
 from . import estimator as est
-from . import sz as _sz
-from . import zfp as _zfp
+from .policy import Policy
 
-Codec = Literal["sz", "zfp", "raw"]
+#: a codec *name*; byte encode/decode dispatches through the registry
+#: (`core/codecs.py`, DESIGN.md §2.1), so the set is open, not a Literal
+Codec = str
+
+
+def _pick_codec(br_sz: float, br_zfp: float, allowed: tuple[str, ...]) -> Codec:
+    """Step 5 of Fig. 2 under a codec allowlist: min estimated rate among
+    the allowed lossy candidates, `raw` when the best still exceeds 32
+    bits/value (or nothing lossy is allowed). With the full allowlist this
+    is exactly the historical `"sz" if br_sz < br_zfp else "zfp"` rule —
+    ties keep going to ZFP — so default-policy decisions are unchanged."""
+    sz_ok, zfp_ok = "sz" in allowed, "zfp" in allowed
+    if sz_ok and zfp_ok:
+        codec, best = ("sz", br_sz) if br_sz < br_zfp else ("zfp", br_zfp)
+    elif sz_ok:
+        codec, best = "sz", br_sz
+    elif zfp_ok:
+        codec, best = "zfp", br_zfp
+    else:
+        return "raw"
+    return "raw" if best >= 32.0 else codec
 
 
 @dataclass
@@ -48,6 +67,7 @@ def select(
     eb_rel: float | None = None,
     r_sp: float = est.DEFAULT_SAMPLING_RATE,
     transform: str = "zfp",
+    codecs: tuple[str, ...] = _codecs.DEFAULT_CODECS,
 ) -> Selection:
     """Run Steps 1-3 of Fig. 2 and return the decision + estimates."""
     x = _fold_ndim(jnp.asarray(x))
@@ -64,9 +84,7 @@ def select(
     )(x, jnp.asarray(starts), jnp.float32(eb_abs), jnp.float32(vr))
     br_sz, br_zfp = float(br_sz), float(br_zfp)
     eb_sz = float(eb_sz)
-    codec: Codec = "sz" if br_sz < br_zfp else "zfp"
-    if min(br_sz, br_zfp) >= 32.0:
-        codec = "raw"  # incompressible at this bound — store verbatim
+    codec = _pick_codec(br_sz, br_zfp, codecs)
     return Selection(codec, float(eb_abs), eb_sz, br_sz, br_zfp, float(psnr_zfp), vr, r_sp)
 
 
@@ -157,8 +175,11 @@ def select_many(
     fields,
     eb_abs: float | None = None,
     eb_rel: float | None = None,
-    r_sp: float = est.DEFAULT_SAMPLING_RATE,
+    r_sp: float | None = None,
     transform: str = "zfp",
+    codecs: tuple[str, ...] | None = None,
+    *,
+    policy: Policy | None = None,
 ) -> list[Selection]:
     """Algorithm 1 on MANY fields with one estimator launch (per ndim group).
 
@@ -169,16 +190,39 @@ def select_many(
     one per leaf. Returns one `Selection` per input field, matching the
     per-field `select` decision.
 
+    `policy` (a fixed_accuracy `Policy`) is the object form of the
+    eb/r_sp/codecs arguments — the bound-centric quality contract of
+    DESIGN.md §2 — and is what `compress_pytree` passes per policy group;
+    the explicit kwargs remain the primitive, non-deprecated spelling for
+    direct Algorithm-1 use. `codecs` restricts which registered codecs
+    (DESIGN.md §2.1) may compete; the full default reproduces the paper's
+    SZ-vs-ZFP rule exactly.
+
     Fields are evaluated in float32 (the codecs' working dtype); the f32
     view of each field is transient — only its sampled blocks are retained,
     so peak memory is one field plus ~r_sp of the pytree.
     """
+    if policy is not None:
+        if policy.mode != "fixed_accuracy":
+            raise ValueError(
+                f"select_many takes a fixed_accuracy policy, got {policy.mode!r} "
+                "(use controller.solve_many for target modes)"
+            )
+        if any(v is not None for v in (eb_abs, eb_rel, r_sp, codecs)):
+            raise ValueError(
+                "pass either policy= or eb_abs/eb_rel/r_sp/codecs, not both"
+            )
+        eb_abs, eb_rel = policy.eb_abs, policy.eb_rel
+        r_sp, codecs = policy.r_sp, policy.codecs
+    r_sp = est.DEFAULT_SAMPLING_RATE if r_sp is None else r_sp
+    codecs = _codecs.DEFAULT_CODECS if codecs is None else codecs
     fields = list(fields)
     results: list[Selection | None] = [None] * len(fields)
     groups = _build_select_members(
-        fields, range(len(fields)), results, eb_abs, eb_rel, r_sp, transform
+        fields, range(len(fields)), results, eb_abs, eb_rel, r_sp, transform,
+        codecs,
     )
-    _run_select_batches(groups, results, r_sp, transform)
+    _run_select_batches(groups, results, r_sp, transform, codecs)
     return results  # type: ignore[return-value]
 
 
@@ -190,6 +234,7 @@ def _build_select_members(
     eb_rel: float | None,
     r_sp: float,
     transform: str,
+    codecs: tuple[str, ...] = _codecs.DEFAULT_CODECS,
 ) -> dict[int, list[tuple[int, np.ndarray, float, float, int]]]:
     """Gather-side half of `select_many`: fold + value range + degenerate
     short-circuit + monster-field per-field fallback (written straight into
@@ -219,7 +264,10 @@ def _build_select_members(
         if len(starts) > _max_batch_blocks(view.ndim):
             # monster field: bigger alone than a whole batch — the
             # per-field path has no int32 accumulation to protect
-            results[i] = select(view, eb_abs=float(eb), r_sp=r_sp, transform=transform)
+            results[i] = select(
+                view, eb_abs=float(eb), r_sp=r_sp, transform=transform,
+                codecs=codecs,
+            )
             continue
         groups.setdefault(view.ndim, []).append((
             i,
@@ -234,6 +282,7 @@ def _run_select_batches(
     results: list[Selection | None],
     r_sp: float,
     transform: str,
+    codecs: tuple[str, ...] = _codecs.DEFAULT_CODECS,
 ) -> None:
     """Drive `_select_batch` over pre-gathered members, honoring the per-ndim
     block cap and field cap. Members are (input index, halo blocks, eb, vr,
@@ -251,7 +300,7 @@ def _run_select_batches(
             ):
                 blocks += len(members[hi][1])
                 hi += 1
-            _select_batch(nd, members[lo:hi], results, r_sp, transform)
+            _select_batch(nd, members[lo:hi], results, r_sp, transform, codecs)
             lo = hi
 
 
@@ -261,6 +310,7 @@ def _select_batch(
     results: list[Selection | None],
     r_sp: float,
     transform: str,
+    codecs: tuple[str, ...] = _codecs.DEFAULT_CODECS,
 ) -> None:
     halo = np.concatenate([m[1] for m in members], axis=0)
     seg = np.concatenate(
@@ -296,9 +346,7 @@ def _select_batch(
     psnr, eb_sz = np.asarray(psnr), np.asarray(eb_sz)
     for f, (i, _, eb, vr, _) in enumerate(members):
         bs, bz = float(br_sz[f]), float(br_zfp[f])
-        codec: Codec = "sz" if bs < bz else "zfp"
-        if min(bs, bz) >= 32.0:
-            codec = "raw"
+        codec = _pick_codec(bs, bz, codecs)
         results[i] = Selection(
             codec, float(eb), float(eb_sz[f]), bs, bz, float(psnr[f]), vr, r_sp
         )
@@ -349,19 +397,16 @@ def encode_with_selection(x: np.ndarray, sel: Selection) -> CompressedField:
     Split from `select_and_compress` so batched callers (compress_pytree,
     the checkpoint writer) can make ALL decisions in one device call via
     `select_many` and then encode fields on a thread pool while the device
-    is free for the next batch.
+    is free for the next batch. The byte codec is resolved through the
+    registry (DESIGN.md §2.1), so registered codecs beyond sz/zfp encode
+    through the same path.
     """
     x = np.asarray(x)
     orig_shape, orig_dtype = x.shape, x.dtype
     view = _fold_ndim(x.astype(np.float32))
     if view.ndim == 0:
         view = view.reshape(1)
-    if sel.codec == "sz":
-        data = _sz.sz_compress(view, sel.eb_sz)
-    elif sel.codec == "zfp":
-        data = _zfp.zfp_compress(view, sel.eb_abs)
-    else:
-        data = view.tobytes()
+    data = _codecs.get(sel.codec).encode(view, sel)
     # safety net: never ship a stream larger than raw
     if len(data) >= view.nbytes and sel.codec != "raw":
         sel = Selection("raw", sel.eb_abs, sel.eb_sz, 32.0, 32.0, sel.psnr_target, sel.vr, sel.r_sp)
@@ -381,12 +426,16 @@ def select_and_compress(
 
 
 def decompress(cf: CompressedField) -> np.ndarray:
-    if cf.codec == "sz":
-        out = _sz.sz_decompress(cf.data)
-    elif cf.codec == "zfp":
-        out = _zfp.zfp_decompress(cf.data)
-    else:
-        out = np.frombuffer(cf.data, dtype=np.float32)
+    """Invert any `CompressedField`, lossy or raw, to a writeable array.
+
+    Two raw conventions coexist and `selection` disambiguates: fields that
+    went through a `Selection` (including lossy-decided/safety-net raw)
+    hold f32 working-dtype bytes; selection-less raw fields — `Policy.raw`
+    leaves, non-float leaves — hold exact ORIGINAL-dtype bytes, restored
+    bit-identically (f64 precision, int payloads, and all)."""
+    if cf.codec == "raw" and cf.selection is None:
+        return _codecs.writeable_frombuffer(cf.data, cf.dtype).reshape(cf.shape)
+    out = _codecs.get(cf.codec).decode(cf.data)
     return out.reshape(cf.shape).astype(cf.dtype)
 
 

@@ -68,18 +68,19 @@ except ImportError:  # pragma: no cover - depends on jax version
 
 from repro.runtime import sharding as rsh
 
+from . import codecs as _codecs
 from . import controller as ctl
 from . import estimator as est
 from . import selector as select_mod
-from . import sz as _sz
-from . import zfp as _zfp
 from .embedded import exact_coder_bits_blocks, plane_step
+from .policy import Policy, policy_from_kwargs
 from .selector import (
     Selection,
     _degenerate_selection,
     _fold_ndim,
     _max_batch_blocks,
     _next_pow2,
+    _pick_codec,
     _run_select_batches,
 )
 from .transforms import block_transform_nd, bot_linf_gain, bot_matrix
@@ -472,18 +473,22 @@ def _view_of(x: np.ndarray) -> np.ndarray:
 
 def plan_tree(
     arrs: list,
-    mode: str = "fixed_accuracy",
+    policy: Policy | str | None = None,
     *,
     eb_abs: float | None = None,
     eb_rel: float | None = None,
     target_psnr: float | None = None,
     target_ratio: float | None = None,
-    r_sp: float = est.DEFAULT_SAMPLING_RATE,
+    r_sp: float | None = None,
     transform: str = "zfp",
     reconcile: str = "auto",
 ) -> list[FieldPlan]:
     """Algorithm 1 (or a §7 target solve) over MANY possibly-sharded fields
-    without gathering any of them.
+    without gathering any of them, under ONE quality `Policy`
+    (`core/policy.py` — mixed trees group by policy upstream in
+    `compress_pytree`/the checkpoint writer and call this per group). The
+    legacy mode-string + kwarg spelling shims onto the equivalent Policy
+    with a `DeprecationWarning`.
 
     reconcile='auto' uses the in-graph sufficient-statistics psum for
     fixed_accuracy and the sample-block gather (bit-identical decisions)
@@ -492,23 +497,32 @@ def plan_tree(
     needs the sampled curves). Fields whose sharding the engine cannot
     carry (see `analyze`) gather and ride the ordinary host path; their
     decisions are by definition the unsharded ones."""
+    if isinstance(policy, Policy):
+        if any(v is not None for v in (eb_abs, eb_rel, target_psnr, target_ratio, r_sp)):
+            raise ValueError("pass either a Policy or the legacy kwargs, not both")
+    elif policy is None or isinstance(policy, str):
+        policy = policy_from_kwargs(
+            "plan_tree", mode=policy, eb_abs=eb_abs, eb_rel=eb_rel,
+            target_psnr=target_psnr, target_ratio=target_ratio, r_sp=r_sp,
+        )
+    else:
+        raise TypeError(f"expected a Policy (or legacy mode str), got {policy!r}")
+    mode, r_sp = policy.mode, policy.r_sp
+    eb_abs, eb_rel = policy.eb_abs, policy.eb_rel
+    codecs = policy.codecs
+    if mode == "raw":
+        raise ValueError("plan_tree has nothing to decide for Policy.raw()")
     if mode != "fixed_accuracy":
         if reconcile == "stats":
             raise ValueError("target modes require reconcile='samples'")
         reconcile_eff = "samples"
     else:
         reconcile_eff = "stats" if reconcile in ("auto", "stats") else "samples"
-    if mode == "fixed_accuracy" and eb_abs is None and eb_rel is None:
-        raise ValueError("fixed_accuracy needs eb_abs or eb_rel")
     target = {
         "fixed_accuracy": eb_abs if eb_abs is not None else eb_rel,
-        "fixed_psnr": target_psnr,
-        "fixed_ratio": target_ratio,
-    }.get(mode)
-    if mode == "fixed_psnr" and target is None:
-        raise ValueError("fixed_psnr needs target_psnr")
-    if mode == "fixed_ratio" and target is None:
-        raise ValueError("fixed_ratio needs target_ratio")
+        "fixed_psnr": policy.target_psnr,
+        "fixed_ratio": policy.target_ratio,
+    }[mode]
 
     arrs = list(arrs)
     n = len(arrs)
@@ -568,6 +582,7 @@ def plan_tree(
             _plan_engine_group(
                 mesh, group, arrs, layouts, vr_of, plans, blocks_of, mode,
                 float(target), eb_abs, eb_rel, r_sp, transform, reconcile_eff,
+                codecs,
             )
 
     # Decide everything not yet planned in ONE merged batch run: host-side
@@ -581,7 +596,8 @@ def plan_tree(
         results: list[Selection | None] = [None] * n
         if reconcile_eff == "samples" or host_idx:
             groups = select_mod._build_select_members(
-                host_arrs, host_idx, results, eb_abs, eb_rel, r_sp, transform
+                host_arrs, host_idx, results, eb_abs, eb_rel, r_sp, transform,
+                codecs,
             )
             for i, blocks in blocks_of.items():
                 lay = layouts[i]
@@ -591,7 +607,7 @@ def plan_tree(
                 )
             for nd in groups:
                 groups[nd].sort(key=lambda m: m[0])
-            _run_select_batches(groups, results, r_sp, transform)
+            _run_select_batches(groups, results, r_sp, transform, codecs)
         for i in host_idx:
             plans[i] = FieldPlan(
                 results[i], None, None, _host_view_shape(np.asarray(arrs[i])), "host"
@@ -614,7 +630,7 @@ def plan_tree(
             groups_t[nd].sort(key=lambda m: m.idx)
         ctl._solve_groups(
             groups_t, results_t, mode, float(target), ctl.DEFAULT_ROUNDS[mode],
-            r_sp, transform,
+            r_sp, transform, codecs,
         )
         for i in host_idx:
             sol = results_t[i]
@@ -650,6 +666,7 @@ def _plan_engine_group(
     r_sp: float,
     transform: str,
     reconcile_eff: str,
+    codecs: tuple[str, ...] = _codecs.DEFAULT_CODECS,
 ) -> None:
     """Run one engine launch over the eligible fields of one mesh: stats
     mode writes finished plans; samples mode deposits the reassembled
@@ -687,9 +704,7 @@ def _plan_engine_group(
         stats = jax.device_get(fn(*args))
         for (i, _, _), (br_sz, br_zfp, psnr, eb_sz), eb in zip(owned_of, stats, ebs):
             bs, bz = float(br_sz), float(br_zfp)
-            codec = "sz" if bs < bz else "zfp"
-            if min(bs, bz) >= 32.0:
-                codec = "raw"
+            codec = _pick_codec(bs, bz, codecs)
             sel = Selection(
                 codec, float(eb), float(eb_sz), bs, bz, float(psnr), vr_of[i], r_sp
             )
@@ -742,13 +757,11 @@ def encode_view_segment(view32: np.ndarray, sel: Selection) -> tuple[str, bytes]
     """Step 4 on one (shard of a) folded f32 view, mirroring
     `selector.encode_with_selection` including the never-bigger-than-raw
     safety net — applied per shard, so an incompressible shard of a
-    compressible field degrades alone (DESIGN.md §6)."""
-    if sel.codec == "sz":
-        data = _sz.sz_compress(view32, sel.eb_sz)
-    elif sel.codec == "zfp":
-        data = _zfp.zfp_compress(view32, sel.eb_abs)
-    else:
+    compressible field degrades alone (DESIGN.md §6). Dispatches through
+    the codec registry (DESIGN.md §2.1)."""
+    if sel.codec == "raw":
         return "raw", view32.tobytes()
+    data = _codecs.get(sel.codec).encode(view32, sel)
     if len(data) >= view32.nbytes:
         return "raw", view32.tobytes()
     return sel.codec, data
@@ -798,12 +811,7 @@ def decode_segments(
     out = np.empty(view_shape, np.float32)
     for s in segments:
         extent = tuple(b - a for a, b in zip(s.start, s.stop))
-        if s.codec == "sz":
-            part = _sz.sz_decompress(s.data)
-        elif s.codec == "zfp":
-            part = _zfp.zfp_decompress(s.data)
-        else:
-            part = np.frombuffer(s.data, np.float32)
+        part = _codecs.get(s.codec).decode(s.data)
         out[tuple(slice(a, b) for a, b in zip(s.start, s.stop))] = part.reshape(extent)
     return out
 

@@ -6,7 +6,7 @@ fields (FSDP-style weight sharding + replicated small tensors + raw
 optimizer state), then exercises the full shard-local pipeline:
 
   1. `CheckpointManager(sharded=True).save` — decisions from per-shard
-     statistics (no gather), per-shard segment encoding, v2 manifest;
+     statistics (no gather), per-shard segment encoding, segment manifest;
   2. elastic restore under a DIFFERENT mesh shape via
      `restore_tree(shardings=...)`;
   3. a parity check against the unsharded writer.
@@ -32,6 +32,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.core import Policy
 from repro.launch.mesh import make_emulated_mesh
 
 
@@ -72,7 +73,11 @@ def main() -> None:
 
     with tempfile.TemporaryDirectory() as d_sh, tempfile.TemporaryDirectory() as d_un:
         msh = CheckpointManager(
-            CheckpointConfig(directory=d_sh, eb_rel=args.eb_rel, sharded=True)
+            CheckpointConfig(
+                directory=d_sh,
+                policy=Policy.fixed_accuracy(eb_rel=args.eb_rel),
+                sharded=True,
+            )
         )
         t0 = time.perf_counter()
         path = msh.save(1, tree)
@@ -85,7 +90,9 @@ def main() -> None:
               f"{len(man['fields'])} fields / {n_segs} segments")
 
         host_tree = jax.tree_util.tree_map(np.asarray, tree)
-        mun = CheckpointManager(CheckpointConfig(directory=d_un, eb_rel=args.eb_rel))
+        mun = CheckpointManager(
+            CheckpointConfig(directory=d_un, policy=Policy.fixed_accuracy(eb_rel=args.eb_rel))
+        )
         t0 = time.perf_counter()
         mun.save(1, host_tree)
         t_un = time.perf_counter() - t0

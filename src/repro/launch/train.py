@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import get_config
+from repro.core import Policy, PolicySet
 from repro.data import DataConfig, synthetic_batch
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import build_model, reduced_for_smoke
@@ -43,6 +44,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--ckpt-eb", type=float, default=1e-4)
+    ap.add_argument(
+        "--ckpt-opt-ratio", type=float, default=None,
+        help="also lossy-compress optimizer state, at this fixed ratio "
+        "(a PolicySet: weights keep the eb bound, opt/* gets the budget)",
+    )
     ap.add_argument("--compress-ckpt", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--resume", action="store_true")
@@ -72,9 +78,15 @@ def main(argv=None) -> dict:
 
     mgr = None
     if args.ckpt_dir:
+        ckpt_policy: Policy | PolicySet = Policy.fixed_accuracy(eb_rel=args.ckpt_eb)
+        if args.ckpt_opt_ratio:
+            ckpt_policy = PolicySet(
+                default=ckpt_policy,
+                rules=[("opt/*", Policy.fixed_ratio(args.ckpt_opt_ratio))],
+            )
         mgr = CheckpointManager(
             CheckpointConfig(
-                args.ckpt_dir, eb_rel=args.ckpt_eb, compress=args.compress_ckpt
+                args.ckpt_dir, policy=ckpt_policy, compress=args.compress_ckpt
             )
         )
         if args.resume and mgr.latest_step() is not None:

@@ -21,11 +21,30 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.policy import Policy
+
 
 @dataclasses.dataclass(frozen=True)
 class GradCompressConfig:
     eb_rel: float = 1e-3   # of each tensor's grad value range
     hist_bits: int = 8     # entropy estimated over 2^hist_bits clipped codes
+    # optional Policy spelling of the bound (DESIGN.md §2): a fixed_accuracy
+    # policy whose eb_rel overrides the field above — gradient traffic is
+    # in-graph prequantization, so only the bound-centric contract applies
+    policy: Policy | None = None
+
+    def __post_init__(self):
+        if self.policy is not None:
+            if self.policy.mode != "fixed_accuracy" or self.policy.eb_rel is None:
+                raise ValueError(
+                    "gradient compression carries a value-range-relative "
+                    "bound: pass Policy.fixed_accuracy(eb_rel=...)"
+                )
+            object.__setattr__(self, "eb_rel", self.policy.eb_rel)
+
+    @classmethod
+    def from_policy(cls, policy: Policy, hist_bits: int = 8) -> "GradCompressConfig":
+        return cls(hist_bits=hist_bits, policy=policy)
 
 
 def init(params: Any) -> dict:

@@ -9,21 +9,27 @@ applications of the paper's Stage II:
 * `bot_compress_kv` — the ZFP-style fused BOT+truncate surrogate from the
   Pallas kernel, for host-offloaded KV pages: returns the reconstruction and
   exact bits/block so the runtime can decide page-out format online
-  (Algorithm-1-style, per page). Instead of a hard-coded error bound, pass
-  `target_ratio` to give the page a byte budget: an in-graph octave grid of
-  candidate bounds is scored by the sampled ZFP estimator (DESIGN.md §5)
-  and the tightest bound whose estimated rate meets the budget is used —
-  the quality-target controller's inversion (DESIGN.md §7) specialised to
-  a static grid so it never leaves the accelerator, with no trial
-  compressions: one fused kernel pass at the chosen bound.
+  (Algorithm-1-style, per page). The page's quality contract is the same
+  `Policy` object as everywhere else (DESIGN.md §2): a
+  `Policy.fixed_accuracy(...)` bound, or `Policy.fixed_ratio(x)` to give
+  the page a byte budget — an in-graph octave grid of candidate bounds is
+  scored by the sampled ZFP estimator (DESIGN.md §5) and the tightest
+  bound whose estimated rate meets the budget is used — the quality-target
+  controller's inversion (DESIGN.md §7) specialised to a static grid so it
+  never leaves the accelerator, with no trial compressions: one fused
+  kernel pass at the chosen bound. The legacy `eb_rel=`/`target_ratio=`
+  kwargs shim onto the equivalent Policy with a `DeprecationWarning`.
 """
 
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import estimator as est
+from repro.core.policy import Policy
 
 #: in-graph candidate bounds for the ratio-budget path: VR * 2^-j. The
 #: octave spacing matches the ZFP bit-plane staircase (rate moves ~1
@@ -72,9 +78,15 @@ def _budget_eb(page: jax.Array, vr: jax.Array, target_ratio: float) -> jax.Array
     return jnp.where(jnp.any(ok), ebs[idx], ebs[-1])
 
 
+#: the historical page default: a 1e-2 value-range-relative bound
+DEFAULT_KV_POLICY = Policy.fixed_accuracy(eb_rel=1e-2)
+
+
 def bot_compress_kv(
     page: jax.Array,
-    eb_rel: float = 1e-2,
+    policy: Policy | None = None,
+    *,
+    eb_rel: float | None = None,
     target_ratio: float | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """ZFP-path compression of a 2-D or 3-D KV page: (tokens, heads*dh)
@@ -82,20 +94,49 @@ def bot_compress_kv(
     the latter ride the 4x4x4 kernel tier (DESIGN.md §3.5), which exploits
     cross-page correlation of adjacent pages instead of flattening it away.
 
-    With `target_ratio` set, the error bound is solved in-graph from the
-    page's byte budget (see module docstring) and `eb_rel` is ignored;
-    otherwise the bound is the hard `eb_rel * value_range` of the page.
+    `policy` is the page's quality contract (static at trace time, so the
+    whole call stays jit-safe): `Policy.fixed_accuracy(eb_rel=...)` — a
+    hard `eb_rel * value_range` bound (default: eb_rel 1e-2) or an
+    absolute `eb_abs` — or `Policy.fixed_ratio(x)`, which solves the
+    bound in-graph from the page's byte budget (see module docstring).
+    The legacy `eb_rel=` / `target_ratio=` kwargs shim onto the
+    equivalent Policy with a `DeprecationWarning`.
 
     Returns (reconstruction, bits-per-block) from the fused Pallas kernel;
     callers compare sum(bits) against 8*page.nbytes to pick a page format.
     """
     from repro.kernels import ops
 
+    if isinstance(policy, (int, float)):  # old positional `eb_rel`
+        if eb_rel is not None:
+            raise ValueError("bot_compress_kv: eb_rel given twice")
+        policy, eb_rel = None, float(policy)
+    if policy is None:
+        if eb_rel is not None or target_ratio is not None:
+            if target_ratio is not None:
+                policy = Policy.fixed_ratio(target_ratio)
+            else:
+                policy = Policy.fixed_accuracy(eb_rel=eb_rel)
+            warnings.warn(
+                "bot_compress_kv(eb_rel=/target_ratio=) is deprecated; pass "
+                f"policy=Policy.{policy.mode}(...) (repro.core.policy)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        else:
+            policy = DEFAULT_KV_POLICY
+    elif eb_rel is not None or target_ratio is not None:
+        raise ValueError("pass either policy= or the legacy kwargs, not both")
     page32 = page.astype(jnp.float32)
     vr = jnp.maximum(jnp.max(page32) - jnp.min(page32), 1e-12)
-    if target_ratio is None:
-        eb = eb_rel * vr
+    if policy.mode == "fixed_ratio":
+        eb = _budget_eb(page32, vr, policy.target_ratio)
+    elif policy.mode == "fixed_accuracy":
+        eb = policy.eb_abs if policy.eb_abs is not None else policy.eb_rel * vr
     else:
-        eb = _budget_eb(page32, vr, target_ratio)
+        raise ValueError(
+            f"bot_compress_kv supports fixed_accuracy/fixed_ratio policies, "
+            f"got {policy.mode!r} (fixed_psnr needs the host-side controller)"
+        )
     recon, bits = ops.bot_fused(page32, eb)
     return recon.astype(page.dtype), bits

@@ -9,6 +9,7 @@ LATEST pointing at an older step). Now the worker parks the exception and
 import numpy as np
 import pytest
 
+from repro.core import Policy
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.core import selector as sel
 
@@ -22,7 +23,7 @@ def _tree(seed=0):
 
 
 def test_async_save_surfaces_encoder_exception(tmp_path, monkeypatch):
-    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3))
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), policy=Policy.fixed_accuracy(eb_rel=1e-3)))
 
     def boom(*a, **k):
         raise ValueError("encoder exploded")
@@ -37,7 +38,7 @@ def test_async_save_surfaces_encoder_exception(tmp_path, monkeypatch):
 
 def test_async_save_recovers_after_failure(tmp_path, monkeypatch):
     """A later good save works and wait() no longer re-raises stale errors."""
-    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3))
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), policy=Policy.fixed_accuracy(eb_rel=1e-3)))
     orig = sel.encode_with_selection
 
     def boom(*a, **k):
@@ -57,7 +58,7 @@ def test_async_save_recovers_after_failure(tmp_path, monkeypatch):
 
 def test_sync_save_propagates_inline(tmp_path, monkeypatch):
     """The synchronous path already propagated via Future.result(); keep it."""
-    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3))
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), policy=Policy.fixed_accuracy(eb_rel=1e-3)))
 
     def boom(*a, **k):
         raise ValueError("encoder exploded")

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    Policy,
     compress,
     compress_pytree,
     decompress,
@@ -38,7 +39,7 @@ def test_fixed_psnr_within_1db(target):
     """Acceptance: achieved PSNR of the real roundtrip within 1 dB of the
     target on smooth / noisy / rough / 3-D fields."""
     fields = _fields()
-    sols = solve_many(list(fields.values()), "fixed_psnr", target_psnr=target)
+    sols = solve_many(list(fields.values()), Policy.fixed_psnr(target))
     for (name, f), s in zip(fields.items(), sols):
         assert s.selection.codec in ("sz", "zfp"), name
         assert s.on_target, name
@@ -53,7 +54,7 @@ def test_fixed_ratio_within_10pct(target):
     """Acceptance: achieved compression ratio of the real byte stream
     within 10% of the target."""
     fields = _fields()
-    sols = solve_many(list(fields.values()), "fixed_ratio", target_ratio=target)
+    sols = solve_many(list(fields.values()), Policy.fixed_ratio(target))
     for (name, f), s in zip(fields.items(), sols):
         assert s.selection.codec in ("sz", "zfp"), name
         assert s.on_target, name
@@ -71,11 +72,11 @@ def test_constant_and_degenerate_fields_fall_back_raw():
         np.arange(10, dtype=np.float32),       # too small
         np.float32(1.5).reshape(()),           # 0-d
     ]
-    for mode, kw in (
-        ("fixed_psnr", dict(target_psnr=60.0)),
-        ("fixed_ratio", dict(target_ratio=8.0)),
+    for mode, pol in (
+        ("fixed_psnr", Policy.fixed_psnr(60.0)),
+        ("fixed_ratio", Policy.fixed_ratio(8.0)),
     ):
-        sols = solve_many(arrs, mode, **kw)
+        sols = solve_many(arrs, pol)
         assert [s.selection.codec for s in sols] == ["raw"] * 3
         # raw is lossless, so a PSNR target is met (inf) and a ratio
         # target is not (raw pins ratio to 1)
@@ -109,31 +110,37 @@ def test_estimated_curves_monotone_in_bound():
 
 def test_fixed_psnr_matches_single_field_solve():
     f = _fields()["noisy"]
-    s1 = solve(f, "fixed_psnr", target_psnr=55.0)
-    s2 = solve_many([f], "fixed_psnr", target_psnr=55.0)[0]
+    s1 = solve(f, Policy.fixed_psnr(55.0))
+    s2 = solve_many([f], Policy.fixed_psnr(55.0))[0]
     assert s1.selection.codec == s2.selection.codec
     assert s1.selection.eb_sz == pytest.approx(s2.selection.eb_sz, rel=1e-6)
 
 
 def test_invalid_mode_and_missing_targets_raise():
     f = _fields()["noisy"]
+    # Policy validates at construction (core/policy.py)
     with pytest.raises(ValueError):
-        solve(f, "fixed_psnr")
+        Policy("fixed_psnr")
     with pytest.raises(ValueError):
-        solve(f, "fixed_ratio")
+        Policy("fixed_ratio")
     with pytest.raises(ValueError):
-        solve(f, "fixed_ratio", target_ratio=-2.0)
+        Policy.fixed_ratio(-2.0)
+    with pytest.raises(ValueError):
+        Policy("no_such_mode", target_psnr=60.0)
+    # ... and the legacy mode-string path still validates before warning
     with pytest.raises(ValueError):
         solve(f, "no_such_mode", target_psnr=60.0)
     with pytest.raises(ValueError):
         solve_many([f], "fixed_accuracy")
+    with pytest.raises(ValueError):
+        solve_many([f], Policy.raw())
 
 
 def test_fixed_accuracy_mode_delegates_to_selection():
     from repro.core import select
 
     f = _fields()["noisy"]
-    sol = solve(f, "fixed_accuracy", eb_rel=1e-3)
+    sol = solve(f, Policy.fixed_accuracy(eb_rel=1e-3))
     ref = select(f, eb_rel=1e-3)
     assert sol.selection.codec == ref.codec
     assert sol.selection.eb_abs == pytest.approx(ref.eb_abs, rel=1e-6)
@@ -150,12 +157,12 @@ def test_pytree_mixed_mode_roundtrip():
         "tiny": np.ones(8, np.float32),
         "const": np.full((64, 64), 2.5, np.float32),
     }
-    for mode, kw in (
-        ("fixed_accuracy", dict(eb_rel=1e-4)),
-        ("fixed_psnr", dict(target_psnr=60.0)),
-        ("fixed_ratio", dict(target_ratio=8.0)),
+    for mode, pol, target in (
+        ("fixed_accuracy", Policy.fixed_accuracy(eb_rel=1e-4), None),
+        ("fixed_psnr", Policy.fixed_psnr(60.0), 60.0),
+        ("fixed_ratio", Policy.fixed_ratio(8.0), 8.0),
     ):
-        ct = compress_pytree(tree, mode=mode, **kw)
+        ct = compress_pytree(tree, pol)
         out = decompress_pytree(ct)
         np.testing.assert_array_equal(out["step"], tree["step"])
         np.testing.assert_array_equal(out["tiny"], tree["tiny"])
@@ -166,22 +173,22 @@ def test_pytree_mixed_mode_roundtrip():
         ):
             assert a.shape == b.shape and a.dtype == b.dtype
             if mode == "fixed_psnr":
-                assert _psnr(a, b) >= kw["target_psnr"] - 1.0
+                assert _psnr(a, b) >= target - 1.0
         if mode == "fixed_ratio":
             # per-leaf targets: every compressible leaf meets the ratio
             for name in ("layers/0", "layers/1", "noisy"):
                 cf = ct.fields[name]
                 ratio = int(np.prod(cf.shape)) * 4 / len(cf.data)
-                assert ratio >= kw["target_ratio"] * 0.9, (name, ratio)
+                assert ratio >= target * 0.9, (name, ratio)
 
 
 def test_compress_single_field_modes():
     f = _fields()["noisy"]
-    cf = compress(f, "fixed_psnr", target_psnr=50.0)
+    cf = compress(f, Policy.fixed_psnr(50.0))
     assert abs(_psnr(f, decompress(cf).reshape(f.shape)) - 50.0) <= 1.0
-    cf = compress(f, "fixed_ratio", target_ratio=8.0)
+    cf = compress(f, Policy.fixed_ratio(8.0))
     assert abs((f.size * 4 / len(cf.data)) / 8.0 - 1.0) <= 0.10
-    cf = compress(f, eb_rel=1e-3)  # fixed_accuracy default path
+    cf = compress(f, Policy.fixed_accuracy(eb_rel=1e-3))  # bound-centric path
     rec = decompress(cf).reshape(f.shape)
     vr = f.max() - f.min()
     assert np.abs(f - rec).max() <= 1e-3 * vr * 1.001
@@ -193,7 +200,7 @@ def test_checkpoint_manager_target_modes(tmp_path):
     fields = _fields()
     tree = {"w1": fields["smooth"], "w2": fields["noisy"], "opt/m": fields["rough"]}
     mgr = CheckpointManager(CheckpointConfig(
-        directory=str(tmp_path), mode="fixed_ratio", target_ratio=8.0, workers=0,
+        directory=str(tmp_path), policy=Policy.fixed_ratio(8.0), workers=0,
     ))
     mgr.save(7, tree)
     step, out = mgr.restore()
@@ -222,7 +229,7 @@ def test_kv_ratio_budget():
     rng = np.random.default_rng(1)
     page = jnp.asarray(np.cumsum(rng.standard_normal((256, 256)), 1).astype(np.float32))
     for target in (4.0, 8.0):
-        recon, bits = kvcomp.bot_compress_kv(page, target_ratio=target)
+        recon, bits = kvcomp.bot_compress_kv(page, Policy.fixed_ratio(target))
         total = float(jnp.sum(bits))
         # budget semantics: estimated-rate-guided bound meets the byte
         # budget, with at most ~one bit-plane (octave) of undershoot
@@ -231,6 +238,6 @@ def test_kv_ratio_budget():
         vr = float(jnp.max(page) - jnp.min(page))
         assert float(jnp.max(jnp.abs(recon - page))) <= 0.1 * vr
     # jit-safe (in-graph page-out decisions)
-    f = jax.jit(lambda p: kvcomp.bot_compress_kv(p, target_ratio=8.0))
+    f = jax.jit(lambda p: kvcomp.bot_compress_kv(p, Policy.fixed_ratio(8.0)))
     _, bits_j = f(page)
     assert float(jnp.sum(bits_j)) <= 32.0 * page.size / 8.0 * 1.05

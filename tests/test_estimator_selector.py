@@ -5,6 +5,7 @@ import pytest
 
 import jax.numpy as jnp
 
+from repro.core import Policy
 from repro.core import select, sz_compress, zfp_compress
 from repro.core import estimator as est
 from repro.core.api import compress_pytree, decompress_pytree
@@ -108,7 +109,7 @@ def test_compress_pytree_roundtrip():
         "step": np.array(7, dtype=np.int32),
         "nested": {"emb": np.cumsum(rng.standard_normal((96, 96)), 0).astype(np.float32)},
     }
-    ct = compress_pytree(tree, eb_rel=1e-4)
+    ct = compress_pytree(tree, Policy.fixed_accuracy(eb_rel=1e-4))
     assert set(ct.selection_bits) == {"w", "b", "step", "nested/emb"}
     out = decompress_pytree(ct)
     np.testing.assert_array_equal(out["step"], tree["step"])

@@ -29,6 +29,7 @@ from pathlib import Path
 
 import pytest
 
+from repro.core import Policy
 from repro.core import estimator as est
 from repro.core import select_many, solve_many
 
@@ -61,7 +62,9 @@ def _env_key() -> str:
 
 
 def _decide(fields, eb_rel):
-    sels = select_many(list(fields.values()), eb_rel=eb_rel)
+    # the Policy spelling — frozen goldens also pin the policy path to the
+    # historical kwarg decisions (the api_redesign invariant)
+    sels = select_many(list(fields.values()), policy=Policy.fixed_accuracy(eb_rel=eb_rel))
     return {
         name: dict(
             codec=s.codec,
@@ -74,8 +77,8 @@ def _decide(fields, eb_rel):
     }
 
 
-def _solve(fields, mode, **kw):
-    sols = solve_many(list(fields.values()), mode, **kw)
+def _solve(fields, pol):
+    sols = solve_many(list(fields.values()), pol)
     return {
         name: dict(
             codec=t.selection.codec,
@@ -144,7 +147,7 @@ def test_golden_fixed_accuracy(update_golden):
 
 def test_golden_fixed_psnr(update_golden):
     fields = _suite_fields()
-    current = _solve(fields, "fixed_psnr", target_psnr=60.0)
+    current = _solve(fields, Policy.fixed_psnr(60.0))
     # the solved bound rides measured sample curves -> slightly looser than
     # the closed-form fixed_accuracy eb (still far below any model change)
     _check_or_update(GOLDEN_DIR / "fixed_psnr.json", current, update_golden, eb_rtol=1e-4)
@@ -152,5 +155,5 @@ def test_golden_fixed_psnr(update_golden):
 
 def test_golden_fixed_ratio(update_golden):
     fields = _suite_fields()
-    current = _solve(fields, "fixed_ratio", target_ratio=6.0)
+    current = _solve(fields, Policy.fixed_ratio(6.0))
     _check_or_update(GOLDEN_DIR / "fixed_ratio.json", current, update_golden, eb_rtol=1e-4)

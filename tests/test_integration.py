@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import Policy
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import get_config
 from repro.data import DataConfig, synthetic_batch
@@ -88,7 +89,7 @@ def test_checkpoint_save_restore_resume(tmp_path):
 
 def test_checkpoint_lossy_roundtrip_bounded(tmp_path):
     _, params, opt, _, _ = _setup()
-    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), compress=True, eb_rel=1e-4))
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), policy=Policy.fixed_accuracy(eb_rel=1e-4), compress=True))
     mgr.save(1, {"params": params})
     _, restored = mgr.restore_tree({"params": params})
     for (pa, a), b in zip(

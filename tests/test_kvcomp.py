@@ -7,6 +7,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model, reduced_for_smoke
 from repro.models import nn as rnn
+from repro.core import Policy
 from repro.runtime import kvcomp
 
 
@@ -38,7 +39,7 @@ def test_int8_kv_cache_decode_close_to_fp():
 def test_bot_page_compression():
     rng = np.random.default_rng(1)
     page = jnp.asarray(np.cumsum(rng.standard_normal((256, 256)), 1).astype(np.float32))
-    recon, bits = kvcomp.bot_compress_kv(page, eb_rel=1e-2)
+    recon, bits = kvcomp.bot_compress_kv(page, Policy.fixed_accuracy(eb_rel=1e-2))
     vr = float(jnp.max(page) - jnp.min(page))
     assert float(jnp.max(jnp.abs(recon - page))) <= 1e-2 * vr
     assert float(jnp.sum(bits)) < 8 * page.size * 4  # beats raw f32

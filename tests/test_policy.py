@@ -1,0 +1,439 @@
+"""Policy-object API (core/policy.py, core/codecs.py; DESIGN.md §2, §2.1):
+resolution rules, validation, per-policy batch grouping, the deprecation
+shims (old kwargs -> identical bytes + DeprecationWarning), manifest v3,
+and the restored-leaf contracts (writeable arrays, honest `.ratio`)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.core import (
+    Policy,
+    PolicySet,
+    codecs,
+    compress,
+    compress_pytree,
+    decompress_pytree,
+    select_many,
+    solve_many,
+)
+from benchmarks.common import psnr as _psnr
+
+
+def _field(seed=0, shape=(128, 96), walk=True):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape)
+    if walk:
+        x = np.cumsum(x, axis=0)
+    return x.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Policy / PolicySet semantics
+# ---------------------------------------------------------------------------
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        Policy("nope")
+    with pytest.raises(ValueError):
+        Policy("fixed_psnr")  # no target
+    with pytest.raises(ValueError):
+        Policy("fixed_ratio", target_ratio=0.0)
+    with pytest.raises(ValueError):
+        Policy("fixed_accuracy")  # no bound
+    with pytest.raises(ValueError):
+        Policy.fixed_accuracy(eb_rel=-1e-3)
+    with pytest.raises(ValueError):
+        Policy.fixed_accuracy(r_sp=0.0)
+    with pytest.raises(ValueError):
+        Policy.fixed_accuracy(codecs=("unregistered-codec",))
+    with pytest.raises(ValueError):
+        # no lossy codec left for a lossy mode
+        Policy.fixed_psnr(60.0, codecs=("raw",))
+    # raw is always appended to the allowlist as the fallback
+    assert Policy.fixed_accuracy(codecs=("sz", "zfp")).codecs == ("sz", "zfp", "raw")
+    # frozen + hashable (grouping keys, jit-static args)
+    assert Policy.fixed_ratio(8.0) == Policy.fixed_ratio(8.0)
+    assert len({Policy.fixed_ratio(8.0), Policy.fixed_ratio(8.0)}) == 1
+
+
+def test_policy_spec_roundtrip():
+    for pol in (
+        Policy.fixed_accuracy(eb_rel=1e-3),
+        Policy.fixed_accuracy(eb_abs=0.25, r_sp=0.1),
+        Policy.fixed_psnr(60.0),
+        Policy.fixed_ratio(8.0, codecs=("sz",)),
+        Policy.raw(),
+    ):
+        assert Policy.from_spec(json.loads(json.dumps(pol.spec()))) == pol
+
+
+def test_policyset_first_match_wins_and_default_fallback():
+    p_def = Policy.fixed_accuracy(eb_rel=1e-4)
+    p_kv = Policy.fixed_ratio(8.0)
+    p_opt = Policy.raw()
+    pset = PolicySet(
+        default=p_def,
+        rules=[
+            ("*/kv/*", p_kv),
+            ("re:^opt/", p_opt),
+            ("opt/special", Policy.fixed_psnr(70.0)),  # shadowed: first match wins
+        ],
+    )
+    assert pset.resolve("layer0/kv/cache") is p_kv
+    assert pset.resolve("opt/m") is p_opt
+    assert pset.resolve("opt/special") is p_opt  # earlier re: rule wins
+    assert pset.resolve("params/w") is p_def
+    with pytest.raises(TypeError):
+        PolicySet(default="not a policy")
+    with pytest.raises(TypeError):
+        PolicySet(default=p_def, rules=[(123, p_kv)])
+
+
+def test_codec_registry():
+    assert set(codecs.names()) >= {"sz", "zfp", "raw"}
+    sz = codecs.get("sz")
+    assert not sz.lossless and sz.pointwise_bound
+    assert codecs.get("zfp").blockwise and not codecs.get("sz").blockwise
+    assert codecs.get("raw").lossless
+    with pytest.raises(KeyError):
+        codecs.get("fpzip")
+    with pytest.raises(ValueError):
+        codecs.register(codecs.get("sz"))  # duplicate name
+    # raw decode hands back a WRITEABLE array (trainable in place)
+    out = codecs.get("raw").decode(np.arange(4, dtype=np.float32).tobytes())
+    assert out.flags.writeable
+
+
+def test_codec_allowlist_restricts_selection():
+    f = _field(1)  # a walk: SZ wins under the full allowlist
+    full = select_many([f], policy=Policy.fixed_accuracy(eb_rel=1e-3))[0]
+    assert full.codec == "sz"
+    only_zfp = select_many(
+        [f], policy=Policy.fixed_accuracy(eb_rel=1e-3, codecs=("zfp",))
+    )[0]
+    assert only_zfp.codec in ("zfp", "raw")
+    # estimates are the same program; only the pick is restricted
+    assert only_zfp.br_sz == full.br_sz and only_zfp.br_zfp == full.br_zfp
+    sols = solve_many([f], Policy.fixed_ratio(8.0, codecs=("sz",)))
+    assert sols[0].selection.codec in ("sz", "raw")
+
+
+# ---------------------------------------------------------------------------
+# Per-policy batch grouping
+# ---------------------------------------------------------------------------
+
+
+def test_policyset_grouping_matches_per_policy_calls():
+    """A mixed-PolicySet tree decides each leaf exactly as a dedicated
+    single-policy call over that leaf's group would."""
+    tree = {
+        "w/a": _field(1),
+        "w/b": _field(2, walk=False),
+        "opt/m": _field(3),
+        "opt/v": _field(4),
+    }
+    p_acc = Policy.fixed_accuracy(eb_rel=1e-3)
+    p_ratio = Policy.fixed_ratio(8.0)
+    pset = PolicySet(default=p_acc, rules=[("opt/*", p_ratio)])
+    ct = compress_pytree(tree, pset, workers=0)
+
+    ref_acc = select_many([tree["w/a"], tree["w/b"]], policy=p_acc)
+    ref_ratio = [s.selection for s in solve_many([tree["opt/m"], tree["opt/v"]], p_ratio)]
+    assert ct.fields["w/a"].selection == ref_acc[0]
+    assert ct.fields["w/b"].selection == ref_acc[1]
+    assert ct.fields["opt/m"].selection == ref_ratio[0]
+    assert ct.fields["opt/v"].selection == ref_ratio[1]
+
+
+def test_single_policy_tree_identical_to_direct_select_many():
+    """The api_redesign invariant: one policy -> one group -> the exact
+    pre-policy batch composition and decisions."""
+    tree = {f"f{i}": _field(i, walk=i % 2 == 0) for i in range(6)}
+    ct = compress_pytree(tree, Policy.fixed_accuracy(eb_rel=1e-3), workers=0)
+    ref = select_many(list(tree.values()), eb_rel=1e-3)
+    for (name, _), r in zip(sorted(tree.items()), ref):
+        s = ct.fields[name].selection
+        assert (s.codec, s.eb_abs, s.eb_sz, s.br_sz, s.br_zfp) == (
+            r.codec, r.eb_abs, r.eb_sz, r.br_sz, r.br_zfp
+        ), name
+
+
+def test_mixed_policyset_tree_roundtrip_meets_targets():
+    """Acceptance: fixed_accuracy + fixed_psnr + fixed_ratio leaves in ONE
+    tree, each meeting its own §7 tolerance after the round-trip."""
+    tree = {
+        "acc/w": _field(10),
+        "psnr/w": _field(11),
+        "ratio/w": _field(12),
+        "meta": np.arange(32, dtype=np.int32),
+    }
+    eb_rel, target_db, target_x = 1e-3, 60.0, 8.0
+    pset = PolicySet(
+        default=Policy.fixed_accuracy(eb_rel=eb_rel),
+        rules=[
+            ("psnr/*", Policy.fixed_psnr(target_db)),
+            ("ratio/*", Policy.fixed_ratio(target_x)),
+        ],
+    )
+    ct = compress_pytree(tree, pset, workers=0)
+    out = decompress_pytree(ct)
+    np.testing.assert_array_equal(out["meta"], tree["meta"])
+    a = tree["acc/w"]
+    assert np.abs(out["acc/w"] - a).max() <= eb_rel * (a.max() - a.min()) * 1.001
+    assert abs(_psnr(tree["psnr/w"], out["psnr/w"]) - target_db) <= 1.0
+    cf = ct.fields["ratio/w"]
+    ratio = tree["ratio/w"].nbytes / len(cf.data)
+    assert abs(ratio / target_x - 1.0) <= 0.10
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: identical bytes + a warning
+# ---------------------------------------------------------------------------
+
+
+def _warns_deprecated():
+    return pytest.warns(DeprecationWarning)
+
+
+def test_compress_shim_bytes_identical():
+    f = _field(20)
+    new = compress(f, Policy.fixed_psnr(55.0))
+    with _warns_deprecated():
+        old = compress(f, "fixed_psnr", target_psnr=55.0)
+    assert (old.codec, old.data) == (new.codec, new.data)
+    new = compress(f, Policy.fixed_accuracy(eb_rel=1e-3))
+    with _warns_deprecated():
+        old = compress(f, eb_rel=1e-3)
+    assert (old.codec, old.data) == (new.codec, new.data)
+
+
+def test_compress_pytree_shim_bytes_identical():
+    tree = {"a": _field(21), "b": _field(22, walk=False), "i": np.arange(9)}
+    new = compress_pytree(tree, Policy.fixed_accuracy(eb_rel=1e-3), workers=0)
+    with _warns_deprecated():
+        old = compress_pytree(tree, eb_rel=1e-3, workers=0)
+    assert old.selection_bits == new.selection_bits
+    assert all(old.fields[k].data == new.fields[k].data for k in new.fields)
+    # the old positional-eb_rel spelling too
+    with _warns_deprecated():
+        old2 = compress_pytree(tree, 1e-3, workers=0)
+    assert all(old2.fields[k].data == new.fields[k].data for k in new.fields)
+
+
+def test_predicate_shim_warns_and_matches_policyset():
+    tree = {"w": _field(23), "skip": _field(24)}
+    with _warns_deprecated():
+        old = compress_pytree(
+            tree, Policy.fixed_accuracy(eb_rel=1e-3), workers=0,
+            predicate=lambda name, arr: name != "skip",
+        )
+    pset = PolicySet(
+        default=Policy.fixed_accuracy(eb_rel=1e-3), rules=[("skip", Policy.raw())]
+    )
+    new = compress_pytree(tree, pset, workers=0)
+    assert old.selection_bits == new.selection_bits
+    assert old.fields["skip"].codec == "raw"
+    assert all(old.fields[k].data == new.fields[k].data for k in new.fields)
+
+
+def test_solve_many_shim_matches_policy():
+    f = _field(25)
+    new = solve_many([f], Policy.fixed_ratio(6.0))[0]
+    with _warns_deprecated():
+        old = solve_many([f], "fixed_ratio", target_ratio=6.0)[0]
+    assert old.selection == new.selection and old.on_target == new.on_target
+
+
+def test_plan_tree_shim_warns():
+    from repro.core import sharded as shd
+
+    f = _field(26)
+    new = shd.plan_tree([f], Policy.fixed_accuracy(eb_rel=1e-3))
+    with _warns_deprecated():
+        old = shd.plan_tree([f], "fixed_accuracy", eb_rel=1e-3)
+    assert old[0].selection == new[0].selection
+
+
+def test_checkpoint_config_shim(tmp_path):
+    with _warns_deprecated():
+        cfg = CheckpointConfig(str(tmp_path), eb_rel=1e-3)
+    assert cfg.policy == Policy.fixed_accuracy(eb_rel=1e-3)
+    with _warns_deprecated():
+        cfg = CheckpointConfig(str(tmp_path), mode="fixed_ratio", target_ratio=8.0)
+    assert cfg.policy == Policy.fixed_ratio(8.0)
+    with pytest.raises(ValueError):
+        CheckpointConfig(str(tmp_path), policy=Policy.raw(), eb_rel=1e-3)
+
+
+def test_kvcomp_shim():
+    import jax.numpy as jnp
+
+    from repro.runtime import kvcomp
+
+    page = jnp.asarray(_field(27, (64, 64)))
+    r_new, b_new = kvcomp.bot_compress_kv(page, Policy.fixed_accuracy(eb_rel=1e-2))
+    with _warns_deprecated():
+        r_old, b_old = kvcomp.bot_compress_kv(page, eb_rel=1e-2)
+    np.testing.assert_array_equal(np.asarray(r_old), np.asarray(r_new))
+    np.testing.assert_array_equal(np.asarray(b_old), np.asarray(b_new))
+    with pytest.raises(ValueError):
+        kvcomp.bot_compress_kv(page, Policy.fixed_psnr(60.0))
+
+
+def test_policy_and_legacy_kwargs_together_raise():
+    f = _field(28)
+    with pytest.raises(ValueError):
+        compress(f, Policy.fixed_psnr(60.0), target_psnr=50.0)
+    with pytest.raises(ValueError):
+        solve_many([f], Policy.fixed_ratio(8.0), target_ratio=6.0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfixes: writeable restores, honest raw_nbytes
+# ---------------------------------------------------------------------------
+
+
+def test_policy_raw_compress_roundtrips_any_dtype():
+    """compress(x, Policy.raw()) stores exact original-dtype bytes and
+    decompress() inverts it bit-exactly — f64 precision, int payloads."""
+    from repro.core import decompress
+
+    for arr in (
+        (np.arange(64, dtype=np.float64) * np.pi).reshape(8, 8),
+        np.arange(64, dtype=np.int32).reshape(8, 8),
+        np.arange(64, dtype=np.float16).reshape(8, 8),
+    ):
+        cf = compress(arr, Policy.raw())
+        assert cf.codec == "raw" and cf.selection is None
+        out = decompress(cf)
+        assert out.dtype == arr.dtype and out.flags.writeable
+        np.testing.assert_array_equal(out, arr)
+
+
+def test_checkpoint_restores_lossy_raw_f64_field(tmp_path):
+    """A float64 field whose *selection* lands on raw (constant ->
+    degenerate) stores f32 working bytes in the flat layout; restore must
+    decode them as f32 and cast, not reinterpret as f64."""
+    tree = {"const64": np.full((64, 64), 2.5, np.float64), "w": _field(43)}
+    mgr = CheckpointManager(
+        CheckpointConfig(str(tmp_path), policy=Policy.fixed_accuracy(eb_rel=1e-3), workers=0)
+    )
+    path = mgr.save(1, tree)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    by_name = {f["name"]: f for f in man["fields"]}
+    assert by_name["const64"]["codec"] == "raw"  # degenerate -> selection raw
+    _, flat = mgr.restore()
+    assert flat["const64"].dtype == np.float64 and flat["const64"].flags.writeable
+    np.testing.assert_array_equal(flat["const64"], tree["const64"])
+
+
+def test_kvcomp_positional_eb_rel_shim():
+    import jax.numpy as jnp
+
+    from repro.runtime import kvcomp
+
+    page = jnp.asarray(_field(29, (64, 64)))
+    r_new, b_new = kvcomp.bot_compress_kv(page, Policy.fixed_accuracy(eb_rel=1e-2))
+    with _warns_deprecated():
+        r_old, b_old = kvcomp.bot_compress_kv(page, 1e-2)  # old positional eb_rel
+    np.testing.assert_array_equal(np.asarray(r_old), np.asarray(r_new))
+    np.testing.assert_array_equal(np.asarray(b_old), np.asarray(b_new))
+
+
+def test_select_many_policy_conflicts_raise():
+    f = _field(31)
+    pol = Policy.fixed_accuracy(eb_rel=1e-3)
+    with pytest.raises(ValueError):
+        select_many([f], r_sp=0.2, policy=pol)
+    with pytest.raises(ValueError):
+        select_many([f], codecs=("zfp",), policy=pol)
+
+
+def test_decompress_pytree_leaves_writeable():
+    tree = {
+        "w": _field(30),
+        "ids": np.arange(256, dtype=np.int32),  # raw, no selection
+        "tiny": np.ones(4, np.float32),         # degenerate raw, with selection
+    }
+    out = decompress_pytree(compress_pytree(tree, workers=0))
+    for name, leaf in (("w", out["w"]), ("ids", out["ids"]), ("tiny", out["tiny"])):
+        assert leaf.flags.writeable, name
+        leaf[...] = 0  # in-place training must not raise
+
+
+def test_raw_nbytes_uses_recorded_dtype_itemsize():
+    import ml_dtypes
+
+    tree = {
+        "f64": np.cumsum(np.ones((32, 32)), axis=0),            # 8 B/value
+        "bf16": np.zeros((16, 16), dtype=ml_dtypes.bfloat16),   # 2 B/value
+        "i32": np.arange(100, dtype=np.int32),                  # 4 B/value
+        "i8": np.arange(64, dtype=np.int8),                     # 1 B/value
+    }
+    ct = compress_pytree(tree, workers=0)
+    expect = sum(np.asarray(v).nbytes for v in tree.values())
+    assert ct.raw_nbytes == expect
+    assert ct.ratio == ct.raw_nbytes / max(ct.nbytes, 1)
+
+
+# ---------------------------------------------------------------------------
+# Manifest v3 + old-version readers
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_v3_records_resolved_policies(tmp_path):
+    tree = {
+        "params/w": _field(40),
+        "opt/m": _field(41),
+        "meta": np.arange(8, dtype=np.int64),
+    }
+    pset = PolicySet(
+        default=Policy.fixed_accuracy(eb_rel=1e-3),
+        rules=[("opt/*", Policy.fixed_ratio(8.0))],
+    )
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), policy=pset, workers=0))
+    path = mgr.save(3, tree)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    assert man["version"] == 3 and man["layout"] == "flat"
+    assert Policy.from_spec(man["policy"]["default"]) == pset.default
+    assert man["policy"]["rules"] == [["opt/*", Policy.fixed_ratio(8.0).spec()]]
+    by_name = {f["name"]: f for f in man["fields"]}
+    assert by_name["params/w"]["policy"]["mode"] == "fixed_accuracy"
+    assert by_name["opt/m"]["policy"]["mode"] == "fixed_ratio"
+    assert by_name["meta"]["policy"] == {"mode": "raw"}
+    # the fixed_ratio leaf met its byte budget (±10%)
+    fl = by_name["opt/m"]
+    assert abs((tree["opt/m"].nbytes / fl["nbytes"]) / 8.0 - 1.0) <= 0.10
+    # restored leaves are writeable, dtypes preserved
+    _, flat = mgr.restore()
+    for name, arr in flat.items():
+        assert arr.flags.writeable, name
+    np.testing.assert_array_equal(flat["meta"], tree["meta"])
+
+
+def test_v1_manifest_still_restorable(tmp_path):
+    """A v3-flat checkpoint stripped back to the v1 manifest shape (no
+    version/layout/policy keys) restores through the same reader."""
+    tree = {"w": _field(42), "ids": np.arange(64, dtype=np.int32)}
+    mgr = CheckpointManager(
+        CheckpointConfig(str(tmp_path), policy=Policy.fixed_accuracy(eb_rel=1e-3), workers=0)
+    )
+    path = mgr.save(1, tree)
+    _, ref = mgr.restore()
+    mpath = os.path.join(path, "manifest.json")
+    man = json.load(open(mpath))
+    for key in ("version", "layout", "policy"):
+        man.pop(key)
+    for fl in man["fields"]:
+        fl.pop("policy")
+    json.dump(man, open(mpath, "w"))
+    step, flat = mgr.restore()
+    assert step == 1
+    for name in ref:
+        np.testing.assert_array_equal(flat[name], ref[name], err_msg=name)
+        assert flat[name].flags.writeable, name

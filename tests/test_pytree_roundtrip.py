@@ -1,8 +1,11 @@
 """compress_pytree / decompress_pytree round-trips on mixed pytrees:
-non-float leaves, 0-d scalars, >3-D tensors, predicate-skipped fields."""
+non-float leaves, 0-d scalars, >3-D tensors, policy-raw fields — plus the
+restored-leaf contracts: every leaf WRITEABLE, `.ratio` measured against
+true per-dtype raw bytes."""
 
 import numpy as np
 
+from repro.core import Policy, PolicySet
 from repro.core.api import compress_pytree, decompress_pytree
 
 
@@ -26,7 +29,7 @@ def _mixed_tree(seed=0):
 
 def test_mixed_tree_shapes_and_dtypes_preserved():
     tree = _mixed_tree()
-    ct = compress_pytree(tree, eb_rel=1e-4)
+    ct = compress_pytree(tree, Policy.fixed_accuracy(eb_rel=1e-4))
     out = decompress_pytree(ct)
     flat_in = {
         "w": tree["w"], "wd": tree["wd"], "conv": tree["conv"],
@@ -55,7 +58,7 @@ def test_mixed_tree_shapes_and_dtypes_preserved():
 def test_float_leaves_respect_error_bound():
     tree = _mixed_tree(seed=5)
     eb_rel = 1e-4
-    ct = compress_pytree(tree, eb_rel=eb_rel)
+    ct = compress_pytree(tree, Policy.fixed_accuracy(eb_rel=eb_rel))
     out = decompress_pytree(ct)
     for k in ("w", "bias"):
         vr = tree[k].max() - tree[k].min()
@@ -68,10 +71,13 @@ def test_float_leaves_respect_error_bound():
     np.testing.assert_array_equal(out["lr"], tree["lr"])
 
 
-def test_predicate_skipped_fields_stay_exact():
+def test_policy_raw_fields_stay_exact():
     tree = _mixed_tree(seed=9)
-    skip = {"w", "nested/emb"}
-    ct = compress_pytree(tree, eb_rel=1e-2, predicate=lambda name, arr: name not in skip)
+    pset = PolicySet(
+        default=Policy.fixed_accuracy(eb_rel=1e-2),
+        rules=[("w", Policy.raw()), ("nested/emb", Policy.raw())],
+    )
+    ct = compress_pytree(tree, pset)
     assert ct.fields["w"].codec == "raw"
     assert ct.fields["nested/emb"].codec == "raw"
     out = decompress_pytree(ct)

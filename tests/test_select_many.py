@@ -3,6 +3,7 @@
 import numpy as np
 import pytest
 
+from repro.core import Policy
 from repro.core import decompress, encode_with_selection, select, select_many
 from repro.core.api import compress_pytree, decompress_pytree
 
@@ -81,7 +82,7 @@ def test_select_many_encode_roundtrip_bounded():
 def test_compress_pytree_uses_batched_path_same_result():
     """compress_pytree (batched + threaded) decisions == per-field select."""
     fields = _field_suite(n_fields=12, seed=7)
-    ct = compress_pytree(fields, eb_rel=1e-4)
+    ct = compress_pytree(fields, Policy.fixed_accuracy(eb_rel=1e-4))
     for name, arr in fields.items():
         s = select(arr, eb_rel=1e-4)
         cf = ct.fields[name]
@@ -97,8 +98,8 @@ def test_compress_pytree_uses_batched_path_same_result():
 
 def test_compress_pytree_serial_matches_threaded():
     fields = _field_suite(n_fields=6, seed=11)
-    ct_threaded = compress_pytree(fields, eb_rel=1e-3, workers=4)
-    ct_serial = compress_pytree(fields, eb_rel=1e-3, workers=0)
+    ct_threaded = compress_pytree(fields, Policy.fixed_accuracy(eb_rel=1e-3), workers=4)
+    ct_serial = compress_pytree(fields, Policy.fixed_accuracy(eb_rel=1e-3), workers=0)
     for name in fields:
         assert ct_threaded.fields[name].codec == ct_serial.fields[name].codec
         assert ct_threaded.fields[name].data == ct_serial.fields[name].data

@@ -18,6 +18,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.core import Policy, PolicySet
 from repro.core import estimator as est
 from repro.core import sharded as shd
 from repro.core.api import ShardedCompressedField, compress_pytree, decompress_pytree
@@ -93,7 +94,7 @@ def test_gathered_sample_blocks_bit_identical(mesh):
     ref = est.gather_blocks_np(x, starts, halo=True)
 
     fn = shd._engine_fn(mesh, tuple(), "samples", "zfp")  # noqa: F841 warm cache path
-    plans = shd.plan_tree([xs], "fixed_accuracy", eb_rel=1e-3, reconcile="samples")
+    plans = shd.plan_tree([xs], Policy.fixed_accuracy(eb_rel=1e-3), reconcile="samples")
     assert plans[0].reconcile == "samples"
     # reproduce the gather the engine did and compare block-for-block
     owned, mx, stacked = shd._starts_plan(
@@ -159,7 +160,7 @@ def test_fixed_accuracy_decision_parity(mesh, reconcile):
     host = _host_tree(tree)
     names = [k for k in tree if np.issubdtype(np.asarray(host[k]).dtype, np.floating)]
     arrs = [tree[k] for k in names]
-    plans = shd.plan_tree(arrs, "fixed_accuracy", eb_rel=1e-3, reconcile=reconcile)
+    plans = shd.plan_tree(arrs, Policy.fixed_accuracy(eb_rel=1e-3), reconcile=reconcile)
     ref = select_many([host[k] for k in names], eb_rel=1e-3)
     codecs = set()
     reconciles = set()
@@ -183,20 +184,20 @@ def test_fixed_accuracy_decision_parity(mesh, reconcile):
 
 @pytest.mark.slow
 @pytest.mark.parametrize(
-    "mode,kw",
+    "mode,pol",
     [
-        ("fixed_accuracy", dict(eb_rel=1e-3)),
-        ("fixed_psnr", dict(target_psnr=60.0)),
-        ("fixed_ratio", dict(target_ratio=6.0)),
+        ("fixed_accuracy", Policy.fixed_accuracy(eb_rel=1e-3)),
+        ("fixed_psnr", Policy.fixed_psnr(60.0)),
+        ("fixed_ratio", Policy.fixed_ratio(6.0)),
     ],
 )
-def test_compress_pytree_parity_all_modes(mesh, mode, kw):
+def test_compress_pytree_parity_all_modes(mesh, mode, pol):
     """compress_pytree(sharded) vs unsharded: identical selection bits and
     bit-identical decompressed bytes for a mixed pytree in every mode."""
     tree = _mixed_tree(mesh)
     host = _host_tree(tree)
-    ct = compress_pytree(tree, mode=mode, **kw)
-    ct_ref = compress_pytree(host, mode=mode, sharded=False, **kw)
+    ct = compress_pytree(tree, pol)
+    ct_ref = compress_pytree(host, pol, sharded=False)
     out = decompress_pytree(ct)
     ref = decompress_pytree(ct_ref)
     for name in ct_ref.fields:
@@ -213,29 +214,32 @@ def test_compress_pytree_parity_all_modes(mesh, mode, kw):
 
 @pytest.mark.slow
 @pytest.mark.parametrize(
-    "mode,kw",
+    "mode,pol",
     [
-        ("fixed_accuracy", dict()),
-        ("fixed_psnr", dict(mode="fixed_psnr", target_psnr=60.0)),
-        ("fixed_ratio", dict(mode="fixed_ratio", target_ratio=6.0)),
+        ("fixed_accuracy", Policy.fixed_accuracy(eb_rel=1e-3)),
+        ("fixed_psnr", Policy.fixed_psnr(60.0)),
+        ("fixed_ratio", Policy.fixed_ratio(6.0)),
     ],
 )
-def test_checkpoint_manifest_and_bytes_parity(mesh, tmp_path, mode, kw):
+def test_checkpoint_manifest_and_bytes_parity(mesh, tmp_path, mode, pol):
     """Sharded CheckpointManager vs unsharded: same manifest decisions and
     identical restored tensors, in all three CheckpointConfig modes."""
     tree = _mixed_tree(mesh)
     host = _host_tree(tree)
     m_sh = CheckpointManager(
-        CheckpointConfig(directory=str(tmp_path / "sh"), eb_rel=1e-3, sharded=True, **kw)
+        CheckpointConfig(directory=str(tmp_path / "sh"), policy=pol, sharded=True)
     )
     m_un = CheckpointManager(
-        CheckpointConfig(directory=str(tmp_path / "un"), eb_rel=1e-3, **kw)
+        CheckpointConfig(directory=str(tmp_path / "un"), policy=pol)
     )
     p_sh = m_sh.save(1, tree)
     p_un = m_un.save(1, host)
     man_sh = json.load(open(os.path.join(p_sh, "manifest.json")))
     man_un = json.load(open(os.path.join(p_un, "manifest.json")))
-    assert man_sh["version"] == 2 and "version" not in man_un
+    # both manifests are v3; the layout key picks the reader
+    assert man_sh["version"] == 3 and man_sh["layout"] == "segments"
+    assert man_un["version"] == 3 and man_un["layout"] == "flat"
+    assert man_sh["policy"] == man_un["policy"] == {"default": pol.spec()}
     assert man_sh["selection_bits"] == man_un["selection_bits"]
     eb_sh = {f["name"]: f["eb"] for f in man_sh["fields"]}
     eb_un = {f["name"]: f["eb"] for f in man_un["fields"]}
@@ -248,12 +252,79 @@ def test_checkpoint_manifest_and_bytes_parity(mesh, tmp_path, mode, kw):
         assert f_sh[name].dtype == f_un[name].dtype, name
 
 
+def test_mixed_policyset_sharded(mesh, tmp_path):
+    """Acceptance: fixed_accuracy + fixed_psnr + fixed_ratio leaves in ONE
+    sharded tree — through compress_pytree(sharded) AND the checkpoint
+    writer — each meeting its own §7 tolerance, with the manifest
+    recording the resolved per-field policies (and staying readable after
+    a rewrite to the v2 manifest shape)."""
+    rng = np.random.default_rng(11)
+
+    def mk(seed, walk_axis=0):
+        x = np.cumsum(rng.standard_normal((128, 96)), axis=walk_axis).astype(np.float32)
+        return x, jax.device_put(x, NamedSharding(mesh, P("data", None)))
+
+    eb_rel, target_db, target_x = 1e-3, 60.0, 6.0
+    h_acc, s_acc = mk(0)
+    h_psnr, s_psnr = mk(1)
+    h_ratio, s_ratio = mk(2)
+    tree = {"acc/w": s_acc, "psnr/w": s_psnr, "ratio/w": s_ratio,
+            "meta": np.arange(16, dtype=np.int32)}
+    host = {"acc/w": h_acc, "psnr/w": h_psnr, "ratio/w": h_ratio}
+    pset = PolicySet(
+        default=Policy.fixed_accuracy(eb_rel=eb_rel),
+        rules=[("psnr/*", Policy.fixed_psnr(target_db)),
+               ("ratio/*", Policy.fixed_ratio(target_x))],
+    )
+
+    def check(out, nbytes_of):
+        assert np.abs(out["acc/w"] - h_acc).max() <= eb_rel * (h_acc.max() - h_acc.min()) * 1.001
+        from benchmarks.common import psnr as _ps
+        assert abs(_ps(h_psnr, out["psnr/w"]) - target_db) <= 1.0
+        assert abs((h_ratio.nbytes / nbytes_of("ratio/w")) / target_x - 1.0) <= 0.10
+
+    ct = compress_pytree(tree, pset, workers=0)
+    for name in host:
+        assert isinstance(ct.fields[name], ShardedCompressedField), name
+    out = decompress_pytree(ct)
+    check(out, lambda n: ct.fields[n].nbytes)
+
+    mgr = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), policy=pset, sharded=True, workers=0)
+    )
+    path = mgr.save(4, tree)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    assert man["version"] == 3 and man["layout"] == "segments"
+    by_name = {f["name"]: f for f in man["fields"]}
+    assert by_name["acc/w"]["policy"]["mode"] == "fixed_accuracy"
+    assert by_name["psnr/w"]["policy"]["mode"] == "fixed_psnr"
+    assert by_name["ratio/w"]["policy"]["mode"] == "fixed_ratio"
+    assert by_name["meta"]["policy"] == {"mode": "raw"}
+    _, flat = mgr.restore()
+    check(flat, lambda n: by_name[n]["nbytes"])
+    np.testing.assert_array_equal(flat["meta"], np.arange(16, dtype=np.int32))
+
+    # the v2 manifest shape (version: 2, no layout/policy keys) still reads
+    man_v2 = dict(man)
+    man_v2["version"] = 2
+    man_v2.pop("layout"), man_v2.pop("policy")
+    for fl in man_v2["fields"]:
+        fl.pop("policy")
+    json.dump(man_v2, open(os.path.join(path, "manifest.json"), "w"))
+    _, flat_v2 = mgr.restore()
+    for name in flat:
+        np.testing.assert_array_equal(flat_v2[name], flat[name], err_msg=name)
+
+
 def test_restore_under_different_mesh(mesh, tmp_path):
     """Elasticity: a checkpoint saved on a (2,4) mesh restores under (4,2)
     and (8,1) meshes — and with no mesh at all — with identical values."""
     tree = _mixed_tree(mesh)
     mgr = CheckpointManager(
-        CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3, sharded=True)
+        CheckpointConfig(
+            directory=str(tmp_path), policy=Policy.fixed_accuracy(eb_rel=1e-3),
+            sharded=True,
+        )
     )
     mgr.save(5, tree)
     _, flat = mgr.restore()  # mesh-free reassembly
@@ -280,14 +351,16 @@ def test_restore_under_different_mesh(mesh, tmp_path):
             np.testing.assert_array_equal(np.asarray(leaf), flat[name], err_msg=name)
 
 
-def test_v1_layout_still_readable(mesh, tmp_path):
-    """The sharded-era reader accepts old single-file checkpoints."""
+def test_flat_layout_readable_by_sharded_reader(mesh, tmp_path):
+    """The sharded-configured reader accepts single-file (flat) checkpoints
+    — layout dispatch is per manifest, not per config."""
     tree = _host_tree(_mixed_tree(mesh))
-    m_v1 = CheckpointManager(CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3))
+    pol = Policy.fixed_accuracy(eb_rel=1e-3)
+    m_v1 = CheckpointManager(CheckpointConfig(directory=str(tmp_path), policy=pol))
     path = m_v1.save(2, tree)
     assert os.path.exists(os.path.join(path, "data.bin"))
     m_reader = CheckpointManager(
-        CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3, sharded=True)
+        CheckpointConfig(directory=str(tmp_path), policy=pol, sharded=True)
     )
     step, flat = m_reader.restore()
     assert step == 2
@@ -297,12 +370,15 @@ def test_v1_layout_still_readable(mesh, tmp_path):
 
 
 def test_sharded_segments_layout(mesh, tmp_path):
-    """v2 manifests record per-shard segments whose extents tile each
-    field's folded view, and per-host data files hold exactly the
-    concatenated segment bytes."""
+    """Segment-layout manifests record per-shard segments whose extents
+    tile each field's folded view, and per-host data files hold exactly
+    the concatenated segment bytes."""
     tree = _mixed_tree(mesh)
     mgr = CheckpointManager(
-        CheckpointConfig(directory=str(tmp_path), eb_rel=1e-3, sharded=True)
+        CheckpointConfig(
+            directory=str(tmp_path), policy=Policy.fixed_accuracy(eb_rel=1e-3),
+            sharded=True,
+        )
     )
     path = mgr.save(1, tree)
     man = json.load(open(os.path.join(path, "manifest.json")))

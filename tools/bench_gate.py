@@ -93,6 +93,27 @@ def bench_decisions(fields, sels) -> dict:
     }
 
 
+def bench_policyset_parity(fields, sels) -> list[str]:
+    """Rerun the smoke decisions through the Policy-object API
+    (`compress_pytree` with a `PolicySet` whose decoy rule matches
+    nothing) and list every field whose decision differs from the direct
+    `select_many` kwarg path — the api_redesign invariant: the policy
+    grouping layer must flip NOTHING for a single-policy tree."""
+    from repro.core import Policy, PolicySet, compress_pytree
+
+    pset = PolicySet(
+        default=Policy.fixed_accuracy(eb_rel=1e-3),
+        rules=[("no-such-leaf/*", Policy.fixed_ratio(6.0))],
+    )
+    ct = compress_pytree(dict(fields), pset, workers=0)
+    bad = []
+    for name, s in zip(fields, sels):
+        got = ct.fields[name].selection
+        if got is None or got.codec != s.codec or got.eb_sz != s.eb_sz:
+            bad.append(name)
+    return bad
+
+
 def bench_estimation_error(fields, sels) -> float:
     """Estimation smoke: mean |estimated - actual| bits/value over the
     smoke fields on each field's SELECTED codec (the §4–§5 estimators'
@@ -142,6 +163,18 @@ def gate(metrics: dict, baseline: dict) -> list[dict]:
     """Compare current metrics against the baseline -> list of checks."""
     checks: list[dict] = []
     key = _env_key()
+    parity = metrics.get("policyset_parity_mismatches")
+    if parity is not None:
+        checks.append(
+            dict(
+                name="policyset_parity",
+                passed=not parity,
+                detail=(
+                    f"PolicySet route flipped: {parity}" if parity
+                    else "PolicySet route matches select_many decisions"
+                ),
+            )
+        )
     base_dec = baseline.get("decisions", {}).get(key)
     if base_dec is None:
         checks.append(
@@ -220,6 +253,11 @@ def main() -> int:
     fields, sels = _smoke_selections()
     metrics: dict = {"decisions": bench_decisions(fields, sels)}
     print(f"  decisions: {len(metrics['decisions'])} fields", flush=True)
+    metrics["policyset_parity_mismatches"] = bench_policyset_parity(fields, sels)
+    print(
+        f"  policyset parity: {len(metrics['policyset_parity_mismatches'])} mismatches",
+        flush=True,
+    )
     if not (args.update_baseline and args.decisions_only):
         metrics["estimation_error_b"] = bench_estimation_error(fields, sels)
         print(f"  estimation error: {metrics['estimation_error_b']:.3f} b/v", flush=True)
