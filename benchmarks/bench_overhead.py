@@ -1,5 +1,8 @@
 """Paper Table 6: estimation (selection) time overhead vs SZ/ZFP compression
-time, per sampling rate."""
+time, per sampling rate — plus the DESIGN.md §8 repeated-save scenario
+(`run_repeated_save`): the same tree saved step after step through a
+`DecisionCache`, reporting warm selection overhead as a percentage of
+encode time, the cache hit rate, and any warm-vs-cold decision flips."""
 
 from __future__ import annotations
 
@@ -41,9 +44,93 @@ def run(rates=(0.01, 0.05, 0.10), eb_rel: float = 1e-3, suites=("ATM", "Hurrican
     return rows
 
 
+def run_repeated_save(
+    n_steps: int = 4,
+    eb_rel: float = 1e-3,
+    n_fields: int = 6,
+    atm_size=(384, 768),
+    hur_size=(32, 96, 96),
+):
+    """The warm-save workload (DESIGN.md §8): select+encode the SAME tree
+    `n_steps` times through one `DecisionCache`. Step 0 cold-populates;
+    later steps should be all hits, with selection overhead a small
+    fraction of encode time. Returns (csv rows, summary dict): the
+    summary carries `warm_overhead_pct` (warm selection time / encode
+    time), `warm_save_speedup` (cold / warm selection time),
+    `hit_rate`, and `flips` — fields whose warm decision differs from
+    the cold reference (must be empty: validated hits replay cold
+    decisions bit-identically)."""
+    from repro.core import encode_with_selection, select_many
+    from repro.core.decision_cache import DecisionCache
+    from repro.core.policy import Policy
+
+    fields = {}
+    fields.update(
+        {f"atm/{k}": v
+         for k, v in list(SUITES["ATM"](size=atm_size).items())[:n_fields]}
+    )
+    fields.update(
+        {f"hur/{k}": v
+         for k, v in list(SUITES["Hurricane"](size=hur_size).items())[:n_fields]}
+    )
+    names, arrs = list(fields), list(fields.values())
+    pol = Policy.fixed_accuracy(eb_rel=eb_rel)
+    # jit warm-up, then the cold reference (the in-situ model: recurring
+    # shapes mean the one-time compiles are amortized away); best-of-3,
+    # matching the warm side's best-warm-step, so the gated ratio is not
+    # at the mercy of one timer sample
+    select_many(arrs, policy=pol)
+    cold_runs = [timer(lambda: select_many(arrs, policy=pol)) for _ in range(3)]
+    cold_sels, t_cold = min(cold_runs, key=lambda r: r[1])
+    cache = DecisionCache()
+    rows = [csv_row("step", "select_seconds", "encode_seconds",
+                    "overhead_pct", "hits", "misses")]
+    flips: set[str] = set()
+    warm_times = []
+    t_enc = 1e-9
+    for step in range(n_steps):
+        cache.reset_stats()
+        sels, t_sel = timer(
+            lambda: select_many(arrs, policy=pol, cache=cache, names=names)
+        )
+        _, t_enc = timer(
+            lambda: [encode_with_selection(x, s) for x, s in zip(arrs, sels)]
+        )
+        if step > 0:
+            warm_times.append(t_sel)
+            flips.update(
+                n for n, a, b in zip(names, sels, cold_sels) if a != b
+            )
+        st = cache.stats()
+        rows.append(csv_row(
+            step, f"{t_sel:.4f}", f"{t_enc:.4f}",
+            f"{100.0 * t_sel / t_enc:.2f}", st["hits"], st["misses"],
+        ))
+    t_warm = min(warm_times)  # steady-state: best warm step
+    summary = dict(
+        cold_select_seconds=t_cold,
+        warm_select_seconds=t_warm,
+        encode_seconds=t_enc,
+        warm_overhead_pct=100.0 * t_warm / t_enc,
+        warm_save_speedup=t_cold / max(t_warm, 1e-9),
+        hit_rate=cache.stats()["hit_rate"],
+        flips=sorted(flips),
+    )
+    return rows, summary
+
+
 def main() -> None:
     for r in run():
         print(r)
+    rows, summary = run_repeated_save()
+    print()
+    for r in rows:
+        print(r)
+    print(
+        f"warm overhead {summary['warm_overhead_pct']:.2f}% of encode, "
+        f"{summary['warm_save_speedup']:.1f}x over cold selection, "
+        f"hit rate {summary['hit_rate']:.2f}, flips {summary['flips']}"
+    )
 
 
 if __name__ == "__main__":

@@ -119,6 +119,13 @@ class CheckpointConfig:
     # shard-local engine (DESIGN.md §6): decisions from per-shard statistics,
     # per-shard segment encoding, segment-layout manifest — no gather
     sharded: bool = False
+    # cross-step decision cache (DESIGN.md §8): False = cold every save
+    # (pre-§8 behavior, byte-identical); True = manager-owned
+    # `DecisionCache()` (bit-identity contract, tolerance 0); or pass a
+    # configured `DecisionCache` instance to share one across managers or
+    # to opt into tolerance>0 / warm_start. The cache rides the manifest
+    # (`decision_cache` key) so `restore` leaves the next save warm.
+    cache: Any = False
     # deprecated kwarg spelling (None = unset) — shimmed onto `policy`
     eb_rel: float | None = None
     r_sp: float | None = None
@@ -193,6 +200,15 @@ class CheckpointManager:
         os.makedirs(cfg.directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._exc: BaseException | None = None
+        # resolve cfg.cache -> DecisionCache | None (DESIGN.md §8)
+        cache = cfg.cache
+        if cache is True:
+            from repro.core.decision_cache import DecisionCache
+
+            cache = DecisionCache()
+        elif cache is False or cache is None:
+            cache = None
+        self.cache = cache
 
     # -- save ---------------------------------------------------------------
 
@@ -253,10 +269,15 @@ class CheckpointManager:
         sel_of: dict[int, sel.Selection] = {}
         for pol, idxs in group_by_policy(pol_of).items():
             arrs = [items[i][1] for i in idxs]
+            names = [items[i][0] for i in idxs] if self.cache is not None else None
             if pol.mode == "fixed_accuracy":
-                sels = sel.select_many(arrs, policy=pol)
+                sels = sel.select_many(
+                    arrs, policy=pol, cache=self.cache, names=names
+                )
             else:
-                sols = controller.solve_many(arrs, pol)
+                sols = controller.solve_many(
+                    arrs, pol, cache=self.cache, names=names
+                )
                 sels = [s.selection for s in sols]
             sel_of.update(zip(idxs, sels))
 
@@ -347,6 +368,10 @@ class CheckpointManager:
         )
         if extra:
             man.update(extra)
+        if self.cache is not None:
+            # persist the warm-save state (DESIGN.md §8.4): a restored run
+            # reloads these entries and its first save revalidates them
+            man["decision_cache"] = self.cache.to_manifest()
         return man
 
     def _publish(self, tmp: str, final: str) -> str:
@@ -389,7 +414,10 @@ class CheckpointManager:
         pol_of = self._resolve_policies(items, lossy)
         plan_of: dict[int, Any] = {}
         for pol, idxs in group_by_policy(pol_of).items():
-            plans = shd.plan_tree([items[i][1] for i in idxs], pol)
+            names = [items[i][0] for i in idxs] if self.cache is not None else None
+            plans = shd.plan_tree(
+                [items[i][1] for i in idxs], pol, cache=self.cache, names=names
+            )
             plan_of.update(zip(idxs, plans))
         host = int(jax.process_index())
 
@@ -516,6 +544,10 @@ class CheckpointManager:
         d = os.path.join(self.cfg.directory, f"step_{step:09d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
+        if self.cache is not None and "decision_cache" in manifest:
+            # resume warm: the next save revalidates these entries against
+            # fresh fingerprints before trusting any of them (DESIGN.md §8)
+            self.cache.load_manifest(manifest["decision_cache"])
         # layout dispatch: v3 records it explicitly; v2 is always the
         # segment layout, v1 (no version key) always the flat one
         version = int(manifest.get("version", 1))

@@ -15,14 +15,25 @@ from .api import (
     select_and_compress,
 )
 from .controller import TargetSolution, estimate_curves, solve, solve_many
+from .decision_cache import CacheEntry, DecisionCache
 from .policy import Policy, PolicySet
+from .predictor import (
+    FieldStats,
+    confidence,
+    predict_curves,
+    predict_selection,
+    select_many_predicted,
+)
 from .selector import Selection, encode_with_selection, select, select_many
 from .sz import SZStats, sz_compress, sz_decompress, sz_stats
 from .zfp import ZFPStats, zfp_compress, zfp_decompress, zfp_stats
 
 __all__ = [
+    "CacheEntry",
     "CompressedField",
     "CompressedTree",
+    "DecisionCache",
+    "FieldStats",
     "Policy",
     "PolicySet",
     "Selection",
@@ -34,13 +45,17 @@ __all__ = [
     "compress",
     "compress_pytree",
     "compression_ratio",
+    "confidence",
     "decompress",
     "decompress_pytree",
     "encode_with_selection",
     "estimate_curves",
+    "predict_curves",
+    "predict_selection",
     "select",
     "select_and_compress",
     "select_many",
+    "select_many_predicted",
     "solve",
     "solve_many",
     "sz_compress",

@@ -182,13 +182,17 @@ def _coerce_policy(
     )
 
 
-def _policy_selections(arrs: list[np.ndarray], pol: Policy) -> list[Selection]:
+def _policy_selections(
+    arrs: list[np.ndarray], pol: Policy, cache=None, names=None
+) -> list[Selection]:
     """Route one policy group of fields through its solver. fixed_accuracy
     keeps the Algorithm 1 fast path (`select_many`); the target modes run
-    the controller (DESIGN.md §7) and unwrap its `TargetSolution`s."""
+    the controller (DESIGN.md §7) and unwrap its `TargetSolution`s.
+    `cache`/`names` thread the warm decision path through either solver
+    (DESIGN.md §8)."""
     if pol.mode == "fixed_accuracy":
-        return select_many(arrs, policy=pol)
-    sols = _controller.solve_many(arrs, pol)
+        return select_many(arrs, policy=pol, cache=cache, names=names)
+    sols = _controller.solve_many(arrs, pol, cache=cache, names=names)
     return [s.selection for s in sols]
 
 
@@ -290,6 +294,7 @@ def compress_pytree(
     *,
     workers: int | None = None,
     sharded: bool | None = None,
+    cache=None,
     eb_rel: float | None = None,
     eb_abs: float | None = None,
     r_sp: float | None = None,
@@ -333,6 +338,13 @@ def compress_pytree(
         reconciliation; see `core/sharded.py`). Default None auto-enables
         when any leaf lives on more than one device; False forces the
         gather path.
+      cache: a `DecisionCache` (DESIGN.md §8) carrying per-leaf decisions
+        across repeated saves of the same tree. Leaves whose stats
+        fingerprint validates replay the previous save's decision —
+        bit-identical to the cold path — and skip the estimator launch;
+        drifted or new leaves re-decide and refresh their entry. The
+        caller owns the cache object and reuses it across calls
+        (`CheckpointManager` persists it in the manifest).
       eb_rel / eb_abs / r_sp / mode / target_psnr / target_ratio /
         predicate: the deprecated kwarg spelling — shimmed onto a `Policy`
         (predicate rejections onto per-leaf raw) with a
@@ -357,14 +369,19 @@ def compress_pytree(
     if sharded is None:
         sharded = any(_is_multidevice(leaf) for _, leaf in leaves)
     if sharded:
-        return _compress_pytree_sharded(leaves, treedef, pset, predicate, workers)
+        return _compress_pytree_sharded(
+            leaves, treedef, pset, predicate, workers, cache=cache
+        )
     named, pol_of = _named_leaves_with_policies(
         leaves, pset, predicate, materialize=True
     )
     # original arrays go in; the solvers cast to f32 one field at a time
     sel_of: dict[int, Selection] = {}
     for p, idxs in group_by_policy(pol_of).items():
-        sels = _policy_selections([named[i][1] for i in idxs], p)
+        sels = _policy_selections(
+            [named[i][1] for i in idxs], p, cache=cache,
+            names=[named[i][0] for i in idxs] if cache is not None else None,
+        )
         sel_of.update(zip(idxs, sels))
 
     def encode(i: int) -> CompressedField:
@@ -391,6 +408,7 @@ def _compress_pytree_sharded(
     pset: PolicySet,
     predicate: Callable[[str, Any], bool] | None,
     workers: int | None,
+    cache=None,
 ) -> CompressedTree:
     """The shard-local engine behind `compress_pytree(sharded=True)`: one
     `plan_tree` pass per policy group decides every float leaf without
@@ -403,7 +421,10 @@ def _compress_pytree_sharded(
     )
     plan_of: dict[int, Any] = {}
     for p, idxs in group_by_policy(pol_of).items():
-        plans = _sh.plan_tree([named[i][1] for i in idxs], p)
+        plans = _sh.plan_tree(
+            [named[i][1] for i in idxs], p, cache=cache,
+            names=[named[i][0] for i in idxs] if cache is not None else None,
+        )
         plan_of.update(zip(idxs, plans))
 
     def encode(i: int):

@@ -343,14 +343,35 @@ class _Secant:
 REFINE_STRIDE = 2
 
 
+def _warm_seeds(warm, x0_s, x0_z, x_lo, x_hi):
+    """Overlay cached warm-start seeds (log2 bounds, NaN = cold) onto the
+    model seeds, clipped to the solver's x-range. With `warm=None` or
+    all-NaN this returns the model seeds unchanged, so the cold program
+    is untouched."""
+    if warm is None:
+        return x0_s, x0_z
+    warm_s, warm_z = warm
+    x0_s = np.where(
+        np.isfinite(warm_s), np.clip(warm_s, x_lo, x_hi), x0_s
+    )
+    x0_z = np.where(
+        np.isfinite(warm_z), np.clip(warm_z, x_lo, x_hi), x0_z
+    )
+    return x0_s, x0_z
+
+
 def _solve_fixed_psnr(
     sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target: float, rounds: int,
     r_sp: float, allowed: tuple[str, ...] = _codecs.DEFAULT_CODECS,
+    warm=None,
 ) -> list[tuple[Selection, float, float, bool]]:
     """Per field: (Selection, est_psnr, est_bitrate, on_target).
 
     Seed: SZ bin size from the closed-form inversion of Eq. (10); ZFP
-    bound at delta*/2. Refine: `rounds` light-sweep secant steps drive
+    bound at delta*/2 — or, per field, the previous save's solved bound
+    when the decision cache offers a warm seed (`warm`, DESIGN.md §8):
+    the secant then starts next to the root it found last step instead of
+    on the model curve. Refine: `rounds` light-sweep secant steps drive
     both codecs' *observed* curves (measured quantization error for SZ,
     estimated truncation PSNR for ZFP) onto the target; one final full
     eval prices the two solutions for the min-rate choice.
@@ -362,11 +383,12 @@ def _solve_fixed_psnr(
     )
     lvr = np.log2(np.maximum(vr, 1e-30)).astype(np.float64)
     ld0 = np.log2(np.maximum(delta_star, 1e-38)).astype(np.float64)
-    pz0, ps0 = refine.light(np.exp2(ld0 - 1.0)[None].astype(np.float32),
-                            np.exp2(ld0)[None].astype(np.float32))
-    s_sz = _Secant(ld0, ps0[0], tq, -DB_PER_OCTAVE, PSNR_SLOPE_CLAMP,
+    x0_s, x0_z = _warm_seeds(warm, ld0, ld0 - 1.0, lvr - 30.0, lvr + 1.0)
+    pz0, ps0 = refine.light(np.exp2(x0_z)[None].astype(np.float32),
+                            np.exp2(x0_s)[None].astype(np.float32))
+    s_sz = _Secant(x0_s, ps0[0], tq, -DB_PER_OCTAVE, PSNR_SLOPE_CLAMP,
                    ge=True, x_lo=lvr - 30.0, x_hi=lvr + 1.0)
-    s_z = _Secant(ld0 - 1.0, pz0[0], tq, -DB_PER_OCTAVE, PSNR_SLOPE_CLAMP,
+    s_z = _Secant(x0_z, pz0[0], tq, -DB_PER_OCTAVE, PSNR_SLOPE_CLAMP,
                   ge=True, x_lo=lvr - 30.0, x_hi=lvr + 1.0)
     for _ in range(rounds):
         xs, xz = s_sz.propose(), s_z.propose()
@@ -374,10 +396,10 @@ def _solve_fixed_psnr(
                               np.exp2(xs)[None].astype(np.float32))
         s_z.step(xz, pz[0])
         s_sz.step(xs, ps[0])
-    # final bounds: feasible-best, falling back to the closed-form seed
-    # (model-exact) for SZ and the seed bound for ZFP
-    x_s = np.where(s_sz.found, s_sz.x_best, ld0)
-    x_z = np.where(s_z.found, s_z.x_best, ld0 - 1.0)
+    # final bounds: feasible-best, falling back to the seed (the
+    # closed-form, model-exact bin for SZ absent a warm override)
+    x_s = np.where(s_sz.found, s_sz.x_best, x0_s)
+    x_z = np.where(s_z.found, s_z.x_best, x0_z)
     br_sz_raw, _, br_zfp, ps_zfp, ps_meas = sweep.full(
         np.exp2(x_z)[None].astype(np.float32), np.exp2(x_s)[None].astype(np.float32)
     )
@@ -415,6 +437,7 @@ def _solve_fixed_psnr(
 def _solve_fixed_ratio(
     sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target: float, rounds: int,
     r_sp: float, allowed: tuple[str, ...] = _codecs.DEFAULT_CODECS,
+    warm=None,
 ) -> list[tuple[Selection, float, float, bool]]:
     """Per field: (Selection, est_psnr, est_bitrate, on_target).
 
@@ -428,11 +451,14 @@ def _solve_fixed_ratio(
     br_t = RAW_BITS / float(target)
     lvr = np.log2(np.maximum(vr, 1e-30)).astype(np.float64)
     x0 = lvr - 8.0
-    b0 = np.exp2(x0)[None].astype(np.float32)
-    br_s0, _, br_z0, _, _ = refine.rate(b0, b0)
-    s_sz = _Secant(x0, _sz_coder_rate(br_s0[0]), br_t, -1.0, RATE_SLOPE_CLAMP,
+    x0_s, x0_z = _warm_seeds(warm, x0, x0, lvr - 26.0, lvr)
+    br_s0, _, br_z0, _, _ = refine.rate(
+        np.exp2(x0_z)[None].astype(np.float32),
+        np.exp2(x0_s)[None].astype(np.float32),
+    )
+    s_sz = _Secant(x0_s, _sz_coder_rate(br_s0[0]), br_t, -1.0, RATE_SLOPE_CLAMP,
                    ge=False, x_lo=lvr - 26.0, x_hi=lvr)
-    s_z = _Secant(x0, br_z0[0], br_t, -1.0, RATE_SLOPE_CLAMP,
+    s_z = _Secant(x0_z, br_z0[0], br_t, -1.0, RATE_SLOPE_CLAMP,
                   ge=False, x_lo=lvr - 26.0, x_hi=lvr)
     for _ in range(rounds):
         xs, xz = s_sz.propose(), s_z.propose()
@@ -533,6 +559,8 @@ def solve_many(
     r_sp: float | None = None,
     transform: str = "zfp",
     rounds: int | None = None,
+    cache=None,
+    names=None,
 ) -> list[TargetSolution]:
     """Solve the quality target for MANY fields with batched launches.
 
@@ -557,6 +585,12 @@ def solve_many(
     would exceed a launch's block cap are strided down instead of being
     kicked to a per-field path, so every field stays inside the batched
     sweep. Returns one `TargetSolution` per input field, in order.
+
+    `cache`/`names` enable the warm path (a `DecisionCache`, DESIGN.md
+    §8): fingerprint-validated fields replay the previous save's
+    `TargetSolution` without entering the sweep at all; invalidated
+    entries can additionally warm-start the secant from the previously
+    solved bound when the cache has `warm_start=True`.
     """
     if isinstance(policy, str):
         policy = policy_from_kwargs(
@@ -572,7 +606,9 @@ def solve_many(
     if mode == "raw":
         raise ValueError("solve_many has nothing to solve for Policy.raw()")
     if mode == "fixed_accuracy":
-        sels = select_many(fields, policy=policy, transform=transform)
+        sels = select_many(
+            fields, policy=policy, transform=transform, cache=cache, names=names
+        )
         # raw stores are lossless at exactly 32 b/v, whatever the estimates
         # said — keep the telemetry consistent with the target modes
         return [
@@ -593,11 +629,87 @@ def solve_many(
     groups = _build_solve_members(
         fields, range(len(fields)), results, mode, target, policy.r_sp
     )
-    _solve_groups(
-        groups, results, mode, target, n_rounds, policy.r_sp, transform,
-        policy.codecs,
+    if cache is None:
+        _solve_groups(
+            groups, results, mode, target, n_rounds, policy.r_sp, transform,
+            policy.codecs,
+        )
+        return results  # type: ignore[return-value]
+    _solve_many_cached(
+        fields, names, results, groups, cache, policy, mode, target, n_rounds,
+        transform,
     )
     return results  # type: ignore[return-value]
+
+
+def _solve_many_cached(
+    fields,
+    names,
+    results: list[TargetSolution | None],
+    groups: dict[int, list[_Member]],
+    cache,
+    policy: Policy,
+    mode: str,
+    target: float,
+    n_rounds: int,
+    transform: str,
+) -> None:
+    """Warm half of `solve_many`'s target modes (DESIGN.md §8), mirroring
+    `selector._select_many_cached`: fingerprint each member against the
+    cache, replay validated `TargetSolution`s, sweep only the misses.
+    Misses whose entry merely drifted (key match, fingerprint mismatch)
+    seed the secant from the previously solved bound when the cache opts
+    into `warm_start` — the solution moved a little, so the old root is a
+    better starting bracket than the model curve."""
+    from . import predictor as _pred
+
+    if names is None:
+        raise ValueError("solve_many(cache=...) requires names=")
+    names = list(names)
+    if len(names) != len(fields):
+        raise ValueError(
+            f"names/fields length mismatch: {len(names)} vs {len(fields)}"
+        )
+    miss_groups: dict[int, list[_Member]] = {}
+    warm: dict[int, tuple[float, float]] = {}
+    to_store: list[tuple[int, str, tuple, str, dict]] = []
+    for nd, members in groups.items():
+        tuples = [(m.idx, m.blocks, 0.0, m.vr, m.size) for m in members]
+        stats = _pred.stats_for_members(nd, tuples, policy.r_sp)
+        for m, (_stats, fp) in zip(members, stats):
+            i = m.idx
+            x = fields[i]
+            shape = tuple(np.shape(x))
+            dtype = str(getattr(x, "dtype", np.asarray(x).dtype))
+            entry = cache.lookup(names[i], shape, dtype, policy, transform, fp)
+            if entry is not None and entry.solution is not None:
+                results[i] = entry.to_solution()
+                continue
+            miss_groups.setdefault(nd, []).append(m)
+            to_store.append((i, names[i], shape, dtype, fp))
+            if cache.warm_start:
+                prev = cache.stale(names[i], shape, dtype, policy, transform)
+                if prev is not None and prev.solution is not None:
+                    sel = prev.to_selection()
+                    if sel.codec != "raw" and sel.eb_sz > 0:
+                        x_s = math.log2(2.0 * sel.eb_sz)
+                        x_z = (
+                            math.log2(sel.eb_abs)
+                            if sel.codec == "zfp" and sel.eb_abs > 0
+                            else x_s - 1.0
+                        )
+                        warm[i] = (x_s, x_z)
+    if miss_groups:
+        _solve_groups(
+            miss_groups, results, mode, target, n_rounds, policy.r_sp,
+            transform, policy.codecs, warm=warm or None,
+        )
+    for i, name, shape, dtype, fp in to_store:
+        sol = results[i]
+        cache.store(
+            name, shape, dtype, policy, transform, fp, sol.selection,
+            solution=sol,
+        )
 
 
 def _build_solve_members(
@@ -645,12 +757,17 @@ def _solve_groups(
     r_sp: float,
     transform: str,
     codecs: tuple[str, ...] = _codecs.DEFAULT_CODECS,
+    warm: dict[int, tuple[float, float]] | None = None,
 ) -> None:
     """Drive the per-batch target solvers over pre-gathered `_Member`s.
     Shared by `solve_many` (host-gathered samples) and the shard-local
     engine (device-gathered samples, DESIGN.md §6): the solvers see the
     identical packed batches either way, so sharded target-mode decisions
-    are bit-identical to the unsharded path by construction."""
+    are bit-identical to the unsharded path by construction.
+
+    `warm` maps a member index to cached (log2 SZ bin, log2 ZFP bound)
+    secant seeds from an invalidated decision-cache entry (DESIGN.md §8);
+    unmapped members keep the cold model seeds."""
     for nd, members in groups.items():
         cap = _max_batch_blocks(nd)
         lo = 0
@@ -679,8 +796,20 @@ def _solve_groups(
                 transform,
             )
             vr_arr = np.asarray([m.vr for m in batch], np.float32)
+            warm_batch = None
+            if warm:
+                warm_s = np.full(len(batch), np.nan)
+                warm_z = np.full(len(batch), np.nan)
+                for f, m in enumerate(batch):
+                    if m.idx in warm:
+                        warm_s[f], warm_z[f] = warm[m.idx]
+                if np.isfinite(warm_s).any() or np.isfinite(warm_z).any():
+                    warm_batch = (warm_s, warm_z)
             solver = _solve_fixed_psnr if mode == "fixed_psnr" else _solve_fixed_ratio
-            solved = solver(sweep, refine, vr_arr, target, n_rounds, r_sp, codecs)
+            solved = solver(
+                sweep, refine, vr_arr, target, n_rounds, r_sp, codecs,
+                warm=warm_batch,
+            )
             for m, (sel, ps, br, on) in zip(batch, solved):
                 results[m.idx] = TargetSolution(sel, mode, target, ps, br, on)
             lo = hi

@@ -180,6 +180,8 @@ def select_many(
     codecs: tuple[str, ...] | None = None,
     *,
     policy: Policy | None = None,
+    cache=None,
+    names=None,
 ) -> list[Selection]:
     """Algorithm 1 on MANY fields with one estimator launch (per ndim group).
 
@@ -201,6 +203,15 @@ def select_many(
     Fields are evaluated in float32 (the codecs' working dtype); the f32
     view of each field is transient — only its sampled blocks are retained,
     so peak memory is one field plus ~r_sp of the pytree.
+
+    `cache` (a `DecisionCache`, DESIGN.md §8) with `names` (one stable
+    field path per field) enables the warm path: each batchable member's
+    sampled blocks are fingerprinted (`core/predictor.py`), validated
+    entries replay the previous save's `Selection` verbatim — bit-identical
+    to what the cold path would recompute, since the fingerprint digests
+    the decision's complete preimage — and only misses run the estimator
+    launch. Degenerate fields (tiny/constant/NaN-poisoned) never consult
+    the cache; their raw fallback is re-derived every call.
     """
     if policy is not None:
         if policy.mode != "fixed_accuracy":
@@ -222,8 +233,68 @@ def select_many(
         fields, range(len(fields)), results, eb_abs, eb_rel, r_sp, transform,
         codecs,
     )
-    _run_select_batches(groups, results, r_sp, transform, codecs)
+    if cache is None:
+        _run_select_batches(groups, results, r_sp, transform, codecs)
+        return results  # type: ignore[return-value]
+    if policy is None:
+        policy = Policy.fixed_accuracy(
+            eb_rel=eb_rel, eb_abs=eb_abs, r_sp=r_sp, codecs=codecs
+        )
+    _select_many_cached(
+        fields, names, results, groups, cache, policy, r_sp, transform, codecs
+    )
     return results  # type: ignore[return-value]
+
+
+def _select_many_cached(
+    fields,
+    names,
+    results: list[Selection | None],
+    groups,
+    cache,
+    policy: Policy,
+    r_sp: float,
+    transform: str,
+    codecs: tuple[str, ...],
+) -> None:
+    """Warm half of `select_many` (DESIGN.md §8): fingerprint each
+    batchable member, replay validated cache entries, batch only the
+    misses through the ordinary estimator launch, store fresh decisions.
+
+    Note the batch-composition caveat: a re-decided miss subset is batched
+    with the OTHER misses of the same call, not with the hit fields — so a
+    miss's decision is bit-identical to a cold `select_many` over the same
+    miss subset (the f32 prefix-sum window differs at ulp level across
+    batch compositions; see `estimator.field_sums`). Hits, by contrast,
+    replay the stored decision exactly as originally batched."""
+    from . import predictor as _pred
+
+    if names is None:
+        raise ValueError("select_many(cache=...) requires names=")
+    names = list(names)
+    if len(names) != len(fields):
+        raise ValueError(
+            f"names/fields length mismatch: {len(names)} vs {len(fields)}"
+        )
+    miss_groups: dict[int, list] = {}
+    to_store: list[tuple[int, str, tuple, str, dict]] = []
+    for nd, members in groups.items():
+        stats = _pred.stats_for_members(nd, members, r_sp)
+        for m, (_stats, fp) in zip(members, stats):
+            i = m[0]
+            x = fields[i]
+            shape = tuple(np.shape(x))
+            dtype = str(getattr(x, "dtype", np.asarray(x).dtype))
+            entry = cache.lookup(names[i], shape, dtype, policy, transform, fp)
+            if entry is not None:
+                results[i] = entry.to_selection()
+            else:
+                miss_groups.setdefault(nd, []).append(m)
+                to_store.append((i, names[i], shape, dtype, fp))
+    if miss_groups:
+        _run_select_batches(miss_groups, results, r_sp, transform, codecs)
+    for i, name, shape, dtype, fp in to_store:
+        cache.store(name, shape, dtype, policy, transform, fp, results[i])
 
 
 def _build_select_members(

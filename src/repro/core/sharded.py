@@ -50,6 +50,7 @@ because each exchange forwards the already-extended array.
 
 from __future__ import annotations
 
+import hashlib
 import math
 from dataclasses import dataclass
 from functools import lru_cache
@@ -441,6 +442,48 @@ def _minmax_jit(xs):
     return [(jnp.min(x.astype(_F32)), jnp.max(x.astype(_F32))) for x in xs]
 
 
+@jax.jit
+def _moments_jit(xs):
+    """Per-field global (min, max, mean, mean-of-squares) of the f32 view —
+    the decision-cache fingerprint moments (DESIGN.md §8). Like
+    `_minmax_jit`, XLA partitions the reductions shard-locally and
+    all-reduces the scalars (the psum reconciliation of DESIGN.md §6), so
+    every host derives the identical fingerprint without a gather; min/max
+    are reduction-order-free, so the vr this yields matches `_minmax_jit`
+    exactly."""
+    outs = []
+    for x in xs:
+        v = x.astype(_F32)
+        outs.append((jnp.min(v), jnp.max(v), jnp.mean(v), jnp.mean(v * v)))
+    return outs
+
+
+def _moments_fingerprint(
+    view_shape: tuple[int, ...], vr: float, size: int,
+    lo: float, hi: float, mean: float, msq: float, r_sp: float,
+) -> dict:
+    """Fingerprint record for an engine-eligible field, from the global
+    value moments. Weaker than the host path's block-content digest — a
+    hit certifies the global min/max/mean/mean-square (and the sample
+    grid via view shape + r_sp) are unchanged, not the bytes — but any
+    decision it replays still honors the policy's pointwise bound on the
+    CURRENT data (the codecs guarantee `eb_abs` for whatever they encode;
+    DESIGN.md §8.3), so drift past the moments can only cost rate
+    optimality, never correctness."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(b"repro-dc1-moments")
+    h.update(np.asarray(view_shape, np.int64).tobytes())
+    h.update(
+        np.asarray(
+            [vr, float(size), r_sp, lo, hi, mean, msq], np.float64
+        ).tobytes()
+    )
+    return dict(
+        kind="moments", digest=h.hexdigest(), vr=vr, size=int(size),
+        smin=lo, smax=hi, mean=mean, msq=msq,
+    )
+
+
 # ---------------------------------------------------------------------------
 # plan_tree: decisions for a whole pytree, shard-locally
 # ---------------------------------------------------------------------------
@@ -454,7 +497,7 @@ class FieldPlan:
     solution: ctl.TargetSolution | None
     layout: FieldLayout | None  # None -> single gathered segment
     view_shape: tuple[int, ...]
-    reconcile: str  # 'stats' | 'samples' | 'host' | 'degenerate'
+    reconcile: str  # 'stats' | 'samples' | 'host' | 'degenerate' | 'cached'
 
     @property
     def sharded(self) -> bool:
@@ -482,6 +525,8 @@ def plan_tree(
     r_sp: float | None = None,
     transform: str = "zfp",
     reconcile: str = "auto",
+    cache=None,
+    names=None,
 ) -> list[FieldPlan]:
     """Algorithm 1 (or a §7 target solve) over MANY possibly-sharded fields
     without gathering any of them, under ONE quality `Policy`
@@ -496,7 +541,15 @@ def plan_tree(
     fixed_accuracy ('stats' is invalid for target modes — the §7 secant
     needs the sampled curves). Fields whose sharding the engine cannot
     carry (see `analyze`) gather and ride the ordinary host path; their
-    decisions are by definition the unsharded ones."""
+    decisions are by definition the unsharded ones.
+
+    `cache`/`names` (a `DecisionCache`, DESIGN.md §8): engine-eligible
+    fields fingerprint on psum-reconciled global value moments (one
+    `_moments_jit` launch replaces the min/max launch — every host derives
+    the same fingerprint, so shard-local saves share the cache); validated
+    hits skip the engine launch entirely (`reconcile='cached'`).
+    Host-fallback and degenerate fields bypass the cache and re-decide
+    every call."""
     if isinstance(policy, Policy):
         if any(v is not None for v in (eb_abs, eb_rel, target_psnr, target_ratio, r_sp)):
             raise ValueError("pass either a Policy or the legacy kwargs, not both")
@@ -526,20 +579,36 @@ def plan_tree(
 
     arrs = list(arrs)
     n = len(arrs)
+    if cache is not None:
+        if names is None:
+            raise ValueError("plan_tree(cache=...) requires names=")
+        names = list(names)
+        if len(names) != n:
+            raise ValueError(
+                f"names/arrs length mismatch: {len(names)} vs {n}"
+            )
     plans: list[FieldPlan | None] = [None] * n
     layouts = [analyze(x) for x in arrs]
     # one global min/max launch for every engine-eligible field (size-0
-    # fields have no reduction identity and pin vr = 0.0, like the host path)
+    # fields have no reduction identity and pin vr = 0.0, like the host
+    # path); the warm path widens it to the fingerprint moments launch
     vr_of: dict[int, float] = {
         i: 0.0 for i in range(n) if layouts[i] is not None and not np.size(arrs[i])
     }
+    moments_of: dict[int, tuple[float, float, float, float]] = {}
     elig = [i for i in range(n) if layouts[i] is not None and i not in vr_of]
-    if elig:
+    if elig and cache is None:
         mm = jax.device_get(_minmax_jit([arrs[i] for i in elig]))
         for i, (lo, hi) in zip(elig, mm):
             # f32 subtraction first, matching the unsharded host path
             vr_of[i] = float(np.float32(hi) - np.float32(lo))
+    elif elig:
+        mm = jax.device_get(_moments_jit([arrs[i] for i in elig]))
+        for i, (lo, hi, mean, msq) in zip(elig, mm):
+            vr_of[i] = float(np.float32(hi) - np.float32(lo))
+            moments_of[i] = (float(lo), float(hi), float(mean), float(msq))
 
+    cache_store: list[tuple[int, str, tuple, str, dict]] = []
     host_idx: list[int] = []
     engine: list[tuple[int, np.ndarray]] = []  # (field index, global starts)
     for i, x in enumerate(arrs):
@@ -569,6 +638,22 @@ def plan_tree(
                 host_idx.append(i)  # select_many's monster-field fallback
                 continue
             starts = starts[:: -(-len(starts) // cap)]  # controller's stride-down
+        if cache is not None:
+            shape = tuple(int(s) for s in np.shape(x))
+            dtype = str(x.dtype)
+            fp = _moments_fingerprint(
+                view_shape, vr, int(np.prod(view_shape)), *moments_of[i], r_sp
+            )
+            entry = cache.lookup(names[i], shape, dtype, policy, transform, fp)
+            if entry is not None and (
+                mode == "fixed_accuracy" or entry.solution is not None
+            ):
+                sol = entry.to_solution() if entry.solution is not None else None
+                plans[i] = FieldPlan(
+                    entry.to_selection(), sol, lay, view_shape, "cached"
+                )
+                continue
+            cache_store.append((i, names[i], shape, dtype, fp))
         engine.append((i, starts))
 
     # device-extracted sample blocks per engine field (samples mode), or
@@ -642,6 +727,12 @@ def plan_tree(
             plans[i] = FieldPlan(
                 sol.selection, sol, layouts[i], layouts[i].view_shape, "samples"
             )
+    for i, name, shape, dtype, fp in cache_store:
+        plan = plans[i]
+        cache.store(
+            name, shape, dtype, policy, transform, fp, plan.selection,
+            solution=plan.solution,
+        )
     return plans  # type: ignore[return-value]
 
 

@@ -23,11 +23,14 @@ def _load_gate():
     return mod
 
 
-def _metrics(codec="sz", eb_sz=1.0, speedup=3.0, err=0.1):
+def _metrics(codec="sz", eb_sz=1.0, speedup=3.0, err=0.1, warm=None):
     return {
         "decisions": {"f": {"codec": codec, "eb_sz": eb_sz}},
         "ratios": {"kernels3d_encode_stats_speedup": speedup},
         "estimation_error_b": err,
+        "warm_save": warm
+        if warm is not None
+        else {"warm_overhead_pct": 2.0, "hit_rate": 1.0, "flips": []},
     }
 
 
@@ -76,6 +79,69 @@ def test_gate_estimation_error_ceiling(monkeypatch):
     assert not [c for c in bad if c["name"] == "estimation_error_b"][0]["passed"]
 
 
+def test_gate_warm_save_parity_fails_on_flips(monkeypatch):
+    """Any warm-vs-cold decision flip fails the gate — parity is absolute,
+    no baseline involved. A dropped cache hit fails the same check."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    ok = bg.gate(_metrics(), _baseline())
+    assert [c for c in ok if c["name"] == "warm_save_parity"][0]["passed"]
+    bad = bg.gate(
+        _metrics(warm={"warm_overhead_pct": 2.0, "hit_rate": 1.0, "flips": ["atm/f0"]}),
+        _baseline(),
+    )
+    par = [c for c in bad if c["name"] == "warm_save_parity"][0]
+    assert not par["passed"] and "atm/f0" in par["detail"]
+    bad = bg.gate(
+        _metrics(warm={"warm_overhead_pct": 2.0, "hit_rate": 0.9, "flips": []}),
+        _baseline(),
+    )
+    assert not [c for c in bad if c["name"] == "warm_save_parity"][0]["passed"]
+
+
+def test_gate_warm_save_overhead_ceiling(monkeypatch):
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    at = bg.gate(
+        _metrics(
+            warm={
+                "warm_overhead_pct": bg.WARM_OVERHEAD_MAX_PCT,
+                "hit_rate": 1.0,
+                "flips": [],
+            }
+        ),
+        _baseline(),
+    )
+    assert [c for c in at if c["name"] == "warm_save_overhead_pct"][0]["passed"]
+    over = bg.gate(
+        _metrics(
+            warm={
+                "warm_overhead_pct": bg.WARM_OVERHEAD_MAX_PCT + 0.1,
+                "hit_rate": 1.0,
+                "flips": [],
+            }
+        ),
+        _baseline(),
+    )
+    assert not [c for c in over if c["name"] == "warm_save_overhead_pct"][0]["passed"]
+
+
+def test_gate_warm_ratio_rides_baseline_rule(monkeypatch):
+    """warm_save_speedup is gated by the same >20%-regression rule as the
+    other throughput ratios."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    base = _baseline()
+    base["ratios"]["warm_save_speedup"] = 2.0
+    m = _metrics()
+    m["ratios"]["warm_save_speedup"] = 1.7  # floor = 1.6
+    assert [c for c in bg.gate(m, base) if c["name"] == "warm_save_speedup"][0]["passed"]
+    m["ratios"]["warm_save_speedup"] = 1.5
+    assert not [c for c in bg.gate(m, base) if c["name"] == "warm_save_speedup"][0][
+        "passed"
+    ]
+
+
 def test_gate_fails_closed_on_unbaselined_field(monkeypatch):
     """A field added to the smoke suite without --update-baseline must
     fail the decision check, not ride along ungated."""
@@ -96,7 +162,12 @@ def test_gate_fails_closed_without_baseline_key(monkeypatch):
     checks = bg.gate(_metrics(), _baseline())
     assert not [c for c in checks if c["name"] == "decisions[table5]"][0]["passed"]
     checks = bg.gate(_metrics(), {})
-    assert not any(c["passed"] for c in checks)
+    # every baseline-DEPENDENT check must fail; the warm_save checks are
+    # deliberately absolute (parity/ceiling) and stay green
+    assert not any(
+        c["passed"] for c in checks if not c["name"].startswith("warm_save")
+    )
+    assert [c for c in checks if c["name"].startswith("warm_save")]
 
 
 def test_committed_baseline_covers_both_env_keys():
@@ -111,5 +182,6 @@ def test_committed_baseline_covers_both_env_keys():
         "kernels3d_encode_stats_speedup",
         "selection_batched_speedup",
         "sharded_save_speedup",
+        "warm_save_speedup",
     }
     assert base["estimation_error_b"] >= 0.0

@@ -1,0 +1,337 @@
+"""Differential test layer for the warm save path (DESIGN.md §8).
+
+The contract under test: with the default ``DecisionCache(tolerance=0.0)``,
+a warm save is *bit-identical* to a cold save — same codec decisions, same
+error bounds, same encoded bytes — whenever the cache validates, and any
+change that could alter the decision (content drift, scale jump, NaN
+injection, dtype/shape change, a different Policy) invalidates the entry
+and re-decides from scratch. The cache must never serve a stale decision.
+
+One subtlety this suite is careful about: Stage I's f32 prefix-sum
+estimator makes each field's estimate depend on which fields share its
+packed launch (ulp-level batch composition, see `selector.select_many`).
+After a partial invalidation the misses re-decide in a *smaller* batch, so
+the differential reference for those fields is a fresh cold call on the
+SAME subset — not the original full-tree cold call.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import repro.core as rc
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.core import controller as ctl
+from repro.core import selector as sel
+from repro.core.decision_cache import CacheEntry, DecisionCache
+from repro.core.policy import Policy
+
+
+def _fields(seed=0):
+    rng = np.random.default_rng(seed)
+    smooth2d = np.cumsum(
+        rng.standard_normal((96, 96)).astype(np.float32), axis=0
+    )
+    ramp3d = (
+        np.linspace(0.0, 4.0, 16 * 48 * 48, dtype=np.float32).reshape(16, 48, 48)
+        + 0.05 * rng.standard_normal((16, 48, 48)).astype(np.float32)
+    )
+    rough1d = rng.standard_normal((4096,)).astype(np.float32)
+    return [smooth2d, ramp3d, rough1d]
+
+
+NAMES = ["smooth2d", "ramp3d", "rough1d"]
+POL = Policy.fixed_accuracy(eb_rel=1e-3)
+
+
+# -- warm ≡ cold: decisions, bounds, bytes --------------------------------
+
+
+def test_warm_decisions_bit_identical_to_cold():
+    fields = _fields()
+    cold = sel.select_many(fields, policy=POL)
+    cache = DecisionCache()
+    first = sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    warm = sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    assert first == cold  # populating pass must not change decisions
+    assert warm == cold  # served-from-cache pass is bit-identical
+    assert cache.stats()["hits"] == len(fields)
+    assert all(cache.events[n] == "hit" for n in NAMES)
+
+
+def test_warm_bytes_bit_identical_to_cold():
+    fields = _fields()
+    tree = dict(zip(NAMES, fields))
+    cold = rc.compress_pytree(tree, policy=POL)
+    cache = DecisionCache()
+    rc.compress_pytree(tree, policy=POL, cache=cache)
+    warm = rc.compress_pytree(tree, policy=POL, cache=cache)
+    for name in cold.fields:
+        assert warm.fields[name].data == cold.fields[name].data
+        assert warm.fields[name].codec == cold.fields[name].codec
+    assert cache.stats()["hits"] == len(fields)
+
+
+@pytest.mark.parametrize("mode", ["fixed_psnr", "fixed_ratio"])
+def test_warm_solutions_bit_identical_to_cold(mode):
+    fields = _fields()
+    pol = Policy.fixed_psnr(60.0) if mode == "fixed_psnr" else Policy.fixed_ratio(8.0)
+    cold = ctl.solve_many(fields, pol)
+    cache = DecisionCache()
+    first = ctl.solve_many(fields, pol, cache=cache, names=NAMES)
+    warm = ctl.solve_many(fields, pol, cache=cache, names=NAMES)
+    assert first == cold
+    assert warm == cold
+    assert cache.stats()["hits"] == len(fields)
+
+
+def test_epsilon_perturbation_invalidates_and_matches_subset_cold():
+    """An ulp-scale nudge still flips the content digest: the entry must
+    invalidate and the re-decision must equal a fresh cold call on the
+    same miss subset (batch-composition-faithful reference)."""
+    fields = _fields()
+    cache = DecisionCache()
+    sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    bumped = [fields[0].copy(), fields[1], fields[2]]
+    bumped[0][0, 0] = np.nextafter(bumped[0][0, 0], np.float32(np.inf))
+    warm = sel.select_many(bumped, policy=POL, cache=cache, names=NAMES)
+    assert cache.events["smooth2d"] == "invalidated"
+    assert cache.events["ramp3d"] == "hit"
+    assert cache.events["rough1d"] == "hit"
+    # the re-decided field ran alone -> compare against a solo cold call
+    ref = sel.select_many([bumped[0]], policy=POL)
+    assert warm[0] == ref[0]
+    # untouched fields still serve the original decision
+    cold = sel.select_many(fields, policy=POL)
+    assert warm[1] == cold[1] and warm[2] == cold[2]
+
+
+# -- invalidation triggers -------------------------------------------------
+
+
+def test_scale_jump_invalidates():
+    fields = _fields()
+    cache = DecisionCache()
+    sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    jumped = [fields[0] * 1000.0, fields[1], fields[2]]
+    warm = sel.select_many(jumped, policy=POL, cache=cache, names=NAMES)
+    assert cache.events["smooth2d"] == "invalidated"
+    assert warm[0] == sel.select_many([jumped[0]], policy=POL)[0]
+    # the re-decided bound tracks the new value range, not the cached one
+    assert warm[0].eb_abs == pytest.approx(
+        1000.0 * POL.eb_rel * np.ptp(fields[0]), rel=1e-5
+    )
+
+
+def test_nan_injection_rederives_raw_never_stale():
+    fields = _fields()
+    cache = DecisionCache()
+    first = sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    assert first[0].codec != "raw"
+    poisoned = [fields[0].copy(), fields[1], fields[2]]
+    poisoned[0][3, 3] = np.nan
+    warm = sel.select_many(poisoned, policy=POL, cache=cache, names=NAMES)
+    assert warm[0].codec == "raw"  # degenerate fallback, not the cached sz/zfp
+    # degenerate fields bypass the cache entirely: the stale entry must not
+    # have been overwritten, and recovering the clean field hits again
+    recovered = sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    assert recovered[0] == first[0]
+    assert cache.events["smooth2d"] == "hit"
+
+
+def test_dtype_change_invalidates():
+    fields = _fields()
+    cache = DecisionCache()
+    sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    as64 = [fields[0].astype(np.float64), fields[1], fields[2]]
+    sel.select_many(as64, policy=POL, cache=cache, names=NAMES)
+    assert cache.events["smooth2d"] == "invalidated"
+
+
+def test_shape_change_invalidates():
+    fields = _fields()
+    cache = DecisionCache()
+    sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    reshaped = [fields[0].reshape(48, 192), fields[1], fields[2]]
+    warm = sel.select_many(reshaped, policy=POL, cache=cache, names=NAMES)
+    assert cache.events["smooth2d"] == "invalidated"
+    assert warm[0] == sel.select_many([reshaped[0]], policy=POL)[0]
+
+
+def test_policy_change_invalidates():
+    fields = _fields()
+    cache = DecisionCache()
+    sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    tighter = Policy.fixed_accuracy(eb_rel=1e-5)
+    warm = sel.select_many(fields, policy=tighter, cache=cache, names=NAMES)
+    assert all(cache.events[n] == "invalidated" for n in NAMES)
+    assert warm == sel.select_many(fields, policy=tighter)
+    # and the cache now holds the tighter-policy decisions
+    again = sel.select_many(fields, policy=tighter, cache=cache, names=NAMES)
+    assert again == warm and cache.events["smooth2d"] == "hit"
+
+
+def test_solve_mode_entries_do_not_serve_fixed_accuracy():
+    """A fixed_psnr entry and a fixed_accuracy entry share nothing: the
+    policy key separates them, so switching modes always re-decides."""
+    fields = _fields()
+    cache = DecisionCache()
+    ctl.solve_many(fields, Policy.fixed_psnr(60.0), cache=cache, names=NAMES)
+    warm = sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    assert all(cache.events[n] == "invalidated" for n in NAMES)
+    assert warm == sel.select_many(fields, policy=POL)
+
+
+# -- tolerance > 0 and warm-start -----------------------------------------
+
+
+def test_tolerance_band_accepts_tiny_drift_rejects_jumps():
+    fields = _fields()
+    cache = DecisionCache(tolerance=0.05)
+    first = sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    drifted = [fields[0] * (1.0 + 1e-7), fields[1], fields[2]]
+    warm = sel.select_many(drifted, policy=POL, cache=cache, names=NAMES)
+    assert cache.events["smooth2d"] == "hit"  # within the moment band
+    assert warm[0] == first[0]  # served decision is the previous one
+    jumped = [fields[0] * 3.0, fields[1], fields[2]]
+    sel.select_many(jumped, policy=POL, cache=cache, names=NAMES)
+    assert cache.events["smooth2d"] == "invalidated"
+
+
+def test_warm_start_resolve_matches_quality_target():
+    """warm_start seeds the secant from the stale bound; the re-solve must
+    still land on target (quality contract is solver-enforced, not cached)."""
+    fields = _fields()
+    pol = Policy.fixed_psnr(60.0)
+    cache = DecisionCache(warm_start=True)
+    ctl.solve_many(fields, pol, cache=cache, names=NAMES)
+    drifted = [f * 1.3 for f in fields]
+    warm = ctl.solve_many(drifted, pol, cache=cache, names=NAMES)
+    for sol in warm:
+        if sol.selection.codec != "raw" and sol.on_target:
+            assert sol.est_psnr == pytest.approx(60.0, abs=1.0)
+
+
+# -- persistence -----------------------------------------------------------
+
+
+def test_manifest_roundtrip_preserves_bit_identity():
+    fields = _fields()
+    cache = DecisionCache()
+    cold = sel.select_many(fields, policy=POL, cache=cache, names=NAMES)
+    record = json.loads(json.dumps(cache.to_manifest()))  # full JSON trip
+    reloaded = DecisionCache()
+    reloaded.load_manifest(record)
+    warm = sel.select_many(fields, policy=POL, cache=reloaded, names=NAMES)
+    assert warm == cold
+    assert reloaded.stats()["hits"] == len(fields)
+
+
+def test_checkpoint_manager_persists_and_resumes_warm(tmp_path):
+    fields = _fields()
+    tree = dict(zip(NAMES, fields))
+    cfg = CheckpointConfig(directory=str(tmp_path), policy=POL, cache=True)
+    mgr = CheckpointManager(cfg)
+    mgr.save(0, tree)
+    mgr.save(1, tree)
+    assert mgr.cache.stats()["hits"] == len(fields)
+
+    def rows(step):
+        with open(tmp_path / f"step_{step:09d}" / "manifest.json") as f:
+            man = json.load(f)
+        return {f_["name"]: (f_["codec"], f_["nbytes"], f_["eb"])
+                for f_ in man["fields"]}
+
+    assert rows(0) == rows(1)
+    with open(tmp_path / "step_000000001" / "manifest.json") as f:
+        man = json.load(f)
+    assert len(man["decision_cache"]["entries"]) == len(fields)
+
+    # a NEW manager restoring this checkpoint resumes warm
+    mgr2 = CheckpointManager(CheckpointConfig(
+        directory=str(tmp_path), policy=POL, cache=True))
+    step, flat = mgr2.restore()
+    assert step == 1 and set(flat) == set(NAMES)
+    mgr2.save(2, tree)
+    assert mgr2.cache.stats()["hits"] == len(fields)
+    assert rows(2) == rows(0)
+
+
+def test_cache_off_by_default_manifest_clean(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path), policy=POL))
+    mgr.save(0, dict(zip(NAMES, _fields())))
+    with open(tmp_path / "step_000000000" / "manifest.json") as f:
+        man = json.load(f)
+    assert "decision_cache" not in man
+    assert mgr.cache is None
+
+
+# -- sharded engine --------------------------------------------------------
+
+
+def test_sharded_plan_tree_warm_parity(emulated_devices):
+    import jax
+
+    from repro.core import sharded as shd
+
+    mesh = jax.sharding.Mesh(np.array(emulated_devices[:4]), ("x",))
+    spec = jax.sharding.PartitionSpec("x")
+    rng = np.random.default_rng(7)
+    fields = [
+        jax.device_put(
+            np.cumsum(rng.standard_normal((64, 64)).astype(np.float32), axis=0),
+            jax.sharding.NamedSharding(mesh, spec),
+        ),
+        jax.device_put(
+            np.cumsum(
+                rng.standard_normal((32, 48, 16)).astype(np.float32), axis=1
+            ),
+            jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(None, "x")
+            ),
+        ),
+    ]
+    names = ["wa", "wb"]
+    for pol in (POL, Policy.fixed_psnr(60.0)):
+        cold = shd.plan_tree(fields, pol)
+        cache = DecisionCache()
+        shd.plan_tree(fields, pol, cache=cache, names=names)
+        warm = shd.plan_tree(fields, pol, cache=cache, names=names)
+        assert [p.reconcile for p in warm] == ["cached", "cached"]
+        for pc, pw in zip(cold, warm):
+            assert pw.selection == pc.selection
+            ec = shd.encode_plan(fields[cold.index(pc)], pc)
+            ew = shd.encode_plan(fields[cold.index(pc)], pw)
+            assert [s.data for s in ec] == [s.data for s in ew]
+        assert cache.stats()["hits"] == len(fields)
+
+
+# -- API misuse ------------------------------------------------------------
+
+
+def test_cache_requires_names():
+    fields = _fields()
+    with pytest.raises(ValueError, match="names"):
+        sel.select_many(fields, policy=POL, cache=DecisionCache())
+    with pytest.raises(ValueError, match="names"):
+        sel.select_many(fields, policy=POL, cache=DecisionCache(),
+                        names=["just_one"])
+
+
+def test_cache_rejects_bad_tolerance():
+    with pytest.raises(ValueError):
+        DecisionCache(tolerance=-0.1)
+    with pytest.raises(ValueError):
+        DecisionCache(tolerance=float("nan"))
+
+
+def test_entry_roundtrips_selection_and_solution():
+    fields = _fields()
+    cache = DecisionCache()
+    sols = ctl.solve_many(fields, Policy.fixed_psnr(60.0), cache=cache,
+                          names=NAMES)
+    e = cache.entries["smooth2d"]
+    assert isinstance(e, CacheEntry)
+    assert e.to_selection() == sols[0].selection
+    assert e.to_solution() == sols[0]

@@ -124,6 +124,10 @@ def _check_or_update(
             )
         if "on_target" in want:
             assert got["on_target"] == want["on_target"], name
+        if "event" in want:
+            assert got["event"] == want["event"], (
+                f"{name}: cache event changed {want['event']} -> {got['event']}"
+            )
         for k in br_keys:
             if k in want:
                 assert got[k] == pytest.approx(want[k], abs=BR_ATOL), (
@@ -143,6 +147,70 @@ def test_golden_fixed_accuracy(update_golden):
         thin = {n: m for n, m in margins.items() if m < MIN_MARGIN}
         assert not thin, f"fields too close to the decision margin for a golden: {thin}"
     _check_or_update(GOLDEN_DIR / "fixed_accuracy.json", current, update_golden)
+
+
+def test_golden_warm_trajectory(update_golden):
+    """Frozen 3-step repeated-save trajectory through the decision cache
+    (DESIGN.md §8): step 0 cold-populates, step 1 replays identical data
+    (all hits), step 2 scale-jumps one field and ulp-nudges another (both
+    invalidate and re-decide; everything else stays a hit). Freezes the
+    cache EVENT next to the decision tuple, so a silent change to the
+    fingerprint/invalidation rules fails even if the decisions happen to
+    agree. One --update-golden pass regenerates all three steps."""
+    import numpy as np
+
+    from repro.core.decision_cache import DecisionCache
+
+    fields = _suite_fields()
+    names = list(fields)
+    pol = Policy.fixed_accuracy(eb_rel=1e-3)
+    cache = DecisionCache()
+    jump, nudge = names[0], names[1]
+    steps = []
+    for step in range(3):
+        cur = {n: v.copy() for n, v in fields.items()}
+        if step == 2:
+            cur[jump] = cur[jump] * 1000.0
+            a = cur[nudge]
+            a.flat[0] = np.nextafter(a.flat[0], np.float32(np.inf))
+        cache.reset_stats()
+        sels = select_many(
+            list(cur.values()), policy=pol, cache=cache, names=names
+        )
+        steps.append(
+            {
+                name: dict(
+                    event=cache.events.get(name, "degenerate"),
+                    codec=s.codec,
+                    eb=float(s.eb_abs),
+                    eb_sz=float(s.eb_sz),
+                    br_sz=round(float(s.br_sz), 4),
+                    br_zfp=round(float(s.br_zfp), 4),
+                )
+                for name, s in zip(names, sels)
+            }
+        )
+    # structural invariants, independent of the frozen numbers
+    assert all(d["event"] in ("miss", "degenerate") for d in steps[0].values())
+    assert all(d["event"] in ("hit", "degenerate") for d in steps[1].values())
+
+    def _dec(d):
+        return {k: v for k, v in d.items() if k != "event"}
+
+    assert {n: _dec(d) for n, d in steps[1].items()} == {
+        n: _dec(d) for n, d in steps[0].items()
+    }, "warm step must replay the cold decisions bit-identically"
+    assert steps[2][jump]["event"] == "invalidated"
+    assert steps[2][nudge]["event"] == "invalidated"
+    assert all(
+        steps[2][n]["event"] in ("hit", "degenerate")
+        for n in names
+        if n not in (jump, nudge)
+    )
+    current = {
+        f"step{i}/{n}": d for i, s in enumerate(steps) for n, d in s.items()
+    }
+    _check_or_update(GOLDEN_DIR / "warm_trajectory.json", current, update_golden)
 
 
 def test_golden_fixed_psnr(update_golden):

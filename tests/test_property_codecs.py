@@ -9,6 +9,8 @@ import pytest
 
 pytest.importorskip("hypothesis")
 
+pytestmark = pytest.mark.property
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sz_compress, sz_decompress, zfp_compress, zfp_decompress

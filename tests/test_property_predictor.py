@@ -1,0 +1,160 @@
+"""Hypothesis property tests for the statistical ratio predictor
+(core/predictor.py, DESIGN.md §8.1) — optional dependency.
+
+Three property families, per the predictor's contract:
+
+* predicted bitrate curves are monotone non-increasing in the error
+  bound (and PSNR curves monotone non-increasing in the bound too);
+* on synthetic fields with KNOWN statistics (Gaussian white noise,
+  random walks, noisy ramps — the families the Gaussian-residual model
+  is built for) the prediction error against the sampled estimator is
+  bounded, and the measured moments match their analytic values;
+* provably-hard fields (heavy tails, constant, tiny) fall below the
+  confidence threshold and route to the sampled / degenerate fallback,
+  bit-identical to plain `select_many`.
+
+`pytest.importorskip` keeps a bare jax+numpy+pytest environment green;
+the CI `property` job installs hypothesis and runs these for real.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predictor as pred
+from repro.core import selector as _sel
+
+pytestmark = pytest.mark.property
+
+
+def _stats_of(x, r_sp=0.05):
+    results = [None]
+    groups = _sel._build_select_members(
+        [x], [0], results, None, 1e-3, r_sp, "zfp"
+    )
+    assert groups, "field unexpectedly degenerate"
+    ((nd, members),) = groups.items()
+    ((stats, _fp),) = pred.stats_for_members(nd, members, r_sp)
+    return stats
+
+
+def _field(kind, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    if kind == "white2d":
+        x = scale * rng.standard_normal((128, 128))
+    elif kind == "walk2d":
+        x = np.cumsum(scale * rng.standard_normal((128, 128)), axis=0)
+    elif kind == "walk3d":
+        x = np.cumsum(scale * rng.standard_normal((24, 48, 48)), axis=2)
+    else:  # ramp3d
+        x = np.linspace(0.0, 4.0 * scale, 16 * 48 * 48).reshape(16, 48, 48)
+        x = x + 0.05 * scale * rng.standard_normal(x.shape)
+    return x.astype(np.float32)
+
+
+KINDS = ["white2d", "walk2d", "walk3d", "ramp3d"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(KINDS),
+    scale=st.sampled_from([0.05, 1.0, 300.0]),
+)
+def test_bitrate_curves_monotone_non_increasing(seed, kind, scale):
+    """Rate never rises as the bound loosens — at ANY scale, including
+    the Chao1-table-dominated tight-bound regime."""
+    stats = _stats_of(_field(kind, seed, scale))
+    ebs = stats.vr * np.geomspace(1e-7, 0.3, 48)
+    curves = pred.predict_curves(stats, ebs)
+    assert np.all(np.diff(curves["br_sz"]) <= 1e-9)
+    assert np.all(np.diff(curves["br_zfp"]) <= 1e-9)
+    assert np.all(curves["br_sz"] >= 0.0)
+    assert np.all(curves["br_zfp"] >= 0.0)
+    assert np.all(np.diff(curves["psnr_sz"]) <= 1e-9)
+    assert np.all(np.diff(curves["psnr_zfp"]) <= 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), sigma=st.sampled_from([0.1, 2.0, 50.0]))
+def test_moments_match_known_statistics(seed, sigma):
+    """iid N(0, sigma) in 2-D: the Lorenzo residual is the double
+    difference with variance 4*sigma^2 and exactly Gaussian shape."""
+    rng = np.random.default_rng(seed)
+    stats = _stats_of((sigma * rng.standard_normal((128, 128))).astype(np.float32))
+    est_res_std = np.sqrt(stats.rv2) * stats.vr
+    assert est_res_std == pytest.approx(2.0 * sigma, rel=0.25)
+    assert 2.2 <= stats.kurtosis <= 4.2
+    assert pred.confidence(stats) >= pred.CONFIDENCE_THRESHOLD
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(KINDS),
+    eb_rel=st.sampled_from([1e-2, 1e-3, 1e-4]),
+)
+def test_prediction_error_bounded_on_known_fields(seed, kind, eb_rel):
+    """Against the sampled estimator: ZFP rate within an absolute band
+    everywhere; SZ rate within an absolute-or-relative band while the
+    sampled rate is still below the 32 b/v raw fallback — past raw, both
+    paths store raw f32 regardless of the exact figure, so the property
+    degrades to directional agreement (the model must also say "past
+    useful", not report a cheap rate)."""
+    x = _field(kind, seed)
+    stats = _stats_of(x)
+    assert pred.confidence(stats) >= pred.CONFIDENCE_THRESHOLD
+    eb = float(eb_rel * (x.max() - x.min()))
+    sampled = _sel.select_many([x], eb_abs=eb)[0]
+    p = pred.predict_selection(stats, eb)
+    assert abs(p.br_zfp - sampled.br_zfp) <= 3.0
+    if sampled.br_sz < 32.0:
+        assert abs(p.br_sz - sampled.br_sz) <= max(4.0, 0.55 * sampled.br_sz)
+    else:
+        assert p.br_sz >= 0.8 * 32.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_low_confidence_routes_to_sampled_fallback(seed):
+    rng = np.random.default_rng(seed)
+    heavy = rng.standard_cauchy((128, 128)).astype(np.float32)
+    tiny = rng.standard_normal((12, 12)).astype(np.float32)
+    const = np.full((64, 64), 3.25, np.float32)
+    sels, routes = pred.select_many_predicted(
+        [heavy, tiny, const], eb_rel=1e-3
+    )
+    assert routes[0] == "sampled"  # heavy tails break the entropy model
+    assert routes[1] == "sampled"  # too few samples to trust the moments
+    assert routes[2] == "degenerate"  # constant: vr == 0 -> raw fallback
+    assert sels[2].codec == "raw"
+    assert pred.confidence(_stats_of(heavy)) < pred.CONFIDENCE_THRESHOLD
+    assert pred.confidence(_stats_of(tiny)) < pred.CONFIDENCE_THRESHOLD
+    # the sampled fallback re-batches exactly like plain select_many on
+    # this tree (heavy+tiny share the 2-D launch), so it must agree
+    ref = _sel.select_many([heavy, tiny, const], eb_rel=1e-3)
+    assert sels[0] == ref[0] and sels[1] == ref[1]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(["white2d", "walk3d"]),
+)
+def test_predicted_selection_respects_bound_fields(seed, kind):
+    """Structural invariants of the predicted Selection: the SZ bound
+    never exceeds the user bound, rates are positive, and the codec is
+    the argmin of the predicted rates (Algorithm 1 on the model)."""
+    x = _field(kind, seed)
+    stats = _stats_of(x)
+    eb = float(1e-3 * (x.max() - x.min()))
+    p = pred.predict_selection(stats, eb)
+    assert 0.0 < p.eb_sz <= p.eb_abs == eb
+    assert p.br_sz > 0.0 and p.br_zfp > 0.0
+    if p.codec == "sz":
+        assert p.br_sz <= p.br_zfp or p.br_zfp >= 32.0
+    elif p.codec == "zfp":
+        assert p.br_zfp <= p.br_sz or p.br_sz >= 32.0

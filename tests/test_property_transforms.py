@@ -10,6 +10,8 @@ import pytest
 
 pytest.importorskip("hypothesis")
 
+pytestmark = pytest.mark.property
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.transforms import (

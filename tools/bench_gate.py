@@ -6,12 +6,18 @@ Per FRaZ (Underwood et al. 2020) and the black-box ratio-prediction work
 (Underwood et al. 2023), compressor throughput/ratio regressions are
 silent and workload-dependent — nothing in the unit tests notices when a
 refactor halves the batched engine's speedup or flips a borderline
-selection. This gate runs four smoke benches and fails the job when:
+selection. This gate runs a handful of smoke benches and fails the job
+when:
 
 * any **decision flips** vs the committed baseline (exact codec + matched
   SZ bound per smoke field, keyed by the environment's Huffman-table cost
   like the golden suite), or
-* any **throughput ratio regresses by more than 20%** vs the baseline.
+* any **throughput ratio regresses by more than 20%** vs the baseline, or
+* the **warm save path** (DESIGN.md §8) flips any decision vs its cold
+  reference, drops a cache hit, or costs more than
+  `WARM_OVERHEAD_MAX_PCT` of encode time on the full-size repeated-save
+  workload (the parity and overhead checks are absolute — they need no
+  baseline; the warm-vs-cold selection speedup rides the 20% ratio rule).
 
 Throughput is tracked as *ratios* (batched-vs-per-field selection speedup,
 3-D-kernel-vs-fallback speedup, shard-local-vs-gather save speedup) and
@@ -19,7 +25,7 @@ estimation quality as bits/value error — machine-relative numbers a
 committed baseline can gate across runner generations; raw wall times are
 recorded in the report but never gated.
 
-  python tools/bench_gate.py --out BENCH_4.json     # gate (CI `bench` job)
+  python tools/bench_gate.py --out BENCH_6.json     # gate (CI `bench` job)
   python tools/bench_gate.py --update-baseline      # refresh the baseline
   REPRO_SZ_TABLE_BITS=5 python tools/bench_gate.py --update-baseline \
       --decisions-only                              # other env's decisions
@@ -54,6 +60,13 @@ MAX_REGRESSION = 0.20
 #: absolute slack (bits/value) on the estimation-error metric, so a
 #: near-zero baseline does not gate on noise
 EST_ABS_SLACK = 0.05
+#: warm selection may cost at most this % of encode time on the
+#: repeated-save workload (full-size fields — the smoke shapes are too
+#: small to amortize the fixed per-launch cost, so this one bench runs
+#: at `run_repeated_save`'s defaults). The DESIGN.md §8 target is <2%
+#: (measured ~1.4-1.6%); the ceiling adds headroom for runner noise
+#: while still failing if the warm path ever grows real per-field work.
+WARM_OVERHEAD_MAX_PCT = 3.0
 
 
 def _env_key() -> str:
@@ -159,6 +172,19 @@ def bench_ratios(repeat: int) -> tuple[dict, dict]:
     return ratios, raw
 
 
+def bench_warm_save() -> tuple[dict, dict]:
+    """Repeated-save workload (DESIGN.md §8): the same tree saved through
+    a `DecisionCache`, at `run_repeated_save`'s full field sizes (the one
+    non-smoke bench here — see WARM_OVERHEAD_MAX_PCT). Returns (summary,
+    raw rows); the summary's flips / hit_rate / overhead are gated
+    absolutely, its warm-vs-cold selection speedup rides the baseline
+    ratio rule."""
+    from benchmarks import bench_overhead
+
+    rows, summary = bench_overhead.run_repeated_save()
+    return summary, {"repeated_save": rows}
+
+
 def gate(metrics: dict, baseline: dict) -> list[dict]:
     """Compare current metrics against the baseline -> list of checks."""
     checks: list[dict] = []
@@ -219,6 +245,29 @@ def gate(metrics: dict, baseline: dict) -> list[dict]:
                 detail=f"{cur:.2f}x vs baseline {base:.2f}x (floor {floor:.2f}x)",
             )
         )
+    warm = metrics.get("warm_save")
+    if warm is not None:
+        # differential parity is absolute — a validated warm hit must
+        # replay the cold decision bit-identically, every save a hit
+        checks.append(
+            dict(
+                name="warm_save_parity",
+                passed=not warm["flips"] and warm["hit_rate"] >= 1.0,
+                detail=(
+                    f"flips={warm['flips']} hit_rate={warm['hit_rate']:.2f}"
+                    if warm["flips"] or warm["hit_rate"] < 1.0
+                    else f"no flips, hit rate {warm['hit_rate']:.2f}"
+                ),
+            )
+        )
+        checks.append(
+            dict(
+                name="warm_save_overhead_pct",
+                passed=warm["warm_overhead_pct"] <= WARM_OVERHEAD_MAX_PCT,
+                detail=f"{warm['warm_overhead_pct']:.2f}% of encode "
+                f"(ceiling {WARM_OVERHEAD_MAX_PCT:.0f}%)",
+            )
+        )
     base_err = baseline.get("estimation_error_b")
     cur_err = metrics["estimation_error_b"]
     if base_err is None:
@@ -237,7 +286,7 @@ def gate(metrics: dict, baseline: dict) -> list[dict]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_4.json", help="report path")
+    ap.add_argument("--out", default="BENCH_6.json", help="report path")
     ap.add_argument("--update-baseline", action="store_true")
     ap.add_argument(
         "--decisions-only",
@@ -262,8 +311,19 @@ def main() -> int:
         metrics["estimation_error_b"] = bench_estimation_error(fields, sels)
         print(f"  estimation error: {metrics['estimation_error_b']:.3f} b/v", flush=True)
         metrics["ratios"], raw = bench_ratios(args.repeat)
+        warm, warm_raw = bench_warm_save()
+        raw.update(warm_raw)
+        metrics["ratios"]["warm_save_speedup"] = float(warm["warm_save_speedup"])
+        metrics["warm_save"] = {
+            k: warm[k] for k in ("warm_overhead_pct", "hit_rate", "flips")
+        }
         for n, v in metrics["ratios"].items():
             print(f"  {n}: {v:.2f}x", flush=True)
+        print(
+            f"  warm_save: {warm['warm_overhead_pct']:.2f}% of encode, "
+            f"hit rate {warm['hit_rate']:.2f}, flips {warm['flips']}",
+            flush=True,
+        )
 
     if args.update_baseline:
         baseline = json.loads(BASELINE.read_text()) if BASELINE.exists() else {}
