@@ -1,0 +1,74 @@
+"""Multi-host checkpointing end to end (DESIGN.md §6.2): spawn a real
+2-process `jax.distributed` job on this machine, save one sharded
+checkpoint cooperatively — each host writes only the segments it owns —
+then restore it elastically with per-host segment locality, and inspect
+the on-disk layout the protocol leaves behind (per-host data files,
+completion markers, the host-0-assembled v3 manifest).
+
+The worker body is `repro.launch.shardckpt`'s dryrun scenario — the same
+one `python -m repro.launch.shardckpt --processes 2` runs; this example
+drives it through `repro.launch.mhrun` directly so the checkpoint
+directory survives for inspection.
+
+  PYTHONPATH=src python examples/multihost_checkpoint.py
+"""
+
+import json
+import os
+import sys
+import tempfile
+
+from repro.launch import mhrun
+
+PROCESSES = 2
+FIELDS = 4
+DIM = 256
+
+
+def main():
+    with tempfile.TemporaryDirectory() as wd:
+        ckpt_dir = os.path.join(wd, "ckpt")
+        results = mhrun.run(
+            [sys.executable, "-m", "repro.launch.shardckpt", "--mh-worker"],
+            PROCESSES,
+            scenario="dryrun",
+            args=dict(fields=FIELDS, dim=DIM, eb_rel=1e-3, directory=ckpt_dir),
+            local_devices=8 // PROCESSES,  # same 8-device global mesh as 1p
+            timeout_s=600.0,
+            workdir=os.path.join(wd, "mhrun"),
+        )
+        payloads = mhrun.require_success(results)
+
+        for p in payloads:
+            mesh = p["mesh"]
+            st = p["restore_stats"]
+            print(
+                f"host {mesh['process_index']}/{mesh['process_count']}: "
+                f"wrote {p['own_bytes'] / 1e6:.2f} MB of "
+                f"{p['total_bytes'] / 1e6:.2f} MB; elastic restore decoded "
+                f"{st['segments_decoded']}/{st['segments_total']} segments "
+                f"from data files {st['hosts_opened']} "
+                f"(within_bound={p['within_bound']})"
+            )
+
+        # the layout the §6.2 protocol leaves on disk
+        step_dir = payloads[0]["path"]
+        print(f"\n{os.path.basename(step_dir)}/")
+        for name in sorted(os.listdir(step_dir)):
+            size = os.path.getsize(os.path.join(step_dir, name))
+            print(f"  {name:<22} {size:>9} B")
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            man = json.load(f)
+        # multi-host manifests carry the writer set and per-host byte
+        # counts; restore refuses the step if any commit marker or byte
+        # is missing (IncompleteCheckpointError)
+        print(f"manifest: version={man['version']} hosts={man['hosts']} "
+              f"completion={man['completion']}")
+        segs = [s for fl in man["fields"] for s in fl["segments"]]
+        by_host = {h: sum(s["nbytes"] for s in segs if s["host"] == h)
+                   for h in man["hosts"]}
+        print(f"{len(segs)} segments; bytes by owning host: {by_host}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,3 @@
-from .manager import CheckpointConfig, CheckpointManager
+from .manager import CheckpointConfig, CheckpointManager, IncompleteCheckpointError
+
+__all__ = ["CheckpointConfig", "CheckpointManager", "IncompleteCheckpointError"]

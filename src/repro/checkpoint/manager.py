@@ -24,9 +24,29 @@ data files:
     manifest.json      # version: 3, layout: "segments"; per field:
                        # codec, eb, view_shape, resolved policy and a
                        # segment table [{start, stop, codec, host,
-                       # offset, nbytes}] in folded-view coordinates
-    data.<host>.bin    # this host's segments, concatenated
+                       # offset, nbytes}] in folded-view coordinates;
+                       # hosts + per-host completion (byte counts)
+    data.<host>.bin    # one per host: that host's segments, concatenated
+    segtable.<host>.json  # multi-host only: the host's segment rows,
+                       # merged into the manifest by host 0
+    commit.<host>      # per-host completion marker, written LAST
   <dir>/LATEST
+
+The segment writer is genuinely **multi-host** (DESIGN.md §6.2): under
+`jax.process_count() > 1`, the psum reconciliation makes every process
+derive the IDENTICAL per-field decisions, then each process encodes and
+writes only the shards it owns (`dist.owner_host` — one writer per
+replicated shard, no coordination needed) into its own `data.<host>.bin`
+plus a `segtable.<host>.json` row table and a `commit.<host>` marker.
+A bounded barrier (`CheckpointConfig.barrier_timeout_s`) fences the
+write phase — a dead or straggling host FAILS the save on every live
+host instead of hanging the job — after which host 0 merges the segment
+tables into one manifest (recording `hosts` and per-host `completion`
+byte counts) and atomically promotes the step directory. A save that
+dies mid-flight therefore never publishes: the tmp directory is simply
+abandoned and the previous step stays restorable. `restore` refuses any
+segment manifest whose completion markers are missing or whose data
+files are short (`IncompleteCheckpointError`).
 
 Restore is elastic for both layouts: `restore` reassembles full tensors
 from whatever segments exist (a segment checkpoint saved on 8 devices
@@ -96,6 +116,7 @@ import numpy as np
 
 from repro.core import codecs, controller
 from repro.core import selector as sel
+from repro.runtime import dist
 from repro.core.policy import (
     Policy,
     PolicySet,
@@ -104,6 +125,12 @@ from repro.core.policy import (
     policy_from_kwargs,
     policy_set_spec,
 )
+
+
+class IncompleteCheckpointError(RuntimeError):
+    """A segment checkpoint is missing per-host completion markers (or its
+    data files are shorter than the recorded byte counts): some host's
+    write never finished, so the manifest must not be trusted."""
 
 
 @dataclasses.dataclass
@@ -126,6 +153,10 @@ class CheckpointConfig:
     # to opt into tolerance>0 / warm_start. The cache rides the manifest
     # (`decision_cache` key) so `restore` leaves the next save warm.
     cache: Any = False
+    # multi-host save fencing (DESIGN.md §6.2): how long any host waits at
+    # the write/publish barriers before FAILING the save (a straggler or
+    # dead host must surface as an exception, never as a hang)
+    barrier_timeout_s: float = 120.0
     # deprecated kwarg spelling (None = unset) — shimmed onto `policy`
     eb_rel: float | None = None
     r_sp: float | None = None
@@ -160,11 +191,16 @@ class CheckpointConfig:
 
 
 def _leaf_items(tree: Any) -> list[tuple[str, np.ndarray]]:
+    """Host copies of every leaf. `dist.to_numpy` replicates leaves this
+    process cannot fully address (a collective — in a multi-process job
+    every host must walk the same tree at the same point), so the flat
+    layout stays usable beyond one process: decisions are derived from
+    identical gathered arrays on every host and host 0 alone writes."""
     leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in leaves:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        out.append((name, np.asarray(leaf)))
+        out.append((name, dist.to_numpy(leaf)))
     return out
 
 
@@ -194,12 +230,100 @@ def _field_policy_spec(pol: Policy | None) -> dict:
     return pol.spec() if pol is not None else dict(_RAW_SPEC)
 
 
+class _HostBlobs:
+    """Range reader over a step directory's per-host data files: a host's
+    file is opened on first touch and only the spans asked for are read —
+    the elastic restore's locality primitive (a process restoring its own
+    shards never reads bytes from a data file it doesn't need)."""
+
+    def __init__(self, d: str):
+        self._d = d
+        self._files: dict[int, Any] = {}
+
+    def read(self, host: int, offset: int, nbytes: int) -> bytes:
+        f = self._files.get(host)
+        if f is None:
+            f = self._files[host] = open(
+                os.path.join(self._d, f"data.{host}.bin"), "rb"
+            )
+        f.seek(offset)
+        return f.read(nbytes)
+
+    @property
+    def hosts_opened(self) -> list[int]:
+        return sorted(self._files)
+
+    def close(self) -> None:
+        for f in self._files.values():
+            f.close()
+        self._files.clear()
+
+
+def _flat_span(
+    start: tuple, stop: tuple, shape: tuple[int, ...]
+) -> tuple[int, int]:
+    """Conservative C-order flat element range [lo, hi) bounding the box
+    start:stop of an array of `shape`. The fold (`core/sharded.fold_plan`)
+    only merges adjacent dims — a pure C-order reshape — so spans computed
+    in ORIGINAL and FOLDED coordinates index the same flat element order
+    and are directly comparable: the basis of restore-side segment
+    filtering. Conservative means a span may cover extra elements (a box
+    is not flat-contiguous), never fewer — a needed segment is never
+    skipped."""
+    if not shape:
+        return 0, 1
+    if any(int(b) <= int(a) for a, b in zip(start, stop)):
+        return 0, 0
+    lo = int(np.ravel_multi_index(tuple(int(a) for a in start), shape))
+    hi = int(np.ravel_multi_index(tuple(int(b) - 1 for b in stop), shape)) + 1
+    return lo, hi
+
+
+def _spans_overlap(a: tuple[int, int], b: tuple[int, int]) -> bool:
+    return a[0] < b[1] and b[0] < a[1]
+
+
+def _need_span(sharding: Any, shape: tuple[int, ...]) -> tuple[int, int]:
+    """The conservative flat span of the elements THIS process must hold
+    under a target `sharding`: the union bounding range of its addressable
+    shards' index boxes. (0, 0) when no shard of the field lands here."""
+    try:
+        imap = sharding.devices_indices_map(tuple(shape))
+    except Exception:
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        return 0, size
+    pid = dist.process_index()
+    lo = hi = None
+    for dev, idx in imap.items():
+        if int(getattr(dev, "process_index", 0)) != pid:
+            continue
+        start, stop = [], []
+        for sl, dim in zip(idx, shape):
+            a, b, _ = sl.indices(dim)
+            start.append(a)
+            stop.append(b)
+        a, b = _flat_span(tuple(start), tuple(stop), tuple(shape))
+        lo = a if lo is None else min(lo, a)
+        hi = b if hi is None else max(hi, b)
+    if lo is None:
+        return 0, 0
+    return lo, hi
+
+
 class CheckpointManager:
     def __init__(self, cfg: CheckpointConfig):
         self.cfg = cfg
         os.makedirs(cfg.directory, exist_ok=True)
         self._thread: threading.Thread | None = None
         self._exc: BaseException | None = None
+        # per-manager save counter: barrier names must be fresh per save
+        # (re-saving one step would otherwise reuse a consumed barrier);
+        # SPMD symmetry keeps it in lockstep on every host
+        self._save_seq = 0
+        # segment locality of the last multi-host `restore_tree` (tests +
+        # ops introspection): {"segments_decoded", "segments_total",
+        # "hosts_opened"}
+        self.last_restore_stats: dict | None = None
         # resolve cfg.cache -> DecisionCache | None (DESIGN.md §8)
         cache = cfg.cache
         if cache is True:
@@ -254,12 +378,23 @@ class CheckpointManager:
         if self.cfg.sharded:
             return self._save_sharded(step, tree, lossy)
         cfg = self.cfg
-        tmp = os.path.join(cfg.directory, f".tmp_step_{step:09d}_{os.getpid()}")
         final = os.path.join(cfg.directory, f"step_{step:09d}")
+        t0 = time.time()
+        # the gather (a collective beyond one process) runs on EVERY host;
+        # selection + writing then run on host 0 alone — flat multi-host
+        # saves are correct but gather-bound, sharded=True is the one that
+        # scales (DESIGN.md §6.2)
+        items = _leaf_items(tree)
+        seq = self._save_seq
+        self._save_seq += 1
+        if dist.process_index() != 0:
+            dist.barrier(
+                f"ckpt:{step}:{seq}:published", self.cfg.barrier_timeout_s
+            )
+            return final
+        tmp = os.path.join(cfg.directory, f".tmp_step_{step:09d}_{os.getpid()}")
         os.makedirs(tmp, exist_ok=True)
         fields = []
-        t0 = time.time()
-        items = _leaf_items(tree)
         pol_of = self._resolve_policies(items, lossy)
         # Steps 1-3 for every lossy field in ONE batched estimator launch
         # per round AND policy group (the solvers cast to f32 one field at
@@ -306,7 +441,9 @@ class CheckpointManager:
         manifest = self._manifest(step, fields, off, t0, extra=dict(layout="flat"))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
-        return self._publish(tmp, final)
+        out = self._publish(tmp, final)
+        dist.barrier(f"ckpt:{step}:{seq}:published", self.cfg.barrier_timeout_s)
+        return out
 
     def _encoded_in_order(self, items: list, encode: Callable[[int], Any]):
         """Yield `encode(i)` in input order while a bounded thread pool runs
@@ -394,22 +531,20 @@ class CheckpointManager:
         Policy-raw and non-float leaves write exact original-dtype bytes,
         also per shard (codec ``none``) — nothing in this path gathers a
         tensor that the engine's layout analysis can keep sharded."""
-        from repro.core import sharded as shd
-        from repro.runtime import sharding as rsh
-
-        if jax.process_count() > 1:
-            # the segment writer is single-controller: one process fetches
-            # every unique shard and writes one manifest. True multi-host
-            # saves need per-host segment tables + manifest assembly (§6.2).
-            raise NotImplementedError(
-                "sharded checkpoint writing is single-process for now; "
-                "run the save from a single-controller job or use sharded=False"
-            )
-        cfg = self.cfg
-        tmp = os.path.join(cfg.directory, f".tmp_step_{step:09d}_{os.getpid()}")
-        final = os.path.join(cfg.directory, f"step_{step:09d}")
-        os.makedirs(tmp, exist_ok=True)
         t0 = time.time()
+        items, pol_of, plan_of = self._plan_sharded(tree, lossy)
+        return self._write_sharded(step, t0, items, pol_of, plan_of)
+
+    def _plan_sharded(self, tree: Any, lossy: Callable[[str], bool]):
+        """Stage I/II for the segment writer: resolve policies and run the
+        shard-local decision launches (`plan_tree`, one per policy group).
+        Contains every COLLECTIVE of the save — psum reconciliation,
+        moments fingerprints, fallback gathers — so in a multi-process job
+        it must run on the main thread, in program order, on every host;
+        `_write_sharded` (pure host IO + KV barriers) is then free to run
+        on the async writer thread (DESIGN.md §6.2)."""
+        from repro.core import sharded as shd
+
         items = _leaf_items_raw(tree)
         pol_of = self._resolve_policies(items, lossy)
         plan_of: dict[int, Any] = {}
@@ -419,25 +554,65 @@ class CheckpointManager:
                 [items[i][1] for i in idxs], pol, cache=self.cache, names=names
             )
             plan_of.update(zip(idxs, plans))
-        host = int(jax.process_index())
+        return items, pol_of, plan_of
+
+    def _write_sharded(
+        self, step: int, t0: float, items: list, pol_of: dict, plan_of: dict
+    ) -> str:
+        """Step 4 + publication, per host (DESIGN.md §6.2):
+
+        1. every host encodes the segments it OWNS (`dist.owner_host` —
+           replicated shards get exactly one writer, gather-fallback and
+           host-array fields write on host 0) into `data.<host>.bin`;
+        2. it records its rows in `segtable.<host>.json` (multi-host) and
+           fsyncs, then writes the `commit.<host>` completion marker LAST;
+        3. a bounded barrier fences the write phase — a dead/straggling
+           host raises `BarrierTimeout` on every live host, the tmp dir is
+           abandoned, nothing is ever promoted;
+        4. host 0 merges the per-host segment tables into the manifest
+           (recording `hosts` + per-host `completion` byte counts) and
+           atomically promotes; a final bounded barrier makes every host
+           return only after the step is visible (or raise if host 0
+           died before publishing)."""
+        from repro.core import sharded as shd
+        from repro.runtime import sharding as rsh
+
+        cfg = self.cfg
+        host, nproc = dist.process_index(), dist.process_count()
+        seq = self._save_seq
+        self._save_seq += 1
+        # multi-host tmp dirs must agree across processes (shared FS);
+        # single-process keeps the pid suffix so concurrent managers in
+        # tests cannot collide
+        tag = "shared" if nproc > 1 else str(os.getpid())
+        tmp = os.path.join(cfg.directory, f".tmp_step_{step:09d}_{tag}")
+        final = os.path.join(cfg.directory, f"step_{step:09d}")
+        os.makedirs(tmp, exist_ok=True)
+        only = host if nproc > 1 else None
 
         def _encode(i: int):
-            """-> (view_shape, codec, eb, eb_sz, [(start, stop, codec, bytes)])"""
+            """-> (view_shape, sel_codec, eb, eb_sz, [(start, stop, codec, bytes)])
+
+            `sel_codec` is the DECISION bit; the recorded field codec (the
+            raw demote over every segment) is evaluated at manifest
+            assembly, where all hosts' rows are visible."""
             name, leaf = items[i]
             plan = plan_of.get(i)
             if plan is not None:
-                encoded = shd.encode_plan(leaf, plan)
+                encoded = shd.encode_plan(leaf, plan, host=only)
                 segs = [(s.start, s.stop, s.codec, s.data) for s in encoded]
                 sel = plan.selection
-                codec = shd.field_codec(sel.codec, encoded)
-                return plan.view_shape, codec, sel.eb_abs, sel.eb_sz, segs
+                return plan.view_shape, sel.codec, sel.eb_abs, sel.eb_sz, segs
             shape = tuple(int(s) for s in np.shape(leaf))
             if rsh.mesh_of(leaf) is not None and np.ndim(leaf) > 0:
                 segs = [
                     (start, stop, "none",
                      rsh.shard_data(leaf, shd._local_device(devs)).tobytes())
                     for start, stop, devs in rsh.unique_shards(leaf)
+                    if only is None or dist.owner_host(devs) == only
                 ]
+            elif only is not None and only != 0:
+                segs = []  # host arrays are identical everywhere: host 0 writes
             else:
                 arr = np.asarray(leaf)
                 segs = [((0,) * arr.ndim, shape, "none", arr.tobytes())]
@@ -446,7 +621,7 @@ class CheckpointManager:
         fields = []
         with open(os.path.join(tmp, f"data.{host}.bin"), "wb") as f:
             off = 0
-            for i, ((name, leaf), (view_shape, codec, eb, eb_sz, segs)) in enumerate(
+            for i, ((name, leaf), (view_shape, sel_codec, eb, eb_sz, segs)) in enumerate(
                 zip(items, self._encoded_in_order(items, _encode))
             ):
                 seg_rows = []
@@ -462,43 +637,135 @@ class CheckpointManager:
                     off += len(data)
                 fields.append(
                     dict(
-                        name=name, codec=codec,
+                        name=name, sel_codec=sel_codec,
                         shape=list(np.shape(leaf)), dtype=str(leaf.dtype),
                         view_shape=list(view_shape), eb=eb, eb_sz=eb_sz,
-                        nbytes=sum(r["nbytes"] for r in seg_rows),
                         segments=seg_rows,
                         policy=_field_policy_spec(pol_of.get(i)),
                     )
                 )
+            if nproc > 1:
+                f.flush()
+                os.fsync(f.fileno())
+        if nproc > 1:
+            with open(os.path.join(tmp, f"segtable.{host}.json"), "w") as f:
+                json.dump([fl["segments"] for fl in fields], f)
+                f.flush()
+                os.fsync(f.fileno())
+        # the completion marker comes LAST: its existence certifies this
+        # host's data + segment table are durably on disk (fsync only
+        # matters multi-host — single-host's commit point stays the
+        # atomic directory rename, and the sync would be pure latency)
+        marker = os.path.join(tmp, f"commit.{host}")
+        with open(marker + ".tmp", "w") as f:
+            json.dump({"nbytes": off, "fields": len(fields)}, f)
+            if nproc > 1:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(marker + ".tmp", marker)
+        dist.barrier(f"ckpt:{step}:{seq}:written", cfg.barrier_timeout_s)
+        if host == 0:
+            self._assemble_and_publish(step, t0, tmp, final, fields, nproc)
+        dist.barrier(f"ckpt:{step}:{seq}:published", cfg.barrier_timeout_s)
+        return final
+
+    def _assemble_and_publish(
+        self, step: int, t0: float, tmp: str, final: str, fields: list, nproc: int
+    ) -> None:
+        """Host 0's manifest assembly: verify every host's completion
+        marker, merge the per-host segment tables (decision metadata is
+        replicated — psum reconciliation makes it identical on every host,
+        so host 0's copies are authoritative), evaluate the per-field raw
+        demote over the MERGED rows, and atomically promote."""
+        from repro.core import sharded as shd
+
+        completion: dict[str, int] = {}
+        for h in range(nproc):
+            marker = os.path.join(tmp, f"commit.{h}")
+            if not os.path.exists(marker):  # pragma: no cover - barrier fences this
+                raise IncompleteCheckpointError(
+                    f"host {h} passed the write barrier without a completion "
+                    f"marker ({marker})"
+                )
+            with open(marker) as f:
+                completion[str(h)] = int(json.load(f)["nbytes"])
+            if h > 0:
+                with open(os.path.join(tmp, f"segtable.{h}.json")) as f:
+                    for fl, rows in zip(fields, json.load(f)):
+                        fl["segments"].extend(rows)
+        total = 0
+        for fl in fields:
+            fl["segments"].sort(key=lambda r: (tuple(r["start"]), r["host"]))
+            fl["nbytes"] = sum(r["nbytes"] for r in fl["segments"])
+            fl["codec"] = shd.field_codec(
+                fl.pop("sel_codec"), [r["codec"] for r in fl["segments"]]
+            )
+            total += fl["nbytes"]
         manifest = self._manifest(
-            step, fields, off, t0, extra=dict(layout="segments", hosts=[host])
+            step, fields, total, t0,
+            extra=dict(
+                layout="segments", hosts=list(range(nproc)), completion=completion
+            ),
         )
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
-        return self._publish(tmp, final)
+            if nproc > 1:
+                f.flush()
+                os.fsync(f.fileno())
+        self._publish(tmp, final)
 
     def async_save(self, step: int, tree: Any, **kw) -> threading.Thread:
         """Snapshot now; serialize+write on a worker thread. Unsharded saves
         snapshot to host memory; sharded saves snapshot DEVICE-side
-        (`jnp.copy`, sharding-preserving) so a training step that donates
+        (a sharding-preserving jitted copy) so a training step that donates
         or overwrites its buffers cannot race the background writer — the
         copy costs transient HBM, not a gather. Any exception the worker
-        hits — encoder failures included — is re-raised by `wait()`."""
-        if self.cfg.sharded:
-            import jax.numpy as jnp
+        hits — encoder failures included — is re-raised by `wait()`.
 
-            host_tree = jax.tree_util.tree_map(
-                lambda x: jnp.copy(x) if isinstance(x, jax.Array) else np.array(x),
-                tree,
-            )
-        else:
-            host_tree = jax.tree_util.tree_map(lambda x: np.array(x), tree)
+        The sharded save is PIPELINED (DESIGN.md §6.2): stats→solve (every
+        device collective, `_plan_sharded`) runs here on the calling
+        thread before the method returns — multi-host jobs must issue
+        collectives in program order on the main thread — while
+        encode→drain→barrier→publish (`_write_sharded`: host IO plus
+        KV-service fences, all thread-safe) overlaps with step N+1 on the
+        worker. A straggler host surfaces as `BarrierTimeout` from
+        `wait()`, never as a hang."""
         self.wait()
         self._exc = None
+        lossy = kw.pop("lossy", None)
+        if kw:
+            raise TypeError(f"async_save: unexpected kwargs {sorted(kw)}")
+        if lossy is None:
+            lossy = self._default_lossy()
+        if self.cfg.sharded:
+            snap = jax.tree_util.tree_map(
+                lambda x: dist.device_copy(x) if isinstance(x, jax.Array)
+                else np.array(x),
+                tree,
+            )
+            t0 = time.time()
+            items, pol_of, plan_of = self._plan_sharded(snap, lossy)
+            # gather-fallback fields fetch at encode time — a collective
+            # when the array spans processes — so materialize them on the
+            # calling thread; the worker then never touches devices it
+            # cannot address
+            items = [
+                (name, dist.to_numpy(leaf))
+                if i in plan_of and not plan_of[i].sharded
+                and isinstance(leaf, jax.Array)
+                else (name, leaf)
+                for i, (name, leaf) in enumerate(items)
+            ]
+            run = lambda: self._write_sharded(step, t0, items, pol_of, plan_of)  # noqa: E731
+        else:
+            # flat snapshot: `dist.to_numpy` is itself a collective for
+            # leaves this process cannot fully address — calling thread too
+            host_tree = jax.tree_util.tree_map(dist.to_numpy, tree)
+            run = lambda: self.save(step, host_tree, lossy=lossy)  # noqa: E731
 
         def _run() -> None:
             try:
-                self.save(step, host_tree, **kw)
+                run()
             except BaseException as e:  # noqa: BLE001 - surfaced by wait()
                 self._exc = e
 
@@ -532,26 +799,56 @@ class CheckpointManager:
         with open(p) as f:
             return int(f.read().strip().split("_")[-1])
 
-    def restore(self, step: int | None = None) -> tuple[int, dict[str, np.ndarray]]:
-        """Returns (step, {name: array}). Mesh-agnostic for BOTH layouts:
-        the v1 single-file reader stays supported, and v2 per-shard
-        segments reassemble into full tensors regardless of the saving
-        mesh — the caller (or `restore_tree(shardings=...)`) reshards."""
+    def _resolve_step_dir(self, step: int | None) -> tuple[int, str]:
         if step is None:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no checkpoint in {self.cfg.directory}")
-        d = os.path.join(self.cfg.directory, f"step_{step:09d}")
+        return step, os.path.join(self.cfg.directory, f"step_{step:09d}")
+
+    def _load_manifest(self, d: str) -> tuple[dict, str]:
+        """Read + vet a step's manifest -> (manifest, layout).
+
+        Layout dispatch: v3 records it explicitly; v2 is always the
+        segment layout, v1 (no version key) always the flat one.
+        Multi-host segment manifests — those carrying a `completion` key
+        (DESIGN.md §6.2) — are validated against their per-host markers
+        and data-file sizes: a checkpoint some host never finished must be
+        REJECTED (`IncompleteCheckpointError`), not silently decoded
+        short. Pre-completion manifests skip the check, so old
+        checkpoints stay readable."""
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         if self.cache is not None and "decision_cache" in manifest:
             # resume warm: the next save revalidates these entries against
             # fresh fingerprints before trusting any of them (DESIGN.md §8)
             self.cache.load_manifest(manifest["decision_cache"])
-        # layout dispatch: v3 records it explicitly; v2 is always the
-        # segment layout, v1 (no version key) always the flat one
         version = int(manifest.get("version", 1))
         layout = manifest.get("layout", "segments" if version == 2 else "flat")
+        if layout == "segments" and "completion" in manifest:
+            for h in manifest.get("hosts", []):
+                if not os.path.exists(os.path.join(d, f"commit.{h}")):
+                    raise IncompleteCheckpointError(
+                        f"{d}: completion marker commit.{h} is missing — "
+                        f"host {h}'s write never finished; refusing to decode"
+                    )
+                want = int(manifest["completion"].get(str(h), 0))
+                data = os.path.join(d, f"data.{h}.bin")
+                have = os.path.getsize(data) if os.path.exists(data) else -1
+                if have < want:
+                    raise IncompleteCheckpointError(
+                        f"{d}: data.{h}.bin holds {have} bytes but the "
+                        f"manifest records {want} — truncated write"
+                    )
+        return manifest, layout
+
+    def restore(self, step: int | None = None) -> tuple[int, dict[str, np.ndarray]]:
+        """Returns (step, {name: array}). Mesh-agnostic for BOTH layouts:
+        the v1 single-file reader stays supported, and v2 per-shard
+        segments reassemble into full tensors regardless of the saving
+        mesh — the caller (or `restore_tree(shardings=...)`) reshards."""
+        step, d = self._resolve_step_dir(step)
+        manifest, layout = self._load_manifest(d)
         if layout == "segments":
             return step, self._restore_v2(d, manifest)
         out: dict[str, np.ndarray] = {}
@@ -576,45 +873,72 @@ class CheckpointManager:
             out[fl["name"]] = arr
         return step, out
 
-    def _restore_v2(self, d: str, manifest: dict) -> dict[str, np.ndarray]:
-        """Elastic v2 reader: paste each field's segments into its folded
+    def _restore_v2(
+        self, d: str, manifest: dict,
+        need: dict[str, tuple[int, int]] | None = None,
+    ) -> dict[str, np.ndarray]:
+        """Elastic v2/v3 reader: paste each field's segments into its folded
         view (decompressing lossy ones), then reshape to the original
         shape/dtype. Works for any saving mesh — segments carry their own
-        view coordinates."""
+        view coordinates, and each row's `host` key addresses the per-host
+        data file it lives in (range reads via `_HostBlobs`: a file is
+        opened only if a needed segment lives there).
+
+        `need` (the multi-host `restore_tree` path) maps field name -> the
+        conservative flat element span this process must materialize:
+        only segments overlapping the span are read and decoded, the rest
+        of the view buffer stays unfilled — IO and decode work scale with
+        the LOCAL shard, not the global tensor. Fields with unfilled
+        regions are only safe to consume shard-wise (`dist.put_global`
+        slices exactly the addressable region), which is why the filter is
+        reserved for that caller. `last_restore_stats` records the
+        locality actually achieved."""
         from repro.core import sharded as shd
 
-        blobs: dict[int, bytes] = {}
-
-        def blob(host: int) -> bytes:
-            if host not in blobs:
-                with open(os.path.join(d, f"data.{host}.bin"), "rb") as f:
-                    blobs[host] = f.read()
-            return blobs[host]
-
+        blobs = _HostBlobs(d)
+        n_total = n_decoded = 0
         out: dict[str, np.ndarray] = {}
-        for fl in manifest["fields"]:
-            shape, dtype = tuple(fl["shape"]), np.dtype(fl["dtype"])
-            vshape = tuple(fl["view_shape"])
-            rows = fl["segments"]
-            if fl["codec"] == "none":
-                arr = np.empty(vshape, dtype)  # writeable by construction
-                for sg in rows:
-                    data = blob(sg["host"])[sg["offset"] : sg["offset"] + sg["nbytes"]]
-                    ext = tuple(b - a for a, b in zip(sg["start"], sg["stop"]))
-                    arr[tuple(slice(a, b) for a, b in zip(sg["start"], sg["stop"]))] = (
-                        np.frombuffer(data, dtype).reshape(ext)
+        try:
+            for fl in manifest["fields"]:
+                shape, dtype = tuple(fl["shape"]), np.dtype(fl["dtype"])
+                vshape = tuple(fl["view_shape"])
+                rows = fl["segments"]
+                n_total += len(rows)
+                span = need.get(fl["name"]) if need is not None else None
+                if span is not None:
+                    rows = [
+                        sg for sg in rows
+                        if _spans_overlap(
+                            span, _flat_span(sg["start"], sg["stop"], vshape)
+                        )
+                    ]
+                n_decoded += len(rows)
+                if fl["codec"] == "none":
+                    arr = np.empty(vshape, dtype)  # writeable by construction
+                    for sg in rows:
+                        data = blobs.read(sg["host"], sg["offset"], sg["nbytes"])
+                        ext = tuple(b - a for a, b in zip(sg["start"], sg["stop"]))
+                        arr[
+                            tuple(slice(a, b) for a, b in zip(sg["start"], sg["stop"]))
+                        ] = np.frombuffer(data, dtype).reshape(ext)
+                    out[fl["name"]] = arr.reshape(shape)
+                    continue
+                segments = [
+                    shd.Segment(
+                        tuple(sg["start"]), tuple(sg["stop"]), sg["codec"],
+                        blobs.read(sg["host"], sg["offset"], sg["nbytes"]),
                     )
-                out[fl["name"]] = arr.reshape(shape)
-                continue
-            segments = [
-                shd.Segment(
-                    tuple(sg["start"]), tuple(sg["stop"]), sg["codec"],
-                    blob(sg["host"])[sg["offset"] : sg["offset"] + sg["nbytes"]],
-                )
-                for sg in rows
-            ]
-            view = shd.decode_segments(vshape, segments)
-            out[fl["name"]] = view.reshape(shape).astype(dtype)
+                    for sg in rows
+                ]
+                view = shd.decode_segments(vshape, segments)
+                out[fl["name"]] = view.reshape(shape).astype(dtype)
+            self.last_restore_stats = dict(
+                segments_total=n_total,
+                segments_decoded=n_decoded,
+                hosts_opened=blobs.hosts_opened,
+            )
+        finally:
+            blobs.close()
         return out
 
     def restore_tree(
@@ -624,20 +948,43 @@ class CheckpointManager:
 
         `shardings` (optional pytree of `jax.sharding.Sharding` matching
         `template`) re-shards every leaf onto a TARGET mesh as it loads —
-        the elastic-restore path: a checkpoint saved on one mesh resumes
-        under any other device count or layout (DESIGN.md §6)."""
-        step, flat = self.restore(step)
+        the elastic-restore path: a checkpoint saved at ANY mesh and host
+        count resumes under any other (DESIGN.md §6). Leaves are placed
+        with `dist.put_global`, so a target sharding spanning processes is
+        built shard-by-shard — nothing is ever sent to a device this
+        process cannot address. In a multi-process job, segment-layout
+        restores additionally read + decode only the segments this
+        process's addressable shards intersect (`last_restore_stats`
+        reports the locality)."""
+        step, d = self._resolve_step_dir(step)
+        manifest, layout = self._load_manifest(d)
         leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        names = [
+            "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in leaves
+        ]
+        shard_list = (
+            jax.tree_util.tree_structure(template).flatten_up_to(shardings)
+            if shardings is not None
+            else None
+        )
+        if layout == "segments":
+            need = None
+            if shard_list is not None and dist.is_multihost():
+                need = {
+                    name: _need_span(s, tuple(np.shape(leaf)))
+                    for name, s, (_, leaf) in zip(names, shard_list, leaves)
+                }
+            flat = self._restore_v2(d, manifest, need=need)
+        else:
+            _, flat = self.restore(step)
         vals = []
-        for path, leaf in leaves:
-            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for name, (path, leaf) in zip(names, leaves):
             arr = flat[name]
             vals.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+        if shard_list is not None:
+            vals = [dist.put_global(v, s) for v, s in zip(vals, shard_list)]
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(template), vals
         )
-        if shardings is not None:
-            tree = jax.tree_util.tree_map(
-                lambda v, s: jax.device_put(v, s), tree, shardings
-            )
         return step, tree

@@ -7,7 +7,12 @@ training mesh, so every device computes estimator statistics on its LOCAL
 shard and the per-field decision is reconciled with a cheap collective of
 the §4–§5 sufficient statistics — no full-tensor gather ever happens on
 the selection path, and the byte encoders then run per shard (each host
-compresses only the bytes it already holds).
+compresses only the bytes it already holds). The collectives make this
+multi-HOST for free (DESIGN.md §6.2): under `jax.process_count() > 1`
+the merged statistics — and hence every decision and bound — are
+identical on all processes, and `encode_plan(..., host=)` filters the
+segment list to the ones a given process owns, which is what the
+checkpoint writer's per-host segment files build on.
 
 Two reconciliation strategies, both exposed through `plan_tree`:
 
@@ -67,6 +72,7 @@ try:  # jax >= 0.6 promotes shard_map out of experimental
 except ImportError:  # pragma: no cover - depends on jax version
     from jax.experimental.shard_map import shard_map as _shard_map
 
+from repro.runtime import dist
 from repro.runtime import sharding as rsh
 
 from . import codecs as _codecs
@@ -249,7 +255,11 @@ def _starts_plan(layout: FieldLayout, starts_bytes: bytes, n_blocks: int):
 
 def _stacked_starts(mesh: Mesh, per_dev: dict, nd: int, mx: int) -> jax.Array:
     """(n_devices, mx, nd+1) int32 — per-device [local starts | slot], padded
-    with slot = -1, placed so shard_map hands each device its own row."""
+    with slot = -1, placed so shard_map hands each device its own row. The
+    ownership map covers GLOBAL devices, so on a multi-process mesh the
+    array is assembled via `make_array_from_callback` (each process
+    contributes only its addressable rows — `device_put` cannot reach a
+    remote device)."""
     n = int(mesh.devices.size)
     ns = NamedSharding(mesh, PartitionSpec(tuple(mesh.axis_names)))
     arr = np.zeros((n, mx, nd + 1), np.int32)
@@ -261,7 +271,7 @@ def _stacked_starts(mesh: Mesh, per_dev: dict, nd: int, mx: int) -> jax.Array:
         for k, (lst, slot) in enumerate(zip(lsts, slots)):
             arr[row, k, :nd] = lst
             arr[row, k, nd] = slot
-    return jax.device_put(arr, ns)
+    return dist.put_global(arr, ns)
 
 
 # ---------------------------------------------------------------------------
@@ -380,7 +390,13 @@ def _field_stats(halo, valid, eb, vr, size_f, nd, transform, all_axes):
 
 
 @lru_cache(maxsize=32)
-def _engine_fn(mesh: Mesh, descs: tuple[_FieldDesc, ...], kind: str, transform: str):
+def _engine_fn(
+    mesh: Mesh,
+    descs: tuple[_FieldDesc, ...],
+    kind: str,
+    transform: str,
+    replicate_out: bool = False,
+):
     """Jitted shard_map over one batch of engine-eligible fields.
 
     kind='samples': each device extracts its owned halo blocks; outputs
@@ -388,7 +404,15 @@ def _engine_fn(mesh: Mesh, descs: tuple[_FieldDesc, ...], kind: str, transform: 
     block order. kind='stats': the full §4–§5 statistic computation +
     psum reconciliation runs in-graph; outputs per-field decision scalars.
     Cached per (mesh, field signatures, kind) — the checkpoint loop hits
-    the same signature every step."""
+    the same signature every step.
+
+    `replicate_out` (multi-process meshes, samples mode): the host cannot
+    `device_get` a cross-process-sharded output, so the blocks/slots are
+    `all_gather`ed IN-GRAPH over every mesh axis and come back replicated
+    (out_specs `P()`). The gather order differs from shard_map's stacking,
+    but reassembly scatters by slot index, so the result is identical —
+    every process sees the full global block set and the downstream
+    deciders run on bit-identical inputs on every host."""
     names = tuple(mesh.axis_names)
 
     def body(xs, sts, eb_f, vr_f, size_f):
@@ -401,6 +425,9 @@ def _engine_fn(mesh: Mesh, descs: tuple[_FieldDesc, ...], kind: str, transform: 
             lst, slot = st[:, :nd], st[:, nd]
             halo = _gather_ext(ext, lst, nd)
             if kind == "samples":
+                if replicate_out:
+                    halo = jax.lax.all_gather(halo, names, axis=0, tiled=True)
+                    slot = jax.lax.all_gather(slot, names, axis=0, tiled=True)
                 blocks_out.append(halo)
                 slots_out.append(slot)
             else:
@@ -420,7 +447,12 @@ def _engine_fn(mesh: Mesh, descs: tuple[_FieldDesc, ...], kind: str, transform: 
         PartitionSpec(),
         PartitionSpec(),
     )
-    if kind == "samples":
+    if kind == "samples" and replicate_out:
+        out_specs = (
+            tuple(PartitionSpec() for _ in descs),
+            tuple(PartitionSpec() for _ in descs),
+        )
+    elif kind == "samples":
         out_specs = (
             tuple(
                 PartitionSpec(names, *([None] * len(d.view_shape))) for d in descs
@@ -676,7 +708,10 @@ def plan_tree(
     # them in input order reproduces the unsharded batch composition
     # exactly — so mixed eligible/fallback pytrees still decide
     # bit-identically (the f32 cross-field reductions see the same packing).
-    host_arrs = [np.asarray(arrs[i]) for i in host_idx]
+    # host-fallback members gather to host; on a multi-process mesh the
+    # fetch rides a replicating computation (`dist.to_numpy`) so every
+    # host sees the identical array and derives the identical decision
+    host_arrs = [dist.to_numpy(arrs[i]) for i in host_idx]
     if mode == "fixed_accuracy":
         results: list[Selection | None] = [None] * n
         if reconcile_eff == "samples" or host_idx:
@@ -695,7 +730,7 @@ def plan_tree(
             _run_select_batches(groups, results, r_sp, transform, codecs)
         for i in host_idx:
             plans[i] = FieldPlan(
-                results[i], None, None, _host_view_shape(np.asarray(arrs[i])), "host"
+                results[i], None, None, _host_view_shape(arrs[i]), "host"
             )
         for i in blocks_of:
             plans[i] = FieldPlan(
@@ -720,7 +755,7 @@ def plan_tree(
         for i in host_idx:
             sol = results_t[i]
             plans[i] = FieldPlan(
-                sol.selection, sol, None, _host_view_shape(np.asarray(arrs[i])), "host"
+                sol.selection, sol, None, _host_view_shape(arrs[i]), "host"
             )
         for i in blocks_of:
             sol = results_t[i]
@@ -782,7 +817,13 @@ def _plan_engine_group(
         vrs.append(np.float32(vr))
         sizes.append(np.float32(int(np.prod(lay.view_shape))))
         owned_of.append((i, starts, owned))
-    fn = _engine_fn(mesh, tuple(descs), "stats" if reconcile_eff == "stats" else "samples", transform)
+    fn = _engine_fn(
+        mesh,
+        tuple(descs),
+        "stats" if reconcile_eff == "stats" else "samples",
+        transform,
+        replicate_out=reconcile_eff != "stats" and dist.spans_processes(mesh),
+    )
     xs = tuple(arrs[i] for i, _ in group)
     args = (
         xs,
@@ -831,16 +872,17 @@ class Segment:
 
 def _local_device(devices: tuple) -> Any:
     """The replica device THIS process can address (multi-process jobs hold
-    only their own shards; single-process emulation addresses all). The v2
-    writer is currently single-controller — `checkpoint/manager.py` guards
-    `process_count() > 1` — but segment fetching already prefers local
-    replicas so the guard is the only thing to lift for true multi-host."""
+    only their own shards; single-process emulation addresses all). The
+    multi-host segment writer (`checkpoint/manager.py`, DESIGN.md §6.2)
+    only ever asks for shards it OWNS (`dist.owner_host`), and the owner
+    holds a replica by construction, so this raising means a caller
+    skipped the ownership filter."""
     for d in devices:
         if getattr(d, "process_index", 0) == jax.process_index():
             return d
     raise ValueError(
-        "no addressable replica of this shard on this process — multi-host "
-        "sharded saves need per-host segment writing (DESIGN.md §6.2)"
+        "no addressable replica of this shard on this process — fetch only "
+        "segments owned by this host (dist.owner_host; DESIGN.md §6.2)"
     )
 
 
@@ -858,20 +900,31 @@ def encode_view_segment(view32: np.ndarray, sel: Selection) -> tuple[str, bytes]
     return sel.codec, data
 
 
-def encode_plan(x: Any, plan: FieldPlan) -> list[Segment]:
+def encode_plan(x: Any, plan: FieldPlan, host: int | None = None) -> list[Segment]:
     """Encode one field's bytes under its plan: per unique shard when the
     layout allows (each host touches only bytes it already holds), one
     gathered segment otherwise. Shard encoding reconstructs bit-identically
     to whole-field encoding because SZ's reconstruction is elementwise
     (`round(x/delta)*delta`) and ZFP's is 4-block-local with 4-aligned
-    shard boundaries."""
+    shard boundaries.
+
+    `host=None` (single-controller) encodes EVERY segment. With a host
+    index, only the segments that host OWNS are encoded — a replicated
+    shard is written exactly once, by the process holding its lowest-id
+    replica (`dist.owner_host`, the same rule on every host, so the
+    per-host partition needs no coordination); gather-fallback fields
+    write their single segment on host 0 (DESIGN.md §6.2)."""
     sel = plan.selection
     if not plan.sharded:
-        view = _view_of(np.asarray(x))
+        if host is not None and host != 0:
+            return []
+        view = _view_of(dist.to_numpy(x))
         codec, data = encode_view_segment(view, sel)
         return [Segment((0,) * view.ndim, view.shape, codec, data)]
     segs = []
     for s in plan.layout.segs:
+        if host is not None and dist.owner_host(s.devices) != host:
+            continue
         local = rsh.shard_data(x, _local_device(s.devices))
         view = np.asarray(local, dtype=np.float32).reshape(
             tuple(b - a for a, b in zip(s.start, s.stop))
@@ -881,14 +934,18 @@ def encode_plan(x: Any, plan: FieldPlan) -> list[Segment]:
     return segs
 
 
-def field_codec(sel_codec: str, segments: list[Segment]) -> str:
+def field_codec(sel_codec: str, segments: list) -> str:
     """The codec to RECORD for a field: the global decision bit, demoted
     to 'raw' when EVERY segment hit the never-bigger-than-raw safety net —
     mirroring the unsharded `encode_with_selection`, which rewrites the
     field codec when the whole stream failed to beat raw. Mixed outcomes
     keep the decision bit; the per-segment codecs in the manifest stay
-    authoritative for decoding either way."""
-    if sel_codec != "raw" and segments and all(s.codec == "raw" for s in segments):
+    authoritative for decoding either way. Accepts `Segment`s or bare
+    codec strings — the multi-host manifest assembler (DESIGN.md §6.2)
+    evaluates the demote over the segment rows MERGED from every host's
+    table, so the recorded codec matches the single-controller writer."""
+    seg_codecs = [getattr(s, "codec", s) for s in segments]
+    if sel_codec != "raw" and seg_codecs and all(c == "raw" for c in seg_codecs):
         return "raw"
     return sel_codec
 

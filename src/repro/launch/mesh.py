@@ -26,7 +26,12 @@ def make_emulated_mesh(shape=(2, 4), axes=("data", "model")):
     the environment BEFORE jax initializes — tests get this from
     `tests/conftest.py`'s early-import hook; scripts (benchmarks, the
     sharded-checkpoint dryrun) set it at the top of their own module,
-    before importing jax."""
+    before importing jax. In a multi-PROCESS job
+    (`repro.runtime.dist.initialize` — workers spawned by
+    `launch/mhrun.py`), `jax.device_count()` is already GLOBAL, so the
+    same call builds the same mesh over all hosts' devices: 8 global
+    devices give an identical (2, 4) layout at 1, 2, or 4 processes,
+    which is what makes cross-host-count decision parity testable."""
     n = int(jax.device_count())
     need = 1
     for s in shape:
@@ -35,6 +40,23 @@ def make_emulated_mesh(shape=(2, 4), axes=("data", "model")):
         raise RuntimeError(
             f"make_emulated_mesh{tuple(shape)} needs {need} devices, have {n}; "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax "
-            "initializes"
+            "initializes (per process under launch/mhrun.py)"
         )
     return jax.make_mesh(shape, axes)
+
+
+def describe_mesh(mesh) -> dict:
+    """Loggable mesh summary including the per-process device split —
+    the multi-host dryrun and test workers record it so a mis-assembled
+    job (wrong device counts per host) is visible in the artifacts."""
+    per_process: dict[int, int] = {}
+    for d in mesh.devices.flat:
+        p = int(getattr(d, "process_index", 0))
+        per_process[p] = per_process.get(p, 0) + 1
+    return dict(
+        shape=dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape))),
+        devices=int(mesh.devices.size),
+        process_index=int(jax.process_index()),
+        process_count=int(jax.process_count()),
+        devices_per_process={str(k): v for k, v in sorted(per_process.items())},
+    )

@@ -14,13 +14,25 @@ optimizer state), then exercises the full shard-local pipeline:
 Run it to sanity-check a jax upgrade or a new mesh layout end to end:
 
     PYTHONPATH=src python -m repro.launch.shardckpt [--fields 12] [--dim 512]
+
+`--processes N` (N in {2, 4}) runs the MULTI-HOST dryrun instead
+(DESIGN.md §6.2): N worker processes join one distributed CPU job via
+`launch/mhrun.py` (8 global emulated devices split across them), save
+one sharded checkpoint cooperatively — per-host `data.<host>.bin` +
+completion markers, host-0 manifest assembly — then elastically restore
+it with per-host segment locality, and the driver prints each host's
+byte counts and locality stats:
+
+    PYTHONPATH=src python -m repro.launch.shardckpt --processes 2
 """
 
 import os
+import sys
 
-os.environ["XLA_FLAGS"] = (
-    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
-).strip()
+if "--mh-worker" not in sys.argv:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
 
 import argparse
 import json
@@ -33,12 +45,18 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.core import Policy
-from repro.launch.mesh import make_emulated_mesh
+from repro.launch.mesh import describe_mesh, make_emulated_mesh
 
 
 def synth_state(mesh, n_fields: int, dim: int, seed: int = 0):
     """A train-state-like pytree: weights sharded FSDP-style over 'data' /
-    TP-style over 'model', a replicated norm table, raw optimizer moments."""
+    TP-style over 'model', a replicated norm table, raw optimizer moments.
+    Placement rides `dist.put_global`, so the same synthesis works when
+    `mesh` spans processes (every worker seeds identically and contributes
+    only its addressable shards) — the multi-host dryrun and test workers
+    build their state with exactly this function."""
+    from repro.runtime import dist
+
     rng = np.random.default_rng(seed)
     tree: dict = {"params": {}, "opt": {}}
     shardings: dict = {"params": {}, "opt": {}}
@@ -46,25 +64,123 @@ def synth_state(mesh, n_fields: int, dim: int, seed: int = 0):
         name = f"layer{i:02d}/w"
         x = np.cumsum(rng.standard_normal((dim, dim)), axis=0).astype(np.float32)
         spec = P("data", None) if i % 2 == 0 else P(None, "model")
-        tree["params"][name] = jax.device_put(x, NamedSharding(mesh, spec))
+        tree["params"][name] = dist.put_global(x, NamedSharding(mesh, spec))
         shardings["params"][name] = NamedSharding(mesh, spec)
         m = (0.01 * rng.standard_normal((dim, dim))).astype(np.float32)
-        tree["opt"][name] = jax.device_put(m, NamedSharding(mesh, spec))
+        tree["opt"][name] = dist.put_global(m, NamedSharding(mesh, spec))
         shardings["opt"][name] = NamedSharding(mesh, spec)
     norm = np.linspace(0.9, 1.1, dim, dtype=np.float32)
-    tree["params"]["norm"] = jax.device_put(norm, NamedSharding(mesh, P()))
+    tree["params"]["norm"] = dist.put_global(norm, NamedSharding(mesh, P()))
     shardings["params"]["norm"] = NamedSharding(mesh, P())
-    tree["step"] = np.array(1234, np.int64)
+    # int32: jax without x64 canonicalizes wider ints on placement, which
+    # would make the restored-through-device value differ from the saved one
+    tree["step"] = np.array(1234, np.int32)
     shardings["step"] = NamedSharding(mesh, P())
     return tree, shardings
 
 
+def _mh_dryrun(spec: dict, pid: int) -> dict:
+    """Worker body for `--processes N`: cooperative sharded save + local
+    elastic restore on the shared 8-device (2, 4) mesh."""
+    a = spec["args"]
+    mesh = make_emulated_mesh((2, jax.device_count() // 2), ("data", "model"))
+    tree, shardings = synth_state(mesh, int(a["fields"]), int(a["dim"]))
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            directory=a["directory"],
+            policy=Policy.fixed_accuracy(eb_rel=float(a["eb_rel"])),
+            sharded=True,
+            barrier_timeout_s=60.0,
+        )
+    )
+    t0 = time.perf_counter()
+    path = mgr.save(1, tree)
+    t_save = time.perf_counter() - t0
+    own_bytes = os.path.getsize(os.path.join(path, f"data.{pid}.bin"))
+    t0 = time.perf_counter()
+    _, restored = mgr.restore_tree(tree, shardings=shardings)
+    t_restore = time.perf_counter() - t0
+    w0 = np.asarray(
+        jax.jit(lambda x: x, out_shardings=NamedSharding(mesh, P()))(
+            restored["params"]["layer00/w"]
+        )
+    )
+    exact = bool(
+        np.allclose(
+            w0,
+            np.asarray(
+                jax.jit(lambda x: x, out_shardings=NamedSharding(mesh, P()))(
+                    tree["params"]["layer00/w"]
+                )
+            ),
+            atol=float(a["eb_rel"]) * float(np.abs(w0).max() + 1.0),
+        )
+    )
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    return dict(
+        mesh=describe_mesh(mesh),
+        path=path,
+        save_seconds=t_save,
+        restore_seconds=t_restore,
+        own_bytes=int(own_bytes),
+        total_bytes=int(man["total_bytes"]),
+        restore_stats=mgr.last_restore_stats,
+        within_bound=exact,
+    )
+
+
+def _run_multiprocess(args) -> None:
+    from repro.launch import mhrun
+
+    with tempfile.TemporaryDirectory() as wd:
+        results = mhrun.run(
+            [sys.executable, "-m", "repro.launch.shardckpt", "--mh-worker"],
+            args.processes,
+            scenario="dryrun",
+            args=dict(
+                fields=args.fields, dim=args.dim, eb_rel=args.eb_rel,
+                directory=os.path.join(wd, "ckpt"),
+            ),
+            local_devices=8 // args.processes,
+            timeout_s=600.0,
+            workdir=os.path.join(wd, "mhrun"),
+        )
+        payloads = mhrun.require_success(results)
+        for p in payloads:
+            mesh = p["mesh"]
+            print(
+                f"host {mesh['process_index']}/{mesh['process_count']}: "
+                f"wrote {p['own_bytes'] / 1e6:.2f} MB of "
+                f"{p['total_bytes'] / 1e6:.2f} MB total; save {p['save_seconds']:.2f}s, "
+                f"restore {p['restore_seconds']:.2f}s decoding "
+                f"{p['restore_stats']['segments_decoded']}/"
+                f"{p['restore_stats']['segments_total']} segments "
+                f"from hosts {p['restore_stats']['hosts_opened']} "
+                f"(within_bound={p['within_bound']})"
+            )
+        if not all(p["within_bound"] for p in payloads):
+            raise SystemExit("MULTI-HOST DRYRUN FAILURE: restored values out of bound")
+    print(f"multi-host dryrun OK ({args.processes} processes)")
+
+
 def main() -> None:
+    if "--mh-worker" in sys.argv:
+        from repro.launch import mhrun
+
+        raise SystemExit(mhrun.worker_main(sys.argv[-1], {"dryrun": _mh_dryrun}))
     ap = argparse.ArgumentParser()
     ap.add_argument("--fields", type=int, default=12)
     ap.add_argument("--dim", type=int, default=512)
     ap.add_argument("--eb-rel", type=float, default=1e-3)
+    ap.add_argument(
+        "--processes", type=int, default=1, choices=(1, 2, 4),
+        help="run the multi-host dryrun with N distributed worker processes",
+    )
     args = ap.parse_args()
+    if args.processes > 1:
+        _run_multiprocess(args)
+        return
 
     mesh = make_emulated_mesh((2, 4), ("data", "model"))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "

@@ -1,0 +1,251 @@
+"""Multi-host runtime primitives (DESIGN.md §6.2).
+
+Everything the multi-host checkpoint protocol needs from the jax
+distributed runtime, behind one small surface so the rest of the repo
+never touches `jax._src`:
+
+* `initialize(...)` — one-call process bring-up: forces the emulated CPU
+  device count into XLA_FLAGS *before* jax initializes, switches the CPU
+  backend's cross-process collectives on (gloo — without it every
+  multi-process computation fails with "Multiprocess computations aren't
+  implemented on the CPU backend"), and runs
+  `jax.distributed.initialize`. Used by the multi-process test workers
+  (`tests/multihost/worker.py`), the `launch/shardckpt.py` dryrun, and
+  the bench-gate parity smoke; a real pod launch calls it with its own
+  coordinator address.
+* `barrier(name, timeout_s)` — a *bounded* host barrier on the
+  distributed KV service (not a device collective, so it is safe from a
+  background writer thread). A straggler past the deadline raises
+  `BarrierTimeout` on the waiting hosts instead of hanging the job —
+  the §6.2 save protocol's liveness guarantee.
+* `key_value_set/get` — the coordinator KV store, for small cross-host
+  handshakes.
+* `replicate(x)` / `to_numpy(x)` — fetch helpers for arrays that are NOT
+  fully addressable from this process (a jitted identity with a
+  fully-replicated out-sharding is a *computation*, which gloo supports,
+  whereas a bare `np.asarray` on such an array raises). The shard-local
+  engine uses them for layout-ineligible fields so the multi-host
+  gather-fallback decisions stay bit-identical to the single-controller
+  path.
+* `put_global(value, sharding)` — build a (possibly multi-process)
+  jax.Array from host data without `device_put`-ing to non-addressable
+  devices (`jax.make_array_from_callback`): the elastic-restore path and
+  the test workers' state synthesis.
+
+Single-process behavior is the identity: barriers no-op, `to_numpy` is
+`np.asarray`, `put_global` is `device_put` — so every call site runs
+unchanged under the ordinary single-controller tests.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import lru_cache
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+class BarrierTimeout(RuntimeError):
+    """A bounded barrier expired: some host is dead or straggling."""
+
+
+def process_index() -> int:
+    return int(jax.process_index())
+
+
+def process_count() -> int:
+    return int(jax.process_count())
+
+
+def is_multihost() -> bool:
+    return process_count() > 1
+
+
+def client():
+    """The distributed-coordination client, or None (single process)."""
+    try:
+        from jax._src import distributed
+
+        return distributed.global_state.client
+    except Exception:  # pragma: no cover - jax internals moved
+        return None
+
+
+def initialize(
+    coordinator_address: str,
+    num_processes: int,
+    process_id: int,
+    local_device_count: int | None = None,
+    initialization_timeout: int = 60,
+) -> None:
+    """Bring this process into an N-process (emulated or real) jax job.
+
+    Must run before jax touches the backend: `local_device_count` is
+    forced via `--xla_force_host_platform_device_count` (the
+    `tests/conftest.py` early-import trick, per process), and the CPU
+    collectives implementation is switched to gloo so cross-process
+    `psum`/`all_gather` — the §6.1 reconciliation — work on the CPU
+    backend. On jax versions where the config knob is gone (newer
+    releases default to a working implementation) the update is a no-op.
+    """
+    if local_device_count is not None:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count={local_device_count}"
+            ).strip()
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:  # pragma: no cover - knob absent/renamed on newer jax
+        pass
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+        initialization_timeout=initialization_timeout,
+    )
+
+
+def barrier(name: str, timeout_s: float) -> None:
+    """Wait until every process reaches `name`, at most `timeout_s`.
+
+    Runs on the coordinator KV service — safe off the main thread, no
+    device collective. Raises `BarrierTimeout` when the deadline expires
+    (straggler/dead host) so the caller FAILS the save instead of
+    hanging; any other coordination error (e.g. the coordinator process
+    died) re-raises as-is. Single-process: no-op."""
+    if process_count() <= 1:
+        return
+    c = client()
+    if c is None:  # pragma: no cover - defensive
+        raise RuntimeError("multi-process job without a distributed client")
+    try:
+        c.wait_at_barrier(name, int(timeout_s * 1000))
+    except Exception as e:  # jaxlib surfaces DEADLINE_EXCEEDED XlaRuntimeError
+        msg = str(e)
+        if "DEADLINE" in msg.upper() or "timed out" in msg.lower():
+            raise BarrierTimeout(
+                f"barrier {name!r} timed out after {timeout_s:g}s — a host "
+                "is dead or straggling; failing the save instead of hanging"
+            ) from e
+        raise
+
+
+def key_value_set(key: str, value: str) -> None:
+    c = client()
+    if c is None:
+        raise RuntimeError("key_value_set needs an initialized distributed runtime")
+    c.key_value_set(key, value)
+
+
+def key_value_get(key: str, timeout_s: float) -> str:
+    c = client()
+    if c is None:
+        raise RuntimeError("key_value_get needs an initialized distributed runtime")
+    return c.blocking_key_value_get(key, int(timeout_s * 1000))
+
+
+# ---------------------------------------------------------------------------
+# Cross-process array fetch / placement
+# ---------------------------------------------------------------------------
+
+
+def spans_processes(mesh: Mesh) -> bool:
+    """True when `mesh` holds devices of more than one process."""
+    procs = {getattr(d, "process_index", 0) for d in mesh.devices.flat}
+    return len(procs) > 1
+
+
+@lru_cache(maxsize=32)
+def _replicate_fn(mesh: Mesh):
+    out = NamedSharding(mesh, PartitionSpec())
+    return jax.jit(lambda x: x, out_shardings=out)
+
+
+def replicate(x: jax.Array) -> jax.Array:
+    """`x` resharded fully-replicated on its own mesh (a computation, so
+    it works across processes under gloo where plain device_put cannot)."""
+    sharding = getattr(x, "sharding", None)
+    mesh = getattr(sharding, "mesh", None)
+    if mesh is None or not hasattr(mesh, "devices"):
+        raise ValueError("replicate() needs a NamedSharding-backed jax.Array")
+    return _replicate_fn(mesh)(x)
+
+
+_device_copy_fn = None
+
+
+def device_copy(x: jax.Array) -> jax.Array:
+    """Sharding-preserving device-side copy (a jitted `jnp.copy`, so the
+    output buffer is distinct from the input's — XLA never aliases without
+    donation). The async-save snapshot: works across processes because the
+    copy is a computation, not a host transfer."""
+    global _device_copy_fn
+    if _device_copy_fn is None:
+        import jax.numpy as jnp
+
+        _device_copy_fn = jax.jit(lambda v: jnp.copy(v))
+    return _device_copy_fn(x)
+
+
+def to_numpy(x: Any) -> np.ndarray:
+    """Host copy of any leaf, including jax.Arrays this process cannot
+    fully address (replicated via `replicate` first). The multi-host
+    spelling of `np.asarray` — every process gets the identical value."""
+    if isinstance(x, jax.Array) and not (
+        x.is_fully_addressable or x.is_fully_replicated
+    ):
+        x = replicate(x)
+    return np.asarray(x)
+
+
+def put_global(value: np.ndarray, sharding: Any) -> jax.Array:
+    """Place host `value` (identical on every process) under `sharding`,
+    even when the sharding spans processes: each process contributes only
+    its addressable shards (`make_array_from_callback`), so nothing is
+    ever sent to a non-addressable device."""
+    mesh = getattr(sharding, "mesh", None)
+    if (
+        isinstance(sharding, NamedSharding)
+        and mesh is not None
+        and hasattr(mesh, "devices")
+        and spans_processes(mesh)
+    ):
+        value = np.asarray(value)
+
+        def _shard(idx):
+            part = np.asarray(value[idx])
+            # ascontiguousarray promotes 0-d to (1,), which the runtime rejects
+            return np.ascontiguousarray(part) if part.ndim else part
+
+        return jax.make_array_from_callback(value.shape, sharding, _shard)
+    return jax.device_put(value, sharding)
+
+
+def owner_host(devices: tuple) -> int:
+    """The process that WRITES a replicated shard: the one holding the
+    lowest-id replica (`runtime/sharding.unique_shards` orders device
+    groups by id, so every host derives the same owner without talking)."""
+    return int(getattr(devices[0], "process_index", 0))
+
+
+__all__ = [
+    "BarrierTimeout",
+    "barrier",
+    "client",
+    "device_copy",
+    "initialize",
+    "is_multihost",
+    "key_value_get",
+    "key_value_set",
+    "owner_host",
+    "process_count",
+    "process_index",
+    "put_global",
+    "replicate",
+    "spans_processes",
+    "to_numpy",
+]

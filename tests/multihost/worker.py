@@ -1,0 +1,297 @@
+"""Worker program for the multi-host differential tests (DESIGN.md §6.2).
+
+Spawned by `repro.launch.mhrun` — one python process per emulated host,
+all joined into a single distributed CPU job (gloo collectives). Every
+scenario builds the SAME (2, 4) mesh over 8 GLOBAL devices regardless of
+how many processes hold them (1x8, 2x4, 4x2 local), so shard layouts —
+and therefore Stage I/II decisions — must come out bit-identical at
+every host count: the differential parity the suite asserts.
+
+Scenarios (dispatched by `spec["scenario"]`):
+
+* ``save``            — cooperative sharded save under the mixed
+  PolicySet (fixed_accuracy default + fixed_psnr + fixed_ratio rules +
+  raw optimizer state); reports a manifest summary (decisions, bounds,
+  per-segment layout) and sha256 hashes of every restored field.
+* ``restore``         — elastic restore of an existing checkpoint onto a
+  DIFFERENT (4, 2) mesh; reports value hashes + per-host locality stats.
+* ``fault_kill``      — a healthy baseline save, then a save where the
+  victim host SIGKILLs itself at the write barrier; survivors must see
+  `BarrierTimeout`, and the previous step must still restore.
+* ``fault_straggler`` — same, but the victim sleeps past the barrier
+  deadline instead of dying; every host must raise, nothing promoted.
+* ``restore_reject``  — deletes one completion marker from a finished
+  checkpoint; every host's restore must raise
+  `IncompleteCheckpointError`.
+* ``async_mutate``    — pipelined `async_save`, live params donated away
+  immediately after issue; the manifest must decode the PRE-mutation
+  bytes (device snapshot isolation under the multi-host drain).
+
+Fault hooks monkeypatch `repro.runtime.dist.barrier` (the checkpoint
+writer always calls it through the module attribute), which keeps the
+production code free of test-only injection points.
+"""
+
+import hashlib
+import os
+import signal
+import sys
+import time
+
+import numpy as np
+
+
+def _policy_mix():
+    from repro.core import Policy
+    from repro.core.policy import PolicySet
+
+    return PolicySet(
+        default=Policy.fixed_accuracy(eb_rel=1e-3),
+        rules=[
+            ("params/layer00/w", Policy.fixed_psnr(60.0)),
+            ("params/layer01/w", Policy.fixed_ratio(6.0)),
+            ("opt/*", Policy.raw()),
+        ],
+    )
+
+
+def _mesh(shape=(2, 4)):
+    import jax
+
+    from repro.launch.mesh import make_emulated_mesh
+
+    assert jax.device_count() == 8, jax.device_count()
+    return make_emulated_mesh(tuple(shape), ("data", "model"))
+
+
+def _state(mesh, a):
+    from repro.launch.shardckpt import synth_state
+
+    return synth_state(mesh, int(a.get("fields", 3)), int(a.get("dim", 128)))
+
+
+def _manager(a, **over):
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+
+    kw = dict(
+        directory=a["directory"],
+        policy=_policy_mix(),
+        sharded=True,
+        barrier_timeout_s=float(a.get("barrier_timeout_s", 60.0)),
+    )
+    kw.update(over)
+    return CheckpointManager(CheckpointConfig(**kw))
+
+
+def _hashes(flat: dict) -> dict:
+    out = {}
+    for name, arr in sorted(flat.items()):
+        h = hashlib.sha256()
+        h.update(str(arr.dtype).encode())
+        h.update(str(tuple(arr.shape)).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+        out[name] = h.hexdigest()
+    return out
+
+
+def _summary(path: str) -> dict:
+    """Host/offset-free manifest digest: everything that must be
+    bit-identical across host counts (decisions, bounds, codecs, byte
+    counts, segment geometry) and nothing that legitimately differs
+    (which host wrote a segment, where in its file)."""
+    import json
+
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    fields = {}
+    for fl in man["fields"]:
+        fields[fl["name"]] = dict(
+            codec=fl["codec"],
+            eb=fl["eb"],
+            eb_sz=fl["eb_sz"],
+            nbytes=fl["nbytes"],
+            policy=fl["policy"],
+            segments=sorted(
+                [sg["start"], sg["stop"], sg["codec"], sg["nbytes"]]
+                for sg in fl["segments"]
+            ),
+        )
+    return dict(
+        total_bytes=man["total_bytes"],
+        selection_bits=man["selection_bits"],
+        fields=fields,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+
+def scenario_save(spec, pid):
+    a = spec["args"]
+    mesh = _mesh()
+    tree, _ = _state(mesh, a)
+    mgr = _manager(a)
+    step = int(a.get("step", 1))
+    path = mgr.save(step, tree)
+    _, flat = mgr.restore(step)
+    return dict(summary=_summary(path), hashes=_hashes(flat))
+
+
+def scenario_restore(spec, pid):
+    a = spec["args"]
+    mesh = _mesh(a.get("mesh", (4, 2)))
+    tree, shardings = _state(mesh, a)
+    from repro.runtime import dist
+
+    mgr = _manager(a)
+    step, restored = mgr.restore_tree(tree, shardings=shardings)
+    flat = {}
+
+    def _walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                _walk(f"{prefix}/{k}" if prefix else str(k), v)
+        else:
+            flat[prefix] = dist.to_numpy(node)
+
+    _walk("", restored)
+    w0 = restored["params"]["layer00/w"]
+    target = tuple(int(s) for s in a.get("mesh", (4, 2)))
+    return dict(
+        step=step,
+        hashes=_hashes(flat),
+        stats=mgr.last_restore_stats,
+        resharded=tuple(w0.sharding.mesh.devices.shape) == target,
+    )
+
+
+def _hooked_save(spec, pid, hook):
+    """Baseline save of step 1, then a step-2 save with `hook` wrapping
+    `dist.barrier`; returns what every surviving host observed."""
+    from repro.runtime import dist
+
+    a = spec["args"]
+    mesh = _mesh()
+    tree, _ = _state(mesh, a)
+    mgr = _manager(a)
+    mgr.save(1, tree)
+    orig = dist.barrier
+
+    def barrier(name, timeout_s):
+        hook(name, pid)
+        return orig(name, timeout_s)
+
+    dist.barrier = barrier
+    err = None
+    try:
+        mgr.save(2, tree)
+    except dist.BarrierTimeout:
+        err = "BarrierTimeout"
+    finally:
+        dist.barrier = orig
+    _, flat = mgr.restore()  # previous step must still restore cleanly
+    return dict(
+        err=err,
+        latest=mgr.latest_step(),
+        step2_promoted=os.path.exists(
+            os.path.join(a["directory"], "step_000000002")
+        ),
+        fields_restored=len(flat),
+    )
+
+
+def scenario_fault_kill(spec, pid):
+    victim = int(spec["args"].get("victim", 1))
+
+    def hook(name, p):
+        if ":written" in name and p == victim:
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    return _hooked_save(spec, pid, hook)
+
+
+def scenario_fault_straggler(spec, pid):
+    a = spec["args"]
+    victim = int(a.get("victim", 1))
+    delay = float(a.get("delay", 25.0))
+
+    def hook(name, p):
+        if ":written" in name and p == victim:
+            time.sleep(delay)
+
+    return _hooked_save(spec, pid, hook)
+
+
+def scenario_restore_reject(spec, pid):
+    from repro.checkpoint import IncompleteCheckpointError
+    from repro.runtime import dist
+
+    a = spec["args"]
+    mesh = _mesh()
+    tree, shardings = _state(mesh, a)
+    mgr = _manager(a)
+    path = mgr.save(1, tree)
+    if pid == 0:
+        os.remove(os.path.join(path, f"commit.{spec['num_processes'] - 1}"))
+    dist.barrier("reject:marker-removed", 60.0)
+    err = None
+    try:
+        mgr.restore_tree(tree, shardings=shardings)
+    except IncompleteCheckpointError:
+        err = "IncompleteCheckpointError"
+    return dict(err=err)
+
+
+def scenario_async_mutate(spec, pid):
+    import jax
+
+    a = spec["args"]
+    mesh = _mesh()
+    tree, _ = _state(mesh, a)
+    mgr = _manager(a)
+    t0 = time.perf_counter()
+    mgr.async_save(1, tree)
+    t_issue = time.perf_counter() - t0
+    # clobber the live state the moment the save is issued: donation
+    # invalidates the input buffers where the backend supports it, and the
+    # rebinding alone guarantees the writer can only be reading its own
+    # snapshot
+    mutate = jax.jit(
+        lambda t: jax.tree_util.tree_map(lambda x: x * 2 + 1, t),
+        donate_argnums=0,
+    )
+    tree = mutate(tree)
+    jax.block_until_ready(tree)
+    mgr.wait()
+    t_total = time.perf_counter() - t0
+    _, flat = mgr.restore(1)
+
+    # reference: a synchronous save of the identical pristine state
+    # (synth_state is seed-deterministic) in a second directory
+    pristine, _ = _state(mesh, a)
+    ref = _manager(a, directory=a["directory"] + "_ref")
+    ref.save(1, pristine)
+    _, ref_flat = ref.restore(1)
+    return dict(
+        pre_mutation=_hashes(flat) == _hashes(ref_flat),
+        issue_seconds=t_issue,
+        total_seconds=t_total,
+    )
+
+
+SCENARIOS = {
+    "save": scenario_save,
+    "restore": scenario_restore,
+    "fault_kill": scenario_fault_kill,
+    "fault_straggler": scenario_fault_straggler,
+    "restore_reject": scenario_restore_reject,
+    "async_mutate": scenario_async_mutate,
+}
+
+
+if __name__ == "__main__":
+    from repro.launch import mhrun
+
+    sys.exit(mhrun.worker_main(sys.argv[-1], SCENARIOS))

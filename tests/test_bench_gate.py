@@ -142,6 +142,38 @@ def test_gate_warm_ratio_rides_baseline_rule(monkeypatch):
     ]
 
 
+def test_gate_multihost_parity_is_absolute(monkeypatch):
+    """`multihost_save_parity` needs no baseline: the flip and mismatch
+    lists must simply be empty — any cross-host-count divergence in
+    decisions, manifest, or decompressed bytes fails the gate."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    m = _metrics()
+    m["multihost"] = {"hosts": [1, 2], "flips": [], "value_mismatches": []}
+    ok = bg.gate(m, _baseline())
+    assert [c for c in ok if c["name"] == "multihost_save_parity"][0]["passed"]
+    m["multihost"] = {
+        "hosts": [1, 2], "flips": ["2p:params/layer00/w"], "value_mismatches": [],
+    }
+    bad = [c for c in bg.gate(m, _baseline()) if c["name"] == "multihost_save_parity"][0]
+    assert not bad["passed"] and "2p:params/layer00/w" in bad["detail"]
+    m["multihost"] = {
+        "hosts": [1, 2], "flips": [], "value_mismatches": ["2p:opt/layer00/w"],
+    }
+    assert not [
+        c for c in bg.gate(m, _baseline()) if c["name"] == "multihost_save_parity"
+    ][0]["passed"]
+
+
+def test_gate_multihost_check_skipped_without_metric(monkeypatch):
+    """Decisions-only baseline refreshes don't run the multi-process smoke;
+    the gate must not emit (or fail) the check when the metric is absent."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    checks = bg.gate(_metrics(), _baseline())
+    assert not [c for c in checks if c["name"] == "multihost_save_parity"]
+
+
 def test_gate_fails_closed_on_unbaselined_field(monkeypatch):
     """A field added to the smoke suite without --update-baseline must
     fail the decision check, not ride along ungated."""

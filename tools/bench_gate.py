@@ -17,7 +17,12 @@ when:
   reference, drops a cache hit, or costs more than
   `WARM_OVERHEAD_MAX_PCT` of encode time on the full-size repeated-save
   workload (the parity and overhead checks are absolute — they need no
-  baseline; the warm-vs-cold selection speedup rides the 20% ratio rule).
+  baseline; the warm-vs-cold selection speedup rides the 20% ratio rule), or
+* the **multi-host save** (DESIGN.md §6.2) diverges across host counts:
+  `benchmarks/bench_multihost.py` saves the same state under 1- and
+  2-process distributed jobs and the `multihost_save_parity` check —
+  absolute, like the warm parity — fails on ANY decision flip, manifest
+  difference, or decompressed-byte mismatch.
 
 Throughput is tracked as *ratios* (batched-vs-per-field selection speedup,
 3-D-kernel-vs-fallback speedup, shard-local-vs-gather save speedup) and
@@ -185,6 +190,15 @@ def bench_warm_save() -> tuple[dict, dict]:
     return summary, {"repeated_save": rows}
 
 
+def bench_multihost() -> dict:
+    """Cross-host-count save parity (DESIGN.md §6.2): real 1- and
+    2-process distributed saves of the same state, differenced. Gated
+    absolutely by `multihost_save_parity` — the flip list must be empty."""
+    from benchmarks import bench_multihost as mh
+
+    return mh.run()
+
+
 def gate(metrics: dict, baseline: dict) -> list[dict]:
     """Compare current metrics against the baseline -> list of checks."""
     checks: list[dict] = []
@@ -268,6 +282,19 @@ def gate(metrics: dict, baseline: dict) -> list[dict]:
                 f"(ceiling {WARM_OVERHEAD_MAX_PCT:.0f}%)",
             )
         )
+    mh = metrics.get("multihost")
+    if mh is not None:
+        bad = list(mh["flips"]) + list(mh["value_mismatches"])
+        checks.append(
+            dict(
+                name="multihost_save_parity",
+                passed=not bad,
+                detail=(
+                    f"diverged across host counts: {bad[:6]}" if bad else
+                    f"decisions+bytes identical across {mh['hosts']} host counts"
+                ),
+            )
+        )
     base_err = baseline.get("estimation_error_b")
     cur_err = metrics["estimation_error_b"]
     if base_err is None:
@@ -322,6 +349,13 @@ def main() -> int:
         print(
             f"  warm_save: {warm['warm_overhead_pct']:.2f}% of encode, "
             f"hit rate {warm['hit_rate']:.2f}, flips {warm['flips']}",
+            flush=True,
+        )
+        metrics["multihost"] = bench_multihost()
+        print(
+            f"  multihost: hosts {metrics['multihost']['hosts']}, "
+            f"flips {metrics['multihost']['flips']}, "
+            f"mismatches {metrics['multihost']['value_mismatches']}",
             flush=True,
         )
 
