@@ -18,6 +18,11 @@ def main():
     serve_mod.main(["--arch", "smollm-360m", "--smoke", "--batch", "4",
                     "--prompt-len", "64", "--gen", "32"])
 
+    # the continuous tier (DESIGN.md §9): paged KV pool under Poisson
+    # arrivals, long-context requests compressed on evict at 8x
+    serve_mod.main(["--arch", "smollm-360m", "--smoke", "--continuous",
+                    "--requests", "6", "--slots", "2", "--gen", "12"])
+
     # KV page-out under a Policy: give the page a byte budget and let the
     # in-graph estimator solve the bound (no trial compressions)
     rng = np.random.default_rng(0)

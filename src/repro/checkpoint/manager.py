@@ -789,6 +789,25 @@ class CheckpointManager:
         )
         for d in steps[: -self.cfg.keep_n]:
             shutil.rmtree(os.path.join(self.cfg.directory, d), ignore_errors=True)
+        if not steps:
+            return
+        # GC torn writes: a crash between staging and promotion leaves a
+        # `.tmp_step_*` dir behind forever. Any tmp older than the newest
+        # COMMITTED step can never be promoted (promotion is monotone), so
+        # it is garbage; a tmp at/above the newest step may be a save in
+        # flight on another process and is left alone.
+        newest = int(steps[-1].split("_")[1])
+        for d in os.listdir(self.cfg.directory):
+            if not d.startswith(".tmp_step_"):
+                continue
+            try:
+                tmp_step = int(d.split("_")[2])
+            except (IndexError, ValueError):
+                continue
+            if tmp_step < newest:
+                shutil.rmtree(
+                    os.path.join(self.cfg.directory, d), ignore_errors=True
+                )
 
     # -- restore ------------------------------------------------------------
 

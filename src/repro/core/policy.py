@@ -253,6 +253,34 @@ def policy_set_spec(pset: PolicySet) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Serving-tier request resolution (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def request_kv_name(rid: int, context_len: int, long_threshold: int) -> str:
+    """Canonical per-request KV-policy leaf name for the serving tier
+    (DESIGN.md §9): ``kv/long/<rid>`` when the request's total context
+    (prompt + budgeted new tokens) reaches `long_threshold`, else
+    ``kv/short/<rid>``. The batcher resolves this name against its
+    `PolicySet` ONCE at admission, so the page policy is a jit-static
+    value for the request's whole lifetime."""
+    kind = "long" if context_len >= long_threshold else "short"
+    return f"kv/{kind}/{rid}"
+
+
+def serving_policies(
+    target_ratio: float = 8.0, *, r_sp: float = DEFAULT_R_SP
+) -> "PolicySet":
+    """The serving tier's stock PolicySet: long-context requests trade KV
+    page fidelity for a `fixed_ratio` byte budget on evicted pages; short
+    requests stay `raw` (evict/restore is bit-identical)."""
+    return PolicySet(
+        default=Policy.raw(),
+        rules=(("kv/long/*", Policy.fixed_ratio(target_ratio, r_sp=r_sp)),),
+    )
+
+
 def as_policy_set(policy) -> PolicySet:
     """Coerce a Policy | PolicySet into a PolicySet."""
     if isinstance(policy, PolicySet):
@@ -334,4 +362,6 @@ __all__ = [
     "group_by_policy",
     "policy_from_kwargs",
     "policy_set_spec",
+    "request_kv_name",
+    "serving_policies",
 ]

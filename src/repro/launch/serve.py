@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --batch 4 --prompt-len 64 --gen 32
+
+Continuous mode (`--continuous`) runs the compression-aware serving tier
+(DESIGN.md §9) instead: a `ContinuousBatcher` with the paged KV pool under
+synthetic Poisson arrivals — long-context requests resolve to a
+`Policy.fixed_ratio` byte budget for compress-on-evict, short ones stay raw.
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --continuous
 """
 
 from __future__ import annotations
@@ -14,11 +21,82 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.decision_cache import DecisionCache
+from repro.core.policy import serving_policies
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import build_model, reduced_for_smoke
 from repro.models import nn as rnn
 from repro.runtime import sharding
+from repro.runtime.batcher import ContinuousBatcher, Request
 from repro.runtime.steps import make_decode_step, make_prefill_step
+
+
+def run_continuous(args, cfg, model, params) -> dict:
+    """Continuous serving under Poisson arrivals (arrival clock = decode
+    steps). Prompt lengths mix short and long around `--long-threshold`
+    so both PolicySet arms (raw / fixed_ratio) are exercised."""
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.gen
+    decisions = DecisionCache()
+    b = ContinuousBatcher(
+        model, params, slots=args.slots, max_len=max_len, eos_id=-1,
+        page_tokens=args.page_tokens, arena_pages=args.arena_pages,
+        policies=serving_policies(args.target_ratio),
+        long_threshold=args.long_threshold, decisions=decisions,
+    )
+    if not b.paged:
+        raise SystemExit(f"--continuous needs the paged KV pool; {args.arch} "
+                         "does not support it (MLA / quantized KV)")
+    short_len = max(4, args.prompt_len // 4)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(
+                1, cfg.vocab, args.prompt_len if i % 2 else short_len
+            ).astype(np.int32),
+            max_new=args.gen,
+        )
+        for i in range(args.requests)
+    ]
+    arrive = np.cumsum(rng.exponential(1.0 / args.rate, size=len(reqs)))
+    t0 = time.time()
+    clock, nxt_req, steps, decoded = 0.0, 0, 0, 0
+    pending: list[Request] = []
+    peak_resident = 0
+    while nxt_req < len(reqs) or pending or b.preempted or b.live.any():
+        while nxt_req < len(reqs) and arrive[nxt_req] <= clock:
+            pending.append(reqs[nxt_req])
+            nxt_req += 1
+        while b.preempted and b.try_admit(b.preempted[0]):
+            b.preempted.pop(0)
+        while pending and b.try_admit(pending[0]):
+            pending.pop(0)
+        if b.live.any():
+            decoded += int(b.live.sum())
+            b.step()
+            steps += 1
+        peak_resident = max(peak_resident, b.resident_kv_bytes())
+        clock += 1.0
+    wall = time.time() - t0
+    done = sum(r.done for r in reqs)
+    out = {
+        "completed": done,
+        "steps": steps,
+        "decode_tok_s": decoded / max(wall, 1e-9),
+        "evictions": b.stats["evictions"],
+        "restores": b.stats["restores"],
+        "page_reuses": b.stats["page_reuses"],
+        "peak_resident_kv_bytes": peak_resident,
+        "decision_hits": decisions.hits,
+    }
+    print(f"[serve --continuous] {done}/{len(reqs)} requests in {steps} "
+          f"decode steps ({out['decode_tok_s']:.1f} tok/s); "
+          f"evictions {out['evictions']}, restores {out['restores']}, "
+          f"page reuses {out['page_reuses']}, "
+          f"peak resident KV {peak_resident / 1e6:.2f} MB, "
+          f"decision-cache hits {decisions.hits}")
+    assert done == len(reqs), f"continuous serving dropped {len(reqs) - done}"
+    return out
 
 
 def main(argv=None) -> dict:
@@ -29,6 +107,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous serving: paged KV pool + Poisson arrivals")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.25,
+                    help="Poisson arrival rate (requests per decode step)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--arena-pages", type=int, default=None)
+    ap.add_argument("--target-ratio", type=float, default=8.0)
+    ap.add_argument("--long-threshold", type=int, default=64)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -36,6 +124,8 @@ def main(argv=None) -> dict:
         cfg = reduced_for_smoke(cfg)
     model = build_model(cfg)
     params = rnn.init_tree(model.desc(), jax.random.key(0))
+    if args.continuous:
+        return run_continuous(args, cfg, model, params)
     mesh = make_local_mesh() if len(jax.devices()) == 1 else make_production_mesh()
 
     rng = np.random.default_rng(0)

@@ -50,6 +50,13 @@ def apply_attn(
     cache: {'k': (B, M, Hkv, Dh), 'v': ..., 'len': ()} — updated in place
     (functionally) at position `len`; attention masked to len+L.
     memory: encoder output for cross-attention (keys/values from memory).
+
+    Paged cache (serving tier, DESIGN.md §9): {'k': (P, T, Hkv, Dh) page
+    arena, 'v': ..., 'len': (B,) per-slot clocks, 'ptab': (B, max_pages)
+    arena page ids}. Decode-only (L == 1): the new token scatters into
+    page ``ptab[b, len[b] // T]`` row ``len[b] % T`` and attention reads
+    the slot's whole context gathered through its page table — per-slot
+    clocks, so requests at different depths decode in one batch.
     """
     b, l, d = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
@@ -65,7 +72,29 @@ def apply_attn(
     k = shard(k, "batch", None, "heads", None)
     v = shard(v, "batch", None, "heads", None)
     new_cache = None
-    if cache is not None and memory is None:
+    if cache is not None and memory is None and "ptab" in cache:
+        # --- paged KV pool (serving tier, DESIGN.md §9) ---
+        if l != 1:
+            raise ValueError(
+                "paged KV cache is decode-only (L == 1); prefill runs "
+                "against a contiguous sub-cache and is spliced into the "
+                "arena by the batcher (runtime/batcher.py)"
+            )
+        lens = cache["len"]          # (B,) per-slot clocks
+        ptab = cache["ptab"]         # (B, max_pages) arena page ids
+        pt = cache["k"].shape[1]
+        pid = jnp.take_along_axis(ptab, (lens // pt)[:, None], axis=1)[:, 0]
+        off = jnp.mod(lens, pt)
+        ck = cache["k"].at[pid, off].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[pid, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        k_all = ck[ptab].reshape(b, -1, hkv, dh).astype(q.dtype)
+        v_all = cv[ptab].reshape(b, -1, hkv, dh).astype(q.dtype)
+        out = attention(
+            q, k_all, v_all,
+            causal=causal, q_offset=lens, window=window, kv_len=lens + l,
+        )
+    elif cache is not None and memory is None:
         pos = cache["len"]
         m_cap = cache["k"].shape[1]
         upd = jnp.mod(pos, m_cap)  # ring buffer: windowed long-context decode
@@ -113,6 +142,25 @@ def attn_cache_desc(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat
         "k": jax.ShapeDtypeStruct((batch, max_len, hkv, dh), dtype),
         "v": jax.ShapeDtypeStruct((batch, max_len, hkv, dh), dtype),
         "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def paged_attn_cache_desc(
+    cfg: ModelConfig, pages: int, page_tokens: int, dtype=jnp.bfloat16
+) -> dict:
+    """Per-layer page-arena descriptors (serving tier, DESIGN.md §9):
+    `pages` usable pages of `page_tokens` tokens, plus the reserved
+    scratch page 0 that dead slots write into (the allocator hands out
+    ids 1..pages). The per-slot clock/table state lives at the cache's
+    top level (`model.paged_cache_desc`), not per layer."""
+    if cfg.kv_quant:
+        raise NotImplementedError(
+            "paged KV pool does not support the int8 quantized cache yet"
+        )
+    hkv, dh = cfg.n_kv_heads, cfg.dh
+    return {
+        "k": jax.ShapeDtypeStruct((pages + 1, page_tokens, hkv, dh), dtype),
+        "v": jax.ShapeDtypeStruct((pages + 1, page_tokens, hkv, dh), dtype),
     }
 
 

@@ -161,18 +161,38 @@ class TransformerLM(BaseLM):
         x = self._embed(params, batch)
         b, l, _ = x.shape
         pos0 = cache["pos"] if cache is not None else 0
-        positions = pos0 + jnp.arange(l)[None, :]
+        # paged serving cache (DESIGN.md §9): per-slot clocks (B,) + page
+        # table, threaded into every layer's cache view
+        paged = cache is not None and "page_table" in cache
+        if paged:
+            positions = pos0[:, None] + jnp.arange(l)[None, :]
+        else:
+            positions = pos0 + jnp.arange(l)[None, :]
         nd = self._n_dense()
         new_cache = {"pos": pos0 + l} if cache is not None else None
+        if paged:
+            new_cache["page_table"] = cache["page_table"]
+
+        def layer_cache(cl):
+            cl = dict(cl, len=pos0)
+            if paged:
+                cl["ptab"] = cache["page_table"]
+            return cl
+
+        def strip(nc):
+            nc.pop("len", None)
+            nc.pop("ptab", None)
+            return nc
+
         if nd:
             for i in range(nd):
                 pl_ = jax.tree_util.tree_map(lambda a: a[i], params["dense_blocks"])
                 cl = jax.tree_util.tree_map(lambda a: a[i], cache["dense_blocks"]) if cache else None
                 if cl is not None:
-                    cl = dict(cl, len=pos0)
+                    cl = layer_cache(cl)
                 x, nc = self._block(pl_, x, positions, cl)
                 if cache is not None:
-                    nc.pop("len")
+                    strip(nc)
                     if i == 0:
                         new_cache["dense_blocks"] = jax.tree_util.tree_map(
                             lambda a: jnp.broadcast_to(a[None], (nd,) + a.shape).copy(), nc
@@ -186,12 +206,12 @@ class TransformerLM(BaseLM):
             xcur = carry
             if cache is not None:
                 pl_, cl = xs
-                cl = dict(cl, len=pos0)
+                cl = layer_cache(cl)
             else:
                 pl_, cl = xs, None
             xcur, nc = self._block(pl_, xcur, positions, cl, window=cfg.attn_window)
             if nc is not None:
-                nc.pop("len")
+                strip(nc)
             return xcur, nc
 
         xs = (params["blocks"], cache["blocks"]) if cache is not None else params["blocks"]
@@ -219,6 +239,33 @@ class TransformerLM(BaseLM):
         if nd:
             out["dense_blocks"] = jax.tree_util.tree_map(partial(stack, n=nd), one)
         return out
+
+    # --- paged serving cache (DESIGN.md §9) --------------------------------
+    def paged_cache_desc(self, slots: int, pages: int, page_tokens: int,
+                         max_pages: int):
+        """Cache descriptors for the paged serving tier: per-slot position
+        clocks + a (slots, max_pages) page table over a shared page arena of
+        `pages` allocatable pages per layer (page 0 is reserved scratch, so
+        arenas are sized pages+1)."""
+        cfg = self.cfg
+        if cfg.mla:
+            raise NotImplementedError("paged KV cache does not support MLA")
+        nd = self._n_dense()
+        one = blocks.paged_attn_cache_desc(cfg, pages, page_tokens)
+        def stack(s, n):
+            return jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)
+        out = {
+            "pos": jax.ShapeDtypeStruct((slots,), jnp.int32),
+            "page_table": jax.ShapeDtypeStruct((slots, max_pages), jnp.int32),
+            "blocks": jax.tree_util.tree_map(partial(stack, n=cfg.n_layers - nd), one),
+        }
+        if nd:
+            out["dense_blocks"] = jax.tree_util.tree_map(partial(stack, n=nd), one)
+        return out
+
+    def init_paged_cache(self, slots: int, pages: int, page_tokens: int,
+                         max_pages: int):
+        return _zeros_cache(self.paged_cache_desc(slots, pages, page_tokens, max_pages))
 
 
 # ---------------------------------------------------------------------------

@@ -148,16 +148,31 @@ def _attn_direct(qr, k, v, causal, q_offset, window, kv_len, dh):
     lk = k.shape[1]
     logits = jnp.einsum("blhrd,bmhd->bhrlm", qr, k).astype(jnp.float32)
     logits = logits / math.sqrt(dh)
-    qpos = jnp.arange(lq)[:, None] + q_offset
-    kpos = jnp.arange(lk)[None, :]
-    mask = jnp.ones((lq, lk), dtype=bool)
-    if causal:
-        mask &= kpos <= qpos
-    if window is not None:
-        mask &= kpos > qpos - window
-    if kv_len is not None:
-        mask &= kpos < kv_len
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    per_slot = jnp.ndim(q_offset) > 0 or (kv_len is not None and jnp.ndim(kv_len) > 0)
+    if per_slot:
+        # per-slot clocks (paged serving, DESIGN.md §9): q_offset / kv_len
+        # are (B,) vectors, so the mask gains a batch axis
+        qpos = jnp.arange(lq)[None, :, None] + jnp.reshape(q_offset, (-1, 1, 1))
+        kpos = jnp.arange(lk)[None, None, :]
+        mask = jnp.ones((1, lq, lk), dtype=bool)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        if kv_len is not None:
+            mask = mask & (kpos < jnp.reshape(kv_len, (-1, 1, 1)))
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    else:
+        qpos = jnp.arange(lq)[:, None] + q_offset
+        kpos = jnp.arange(lk)[None, :]
+        mask = jnp.ones((lq, lk), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        if kv_len is not None:
+            mask &= kpos < kv_len
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1).astype(qr.dtype)
     return jnp.einsum("bhrlm,bmhd->blhrd", w, v)
 
@@ -176,6 +191,8 @@ def attention(
 
     `q_offset`: absolute position of q[0] (decode). `window`: sliding-window
     size. `kv_len`: valid KV prefix length (decode with preallocated cache).
+    `q_offset` and `kv_len` may also be per-slot (B,) vectors — the paged
+    serving tier's per-slot clocks (DESIGN.md §9) — which batches the mask.
 
     Long queries run the memory-bounded path: an UNROLLED loop over query
     chunks (buffers are reused across chunks by XLA liveness; unrolled so

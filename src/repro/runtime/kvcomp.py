@@ -1,6 +1,7 @@
-"""KV-cache / activation compression helpers (DESIGN.md §2 third row, §7).
+"""KV-cache / activation compression helpers (DESIGN.md §2 third row, §7,
+§9).
 
-Two in-graph compressors for activation-resident tensors, both direct
+In-graph compressors for activation-resident tensors, all direct
 applications of the paper's Stage II:
 
 * `quantize_kv` / `dequantize_kv` — per-(token, head) linear quantization to
@@ -19,17 +20,30 @@ applications of the paper's Stage II:
   never leaves the accelerator, with no trial compressions: one fused
   kernel pass at the chosen bound. The legacy `eb_rel=`/`target_ratio=`
   kwargs shim onto the equivalent Policy with a `DeprecationWarning`.
+* `compress_page` / `decompress_page` — the page-granular evict/restore
+  entry points of the serving tier (DESIGN.md §9): a `CompressedPage`
+  carries exact bytes under `Policy.raw()` (evict/restore round-trips are
+  bit-identical) or the BOT reconstruction plus exact bit accounting under
+  a lossy policy. Fixed-ratio bound solving is bookkept through a
+  `DecisionCache` (DESIGN.md §8.2): pages freeze once decode moves past
+  them, so a re-evicted page's content digest matches and the solved
+  bound is replayed without re-scoring the candidate grid.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import functools
+import hashlib
 import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import estimator as est
 from repro.core.policy import Policy
+from repro.core.selector import Selection
 
 #: in-graph candidate bounds for the ratio-budget path: VR * 2^-j. The
 #: octave spacing matches the ZFP bit-plane staircase (rate moves ~1
@@ -58,24 +72,38 @@ def _budget_eb(page: jax.Array, vr: jax.Array, target_ratio: float) -> jax.Array
     systematically miss it. One vmapped pass over the grid costs
     ~r_sp * n_candidates of a full pass. Falls back to the loosest
     candidate when even that misses the budget (the caller's bits output
-    still reports the truth)."""
-    br_budget = 32.0 / float(target_ratio)
-    starts = est.block_starts(page.shape, est.DEFAULT_SAMPLING_RATE)
-    blocks = est.gather_blocks(page, starts, halo=False)
-    seg = jnp.zeros(len(starts), jnp.int32)
-    bounds = jnp.asarray([0, len(starts)], jnp.int32)
-    ebs = vr * jnp.asarray([2.0**-j for j in _RATIO_GRID_OCTAVES], jnp.float32)
+    still reports the truth). The grid solve is jitted per (shape,
+    target) so the serving tier's per-evict calls don't re-trace the
+    vmapped estimator (eager tracing dominates small-page evict cost)."""
+    return _budget_eb_jit(float(target_ratio))(page, vr)
 
-    def rate(eb):
-        e = est.estimate_zfp_many(
-            blocks, seg, bounds, eb[None], vr[None], mode="model"
+
+@functools.lru_cache(maxsize=None)
+def _budget_eb_jit(target_ratio: float):
+    br_budget = 32.0 / target_ratio
+
+    @jax.jit
+    def solve(page, vr):
+        starts = est.block_starts(page.shape, est.DEFAULT_SAMPLING_RATE)
+        blocks = est.gather_blocks(page, starts, halo=False)
+        seg = jnp.zeros(len(starts), jnp.int32)
+        bounds = jnp.asarray([0, len(starts)], jnp.int32)
+        ebs = vr * jnp.asarray(
+            [2.0**-j for j in _RATIO_GRID_OCTAVES], jnp.float32
         )
-        return e.bitrate[0]
 
-    rates = jax.vmap(rate)(ebs)  # nonincreasing along the grid
-    ok = rates <= br_budget
-    idx = jnp.argmax(ok)  # first (tightest) candidate meeting the budget
-    return jnp.where(jnp.any(ok), ebs[idx], ebs[-1])
+        def rate(eb):
+            e = est.estimate_zfp_many(
+                blocks, seg, bounds, eb[None], vr[None], mode="model"
+            )
+            return e.bitrate[0]
+
+        rates = jax.vmap(rate)(ebs)  # nonincreasing along the grid
+        ok = rates <= br_budget
+        idx = jnp.argmax(ok)  # first (tightest) candidate meeting the budget
+        return jnp.where(jnp.any(ok), ebs[idx], ebs[-1])
+
+    return solve
 
 
 #: the historical page default: a 1e-2 value-range-relative bound
@@ -129,14 +157,140 @@ def bot_compress_kv(
         raise ValueError("pass either policy= or the legacy kwargs, not both")
     page32 = page.astype(jnp.float32)
     vr = jnp.maximum(jnp.max(page32) - jnp.min(page32), 1e-12)
-    if policy.mode == "fixed_ratio":
-        eb = _budget_eb(page32, vr, policy.target_ratio)
-    elif policy.mode == "fixed_accuracy":
-        eb = policy.eb_abs if policy.eb_abs is not None else policy.eb_rel * vr
-    else:
-        raise ValueError(
-            f"bot_compress_kv supports fixed_accuracy/fixed_ratio policies, "
-            f"got {policy.mode!r} (fixed_psnr needs the host-side controller)"
-        )
+    eb = _policy_eb(page32, vr, policy)
     recon, bits = ops.bot_fused(page32, eb)
     return recon.astype(page.dtype), bits
+
+
+def _policy_eb(page32: jax.Array, vr: jax.Array, policy: Policy) -> jax.Array:
+    """The page's error bound under `policy` (jit-safe; shared by
+    `bot_compress_kv` and the serving tier's `compress_page`)."""
+    if policy.mode == "fixed_ratio":
+        return _budget_eb(page32, vr, policy.target_ratio)
+    if policy.mode == "fixed_accuracy":
+        if policy.eb_abs is not None:
+            return jnp.asarray(policy.eb_abs, jnp.float32)
+        return policy.eb_rel * vr
+    raise ValueError(
+        f"KV page compression supports fixed_accuracy/fixed_ratio policies, "
+        f"got {policy.mode!r} (fixed_psnr needs the host-side controller)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Page-granular evict/restore entry points (serving tier, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+#: transform key the serving tier's DecisionCache entries are stored under
+PAGE_TRANSFORM = "kv_page"
+_PAGE_FP_TAG = b"repro.kvpage.v1:"
+
+
+@dataclasses.dataclass
+class CompressedPage:
+    """One evicted KV page (or cross-layer page stack) at rest.
+
+    ``codec == 'raw'``: `payload` holds the exact page bytes — restore is
+    bit-identical by construction (the `serving_page_parity` gate's
+    contract). ``codec == 'bot'``: `payload` holds the fused-kernel
+    reconstruction in the page dtype; `nbytes` is the exact
+    `ceil(sum(bits)/8)` accounting the kernel reports — what a bitpacked
+    store would hold once the device-resident encode tier (ROADMAP) lands,
+    and what the serving benchmark charges as resident bytes.
+    """
+
+    codec: str                     # "raw" | "bot"
+    payload: bytes | np.ndarray
+    shape: tuple[int, ...]
+    dtype: str
+    nbytes: int                    # honest resident-byte accounting
+    eb: float = 0.0                # solved bound (0.0 for raw)
+    clean: bool = False            # content still bit-equal to the arena copy
+
+
+def _page_fingerprint(page: np.ndarray, vr: float, policy: Policy) -> dict:
+    """Content digest over the full preimage of the page decision: the page
+    bytes plus (vr, shape) and the policy already in the cache key — the
+    `DecisionCache` fingerprint contract (DESIGN.md §8.2) applied to a KV
+    page. Pages freeze once decode moves past them, so the digest of a
+    re-evicted frozen page matches and the solved bound replays."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(_PAGE_FP_TAG)
+    h.update(np.asarray(page.shape, np.int64).tobytes())
+    h.update(np.asarray([vr, policy.target_ratio or 0.0], np.float64).tobytes())
+    h.update(np.ascontiguousarray(page).tobytes())
+    return {"kind": PAGE_TRANSFORM, "digest": h.hexdigest()}
+
+
+def compress_page(
+    page,
+    policy: Policy,
+    *,
+    cache=None,
+    name: str | None = None,
+) -> CompressedPage:
+    """Compress one KV page (2-D) or cross-layer page stack (3-D, riding
+    the 4x4x4 kernel tier) for eviction from the serving arena
+    (DESIGN.md §9).
+
+    `Policy.raw()` stores the exact bytes — the short-request default of
+    the serving PolicySet, and the mode the parity gate round-trips.
+    Lossy policies solve the bound with `_policy_eb` (the same in-graph
+    grid/bound path as `bot_compress_kv`) and store the reconstruction
+    plus exact bit accounting.
+
+    `cache` is an optional `DecisionCache` (with `name`): the solved bound
+    is stored under ``(name, shape, dtype, policy, 'kv_page')`` guarded by
+    a content digest, so re-evicting an unchanged page replays the bound
+    without re-scoring the fixed-ratio candidate grid — the warm-path
+    discipline of DESIGN.md §8 on the serving path.
+    """
+    arr = np.asarray(page)
+    if policy.mode == "raw":
+        return CompressedPage(
+            codec="raw", payload=arr.tobytes(), shape=arr.shape,
+            dtype=str(arr.dtype), nbytes=arr.nbytes, clean=True,
+        )
+    page32 = jnp.asarray(arr, jnp.float32)
+    vr = jnp.maximum(jnp.max(page32) - jnp.min(page32), 1e-12)
+    eb = None
+    fp = None
+    if cache is not None:
+        if name is None:
+            raise ValueError("compress_page: cache= needs name=")
+        fp = _page_fingerprint(arr, float(vr), policy)
+        hit = cache.lookup(name, arr.shape, str(arr.dtype), policy,
+                           PAGE_TRANSFORM, fp)
+        if hit is not None:
+            eb = jnp.asarray(hit.selection["eb_abs"], jnp.float32)
+    if eb is None:
+        eb = _policy_eb(page32, vr, policy)
+    from repro.kernels import ops
+
+    recon, bits = ops.bot_fused(page32, eb)
+    total_bits = float(jnp.sum(bits))
+    if cache is not None and cache.events.get(name) != "hit":
+        cache.store(
+            name, arr.shape, str(arr.dtype), policy, PAGE_TRANSFORM, fp,
+            Selection(codec="zfp", eb_abs=float(eb), eb_sz=0.0, br_sz=0.0,
+                      br_zfp=total_bits / max(arr.size, 1),
+                      psnr_target=0.0, vr=float(vr), r_sp=policy.r_sp),
+        )
+    return CompressedPage(
+        codec="bot",
+        payload=np.asarray(recon.astype(arr.dtype)),
+        shape=arr.shape, dtype=str(arr.dtype),
+        nbytes=-(-int(total_bits) // 8), eb=float(eb), clean=False,
+    )
+
+
+def decompress_page(cp: CompressedPage) -> np.ndarray:
+    """Restore an evicted page into arena form (DESIGN.md §9). Raw pages
+    reconstruct the exact bytes; BOT pages return the bounded-error
+    reconstruction the kernel produced at evict time."""
+    if cp.codec == "raw":
+        buf = bytearray(cp.payload)  # writeable, like decompress_pytree
+        return np.frombuffer(buf, dtype=np.dtype(cp.dtype)).reshape(cp.shape)
+    if cp.codec == "bot":
+        return np.asarray(cp.payload)
+    raise ValueError(f"unknown page codec {cp.codec!r}")

@@ -49,3 +49,141 @@ def test_batcher_waves_reuse_slots():
     b.run(reqs)
     assert all(r.done for r in reqs)
     assert all(len(r.out) >= 3 for r in reqs)
+
+
+def test_max_new_counts_emitted_tokens():
+    """Regression: max_new=N must yield EXACTLY N tokens (the prefill
+    token counts), on both the paged and the legacy contiguous path."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(2)
+    for paged in (True, False):
+        reqs = [
+            Request(rid=i, prompt=rng.integers(1, cfg.vocab, 8).astype(np.int32),
+                    max_new=5)
+            for i in range(3)
+        ]
+        b = ContinuousBatcher(model, params, slots=4, max_len=32, eos_id=-1,
+                              paged=paged)
+        assert b.paged == paged
+        b.run(reqs)
+        for r in reqs:
+            assert r.done and len(r.out) == 5, (paged, r.rid, r.out)
+
+
+def test_eos_at_prefill_terminates_at_admission():
+    """A request whose FIRST emitted token is EOS must finish at admission
+    without ever occupying a decode slot (or, paged, any pages)."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, cfg.vocab, 8).astype(np.int32)
+    # learn the greedy first token, then make it the EOS id
+    probe = ContinuousBatcher(model, params, slots=1, max_len=32, eos_id=-1)
+    first_tok, _ = probe._prefill(prompt)
+    for paged in (True, False):
+        b = ContinuousBatcher(model, params, slots=2, max_len=32,
+                              eos_id=first_tok, paged=paged)
+        req = Request(rid=0, prompt=prompt, max_new=8)
+        assert b.try_admit(req)
+        assert req.done and req.out == [first_tok]
+        assert not b.live.any()  # no slot occupied
+        if paged:
+            assert len(b.free_pages) == b.arena_pages  # no pages either
+        assert b.step() == []  # nothing to decode
+
+
+def test_paged_mid_wave_admission():
+    """Per-slot clocks admit a new request while another is mid-decode —
+    the legacy shared-clock path refuses exactly this."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(4)
+    p0 = rng.integers(1, cfg.vocab, 8).astype(np.int32)
+    p1 = rng.integers(1, cfg.vocab, 8).astype(np.int32)
+    b = ContinuousBatcher(model, params, slots=2, max_len=32, eos_id=-1)
+    assert b.paged
+    assert b.try_admit(Request(rid=0, prompt=p0, max_new=10))
+    for _ in range(3):
+        b.step()  # slot 0 is now mid-wave
+    r1 = Request(rid=1, prompt=p1, max_new=5)
+    assert b.try_admit(r1)  # joins at clock 8 while slot 0 sits at 11
+    b.run([])
+    assert r1.done and len(r1.out) == 5
+    # legacy path: same schedule is refused mid-wave
+    bl = ContinuousBatcher(model, params, slots=2, max_len=32, eos_id=-1,
+                           paged=False)
+    assert bl.try_admit(Request(rid=0, prompt=p0, max_new=10))
+    bl.step()
+    assert not bl.try_admit(Request(rid=1, prompt=p1, max_new=5))
+
+
+def test_paged_decode_matches_reference_streams():
+    """Paged decode (page-table gather + per-slot clocks) reproduces the
+    single-request contiguous reference token-for-token."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab, 8).astype(np.int32) for _ in range(3)]
+    b = ContinuousBatcher(model, params, slots=4, max_len=32, eos_id=-1,
+                          page_tokens=8)
+    assert b.paged
+    reqs = [Request(rid=i, prompt=p, max_new=6) for i, p in enumerate(prompts)]
+    b.run(reqs)
+    for r in reqs:
+        cache = model.init_cache(1, 32)
+        logits, cache = model.forward(
+            params, {"tokens": jnp.asarray(r.prompt)[None]}, cache=cache
+        )
+        toks = [int(jnp.argmax(logits[0, -1]))]
+        for _ in range(5):
+            lg, cache = model.forward(
+                params, {"tokens": jnp.asarray([[toks[-1]]], jnp.int32)}, cache=cache
+            )
+            toks.append(int(jnp.argmax(lg[0, -1])))
+        assert r.out == toks, (r.rid, r.out, toks)
+
+
+def test_paged_evict_restore_parity_under_pressure():
+    """Compress-on-evict / decompress-on-hit at Policy.raw is invisible:
+    a page-starved arena (forced LIFO preemption) decodes the same token
+    streams as a pressure-free one."""
+    from repro.core.policy import Policy
+
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(1, cfg.vocab, 12).astype(np.int32) for _ in range(4)]
+
+    def run(arena_pages):
+        b = ContinuousBatcher(model, params, slots=2, max_len=32, eos_id=-1,
+                              page_tokens=8, arena_pages=arena_pages,
+                              policies=Policy.raw())
+        reqs = [Request(rid=i, prompt=p, max_new=20) for i, p in enumerate(prompts)]
+        b.run(reqs)
+        return reqs, b
+
+    ref, calm = run(arena_pages=None)
+    cur, tight = run(arena_pages=5)
+    assert calm.stats["evictions"] == 0
+    assert tight.stats["evictions"] > 0 and tight.stats["restores"] > 0
+    for a, c in zip(ref, cur):
+        assert a.done and c.done and len(c.out) == 20
+        assert a.out == c.out, (a.rid, a.out, c.out)
+
+
+def test_paged_policyset_resolved_per_request():
+    """Admission resolves the request's quality contract once from the
+    PolicySet: long-context requests get the fixed_ratio budget, short
+    ones stay raw — and a lossy serving run still completes."""
+    from repro.core.policy import serving_policies
+
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(7)
+    b = ContinuousBatcher(model, params, slots=2, max_len=32, eos_id=-1,
+                          page_tokens=8, arena_pages=5,
+                          policies=serving_policies(8.0), long_threshold=24)
+    short = Request(rid=0, prompt=rng.integers(1, cfg.vocab, 4).astype(np.int32),
+                    max_new=8)   # 4 + 8 < 24 -> raw
+    long = Request(rid=1, prompt=rng.integers(1, cfg.vocab, 12).astype(np.int32),
+                   max_new=20)  # 12 + 20 >= 24 -> fixed_ratio
+    b.run([short, long])
+    assert short.policy.mode == "raw" and short.pname == "kv/short/0"
+    assert long.policy.mode == "fixed_ratio" and long.pname == "kv/long/1"
+    assert short.done and long.done
+    assert len(short.out) == 8 and len(long.out) == 20

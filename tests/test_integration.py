@@ -120,6 +120,28 @@ def test_checkpoint_keep_n_and_atomicity(tmp_path):
     assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
 
 
+def test_checkpoint_prunes_torn_tmp_dirs(tmp_path):
+    """Regression: a crash between staging and promotion leaves a
+    `.tmp_step_*` dir behind; the keep-N pruner must GC tmps older than
+    the newest committed step while leaving newer (possibly in-flight)
+    tmps alone."""
+    _, params, _, _, _ = _setup(layers=1)
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), keep_n=2, compress=False))
+    mgr.save(1, {"params": params})
+    # plant a torn write: a save at step 2 that crashed before promotion
+    torn = tmp_path / ".tmp_step_000000002_12345"
+    torn.mkdir()
+    (torn / "manifest.json").write_text("{}")
+    # and an in-flight staging dir AHEAD of the next commit
+    live = tmp_path / ".tmp_step_000000009_67890"
+    live.mkdir()
+    mgr.save(3, {"params": params})
+    names = set(os.listdir(tmp_path))
+    assert torn.name not in names, "torn tmp older than newest commit must be GCed"
+    assert live.name in names, "tmp at/above newest commit may be in flight"
+    assert mgr.latest_step() == 3
+
+
 def test_async_checkpoint(tmp_path):
     _, params, _, _, _ = _setup(layers=1)
     mgr = CheckpointManager(CheckpointConfig(str(tmp_path), compress=False))

@@ -22,7 +22,13 @@ when:
   `benchmarks/bench_multihost.py` saves the same state under 1- and
   2-process distributed jobs and the `multihost_save_parity` check —
   absolute, like the warm parity — fails on ANY decision flip, manifest
-  difference, or decompressed-byte mismatch.
+  difference, or decompressed-byte mismatch, or
+* the **paged serving tier** (DESIGN.md §9) corrupts a page across a
+  compress-on-evict / decompress-on-hit cycle:
+  `benchmarks/bench_serving.py` decodes the same workload with and
+  without page pressure at `Policy.raw` and the `serving_page_parity`
+  check — absolute — fails on any token mismatch, any raw round-trip
+  byte difference, or a vacuous run that never evicted.
 
 Throughput is tracked as *ratios* (batched-vs-per-field selection speedup,
 3-D-kernel-vs-fallback speedup, shard-local-vs-gather save speedup) and
@@ -199,6 +205,17 @@ def bench_multihost() -> dict:
     return mh.run()
 
 
+def bench_serving() -> dict:
+    """Paged-serving evict/restore parity + compression report (DESIGN.md
+    §9): tiny-arena forced-eviction run vs pressure-free run at Policy.raw.
+    Gated absolutely by `serving_page_parity` — zero token mismatches,
+    bit-identical raw page round-trips, and the eviction path actually
+    exercised; the store-byte ratio and tok/s ratio ride along ungated."""
+    from benchmarks import bench_serving as sv
+
+    return sv.run()
+
+
 def gate(metrics: dict, baseline: dict) -> list[dict]:
     """Compare current metrics against the baseline -> list of checks."""
     checks: list[dict] = []
@@ -295,6 +312,28 @@ def gate(metrics: dict, baseline: dict) -> list[dict]:
                 ),
             )
         )
+    sv = metrics.get("serving")
+    if sv is not None:
+        # absolute, like the warm/multihost parities: raw evict/restore
+        # must be invisible to the token stream, and vacuous passes (no
+        # eviction exercised) count as failures
+        bad_sv = bool(
+            sv["token_mismatches"] or sv["byte_mismatches"] or not sv["evictions"]
+        )
+        checks.append(
+            dict(
+                name="serving_page_parity",
+                passed=not bad_sv,
+                detail=(
+                    f"token_mismatches={sv['token_mismatches']} "
+                    f"byte_mismatches={sv['byte_mismatches']} "
+                    f"evictions={sv['evictions']}"
+                    if bad_sv else
+                    f"decode bit-identical across {sv['evictions']} "
+                    f"evictions; raw page round-trips exact"
+                ),
+            )
+        )
     base_err = baseline.get("estimation_error_b")
     cur_err = metrics["estimation_error_b"]
     if base_err is None:
@@ -356,6 +395,14 @@ def main() -> int:
             f"  multihost: hosts {metrics['multihost']['hosts']}, "
             f"flips {metrics['multihost']['flips']}, "
             f"mismatches {metrics['multihost']['value_mismatches']}",
+            flush=True,
+        )
+        metrics["serving"] = bench_serving()
+        print(
+            f"  serving: evictions {metrics['serving']['evictions']}, "
+            f"token mismatches {metrics['serving']['token_mismatches']}, "
+            f"store ratio {metrics['serving']['compression_store_ratio']:.2f}x, "
+            f"tok/s ratio {metrics['serving']['compression_tok_s_ratio']:.2f}x",
             flush=True,
         )
 
