@@ -153,6 +153,12 @@ class CheckpointConfig:
     # to opt into tolerance>0 / warm_start. The cache rides the manifest
     # (`decision_cache` key) so `restore` leaves the next save warm.
     cache: Any = False
+    # device-resident Stage III (DESIGN.md §3.7): when True, codecs that
+    # advertise the `device_encode` capability pack their bitstreams
+    # in-graph and only the packed words cross the interconnect; fields
+    # the device tier declines (fallback rules of §3.7) take the host
+    # coder, so streams stay byte-identical either way
+    device_encode: bool = False
     # multi-host save fencing (DESIGN.md §6.2): how long any host waits at
     # the write/publish barriers before FAILING the save (a straggler or
     # dead host must surface as an exception, never as a hang)
@@ -421,7 +427,9 @@ class CheckpointManager:
             s = sel_of.get(i)
             if s is None:
                 return arr.tobytes(), "none", 0.0
-            cf = sel.encode_with_selection(arr, s)  # casts to f32 internally
+            cf = sel.encode_with_selection(  # casts to f32 internally
+                arr, s, device_encode=self.cfg.device_encode
+            )
             return cf.data, cf.codec, s.eb_abs
 
         with open(os.path.join(tmp, "data.bin"), "wb") as f:
@@ -599,7 +607,10 @@ class CheckpointManager:
             name, leaf = items[i]
             plan = plan_of.get(i)
             if plan is not None:
-                encoded = shd.encode_plan(leaf, plan, host=only)
+                encoded = shd.encode_plan(
+                    leaf, plan, host=only,
+                    device_encode=self.cfg.device_encode,
+                )
                 segs = [(s.start, s.stop, s.codec, s.data) for s in encoded]
                 sel = plan.selection
                 return plan.view_shape, sel.codec, sel.eb_abs, sel.eb_sz, segs

@@ -200,6 +200,7 @@ def compress(
     x: np.ndarray,
     policy: Policy | str | None = None,
     *,
+    device_encode: bool = False,
     mode: str | None = None,
     eb_rel: float | None = None,
     eb_abs: float | None = None,
@@ -224,6 +225,12 @@ def compress(
         `.selection.eb_abs`. The policy's `codecs` allowlist restricts
         which registered codecs compete; `r_sp` is the estimator block
         sampling rate (paper default 5%).
+      device_encode: finish Stage III in-graph where the selected codec
+        supports it (capability `device_encode`, DESIGN.md §3.7): packed
+        stream bytes come off the device in one `device_get` instead of
+        raw codes riding a host entropy coder. Decisions are unchanged;
+        fields the device encoders decline (the §3.7 fallback rules)
+        silently take the host coder. Default off.
       mode / eb_rel / eb_abs / target_psnr / target_ratio / r_sp:
         deprecated keyword spelling of the same contract — shimmed onto a
         `Policy` with a `DeprecationWarning`, decisions unchanged.
@@ -245,9 +252,9 @@ def compress(
             x.astype(np.float32), eb_abs=pol.eb_abs, eb_rel=pol.eb_rel,
             r_sp=pol.r_sp, codecs=pol.codecs,
         )
-        return encode_with_selection(x, sel)
+        return encode_with_selection(x, sel, device_encode=device_encode)
     sol = _controller.solve(x.astype(np.float32), pol)
-    return encode_with_selection(x, sol.selection)
+    return encode_with_selection(x, sol.selection, device_encode=device_encode)
 
 
 def _is_multidevice(leaf: Any) -> bool:
@@ -295,6 +302,7 @@ def compress_pytree(
     workers: int | None = None,
     sharded: bool | None = None,
     cache=None,
+    device_encode: bool = False,
     eb_rel: float | None = None,
     eb_abs: float | None = None,
     r_sp: float | None = None,
@@ -345,6 +353,12 @@ def compress_pytree(
         drifted or new leaves re-decide and refresh their entry. The
         caller owns the cache object and reuses it across calls
         (`CheckpointManager` persists it in the manifest).
+      device_encode: finish Stage III in-graph for codecs with the
+        `device_encode` capability (DESIGN.md §3.7) — the thread-pool
+        encoders fetch packed stream bytes instead of running the host
+        entropy coder. Applies on both the gathered and the shard-local
+        (`sharded=True`) paths; decisions and manifests are unchanged,
+        and declined fields fall back to the host coder per field.
       eb_rel / eb_abs / r_sp / mode / target_psnr / target_ratio /
         predicate: the deprecated kwarg spelling — shimmed onto a `Policy`
         (predicate rejections onto per-leaf raw) with a
@@ -370,7 +384,8 @@ def compress_pytree(
         sharded = any(_is_multidevice(leaf) for _, leaf in leaves)
     if sharded:
         return _compress_pytree_sharded(
-            leaves, treedef, pset, predicate, workers, cache=cache
+            leaves, treedef, pset, predicate, workers, cache=cache,
+            device_encode=device_encode,
         )
     named, pol_of = _named_leaves_with_policies(
         leaves, pset, predicate, materialize=True
@@ -390,7 +405,7 @@ def compress_pytree(
             return CompressedField("raw", arr.tobytes(), arr.shape, str(arr.dtype))
         # original array in: encode_with_selection casts to f32 internally
         # but records the true dtype, so decompress restores it
-        return encode_with_selection(arr, sel_of[i])
+        return encode_with_selection(arr, sel_of[i], device_encode=device_encode)
 
     n_workers = _default_workers() if workers is None else workers
     if n_workers > 1 and len(named) > 1:
@@ -409,6 +424,7 @@ def _compress_pytree_sharded(
     predicate: Callable[[str, Any], bool] | None,
     workers: int | None,
     cache=None,
+    device_encode: bool = False,
 ) -> CompressedTree:
     """The shard-local engine behind `compress_pytree(sharded=True)`: one
     `plan_tree` pass per policy group decides every float leaf without
@@ -433,7 +449,7 @@ def _compress_pytree_sharded(
         if plan is None:
             arr = np.asarray(leaf)
             return CompressedField("raw", arr.tobytes(), arr.shape, str(arr.dtype))
-        segments = _sh.encode_plan(leaf, plan)
+        segments = _sh.encode_plan(leaf, plan, device_encode=device_encode)
         return ShardedCompressedField(
             _sh.field_codec(plan.selection.codec, segments),
             tuple(int(s) for s in np.shape(leaf)),

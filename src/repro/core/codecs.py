@@ -22,7 +22,14 @@ A codec is anything satisfying the `Codec` protocol:
     encoding is bit-identical only on 4-aligned boundaries (ZFP);
   - ``pointwise_bound``: the reconstruction honors a pointwise
     |err| <= eb contract (everything registered today);
-  - ``lossless``: reconstructs bit-exactly (raw).
+  - ``lossless``: reconstructs bit-exactly (raw);
+  - ``device_encode``: the codec can finish Stage III in-graph
+    (DESIGN.md §3.7) through ``encode_device(view32, selection)``,
+    which returns container bytes decodable by the same ``decode`` —
+    or None when the field must take the host coder (the fallback
+    rules of §3.7). Consult with `supports_device_encode(name)` /
+    `getattr(codec, "device_encode", False)` so third-party codecs
+    that predate the flag keep satisfying the protocol.
 
 The built-in three register at import. Registering a fourth codec makes it
 addressable by `Policy(codecs=...)` allowlists and decodable from
@@ -67,9 +74,21 @@ class _FnCodec:
     lossless: bool
     _encode: Callable[[np.ndarray, object], bytes]
     _decode: Callable[[bytes], np.ndarray]
+    #: device-resident Stage III (DESIGN.md §3.7): returns container bytes
+    #: or None (host fallback); absent for host-only codecs
+    _encode_device: Callable[[np.ndarray, object], bytes | None] | None = None
+
+    @property
+    def device_encode(self) -> bool:
+        return self._encode_device is not None
 
     def encode(self, view32: np.ndarray, selection) -> bytes:
         return self._encode(view32, selection)
+
+    def encode_device(self, view32: np.ndarray, selection) -> bytes | None:
+        if self._encode_device is None:
+            return None
+        return self._encode_device(view32, selection)
 
     def decode(self, data: bytes) -> np.ndarray:
         return self._decode(data)
@@ -108,6 +127,12 @@ def lossy_names() -> tuple[str, ...]:
     return tuple(n for n, c in _REGISTRY.items() if not c.lossless)
 
 
+def supports_device_encode(name: str) -> bool:
+    """Whether `name` can finish Stage III in-graph (DESIGN.md §3.7).
+    `getattr` default keeps pre-flag third-party codecs valid."""
+    return bool(getattr(get(name), "device_encode", False))
+
+
 def writeable_frombuffer(data: bytes, dtype) -> np.ndarray:
     """`np.frombuffer` that returns a WRITEABLE array: the bytearray
     round-trip costs one copy, where frombuffer over immutable bytes would
@@ -122,11 +147,26 @@ def _raw_decode(data: bytes) -> np.ndarray:
     return writeable_frombuffer(data, np.float32)
 
 
+def _sz_encode_device(view, sel):
+    # lazy import: device_encode pulls in the kernel tier, which most
+    # registry consumers (pure host decode paths) never need
+    from . import device_encode as _de
+
+    return _de.sz_encode_device(view, sel.eb_sz)
+
+
+def _zfp_encode_device(view, sel):
+    from . import device_encode as _de
+
+    return _de.zfp_encode_device(view, sel.eb_abs)
+
+
 register(
     _FnCodec(
         "sz", blockwise=False, pointwise_bound=True, lossless=False,
         _encode=lambda view, sel: _sz.sz_compress(view, sel.eb_sz),
         _decode=_sz.sz_decompress,
+        _encode_device=_sz_encode_device,
     )
 )
 register(
@@ -134,6 +174,7 @@ register(
         "zfp", blockwise=True, pointwise_bound=True, lossless=False,
         _encode=lambda view, sel: _zfp.zfp_compress(view, sel.eb_abs),
         _decode=_zfp.zfp_decompress,
+        _encode_device=_zfp_encode_device,
     )
 )
 register(
@@ -157,5 +198,6 @@ __all__ = [
     "lossy_names",
     "names",
     "register",
+    "supports_device_encode",
     "writeable_frombuffer",
 ]

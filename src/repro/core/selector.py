@@ -462,7 +462,9 @@ class CompressedField:
         return len(self.data)
 
 
-def encode_with_selection(x: np.ndarray, sel: Selection) -> CompressedField:
+def encode_with_selection(
+    x: np.ndarray, sel: Selection, *, device_encode: bool = False
+) -> CompressedField:
     """Step 4: run the already-selected compressor on `x`.
 
     Split from `select_and_compress` so batched callers (compress_pytree,
@@ -471,13 +473,25 @@ def encode_with_selection(x: np.ndarray, sel: Selection) -> CompressedField:
     is free for the next batch. The byte codec is resolved through the
     registry (DESIGN.md §2.1), so registered codecs beyond sz/zfp encode
     through the same path.
+
+    `device_encode=True` tries the codec's in-graph Stage III first
+    (capability `device_encode`, DESIGN.md §3.7): the packed stream comes
+    back in one `device_get` and decodes through the same registry
+    decoder. Encoders return None under the §3.7 fallback rules, and the
+    host coder then runs — same container either way, never a truncated
+    stream.
     """
     x = np.asarray(x)
     orig_shape, orig_dtype = x.shape, x.dtype
     view = _fold_ndim(x.astype(np.float32))
     if view.ndim == 0:
         view = view.reshape(1)
-    data = _codecs.get(sel.codec).encode(view, sel)
+    codec = _codecs.get(sel.codec)
+    data = None
+    if device_encode and getattr(codec, "device_encode", False):
+        data = codec.encode_device(view, sel)
+    if data is None:
+        data = codec.encode(view, sel)
     # safety net: never ship a stream larger than raw
     if len(data) >= view.nbytes and sel.codec != "raw":
         sel = Selection("raw", sel.eb_abs, sel.eb_sz, 32.0, 32.0, sel.psnr_target, sel.vr, sel.r_sp)

@@ -886,21 +886,36 @@ def _local_device(devices: tuple) -> Any:
     )
 
 
-def encode_view_segment(view32: np.ndarray, sel: Selection) -> tuple[str, bytes]:
+def encode_view_segment(
+    view32: np.ndarray, sel: Selection, *, device_encode: bool = False
+) -> tuple[str, bytes]:
     """Step 4 on one (shard of a) folded f32 view, mirroring
     `selector.encode_with_selection` including the never-bigger-than-raw
     safety net — applied per shard, so an incompressible shard of a
     compressible field degrades alone (DESIGN.md §6). Dispatches through
-    the codec registry (DESIGN.md §2.1)."""
+    the codec registry (DESIGN.md §2.1); with `device_encode`, codecs
+    advertising the capability finish Stage III in-graph first and the
+    host coder only runs when the device tier declines (DESIGN.md §3.7)."""
     if sel.codec == "raw":
         return "raw", view32.tobytes()
-    data = _codecs.get(sel.codec).encode(view32, sel)
+    codec = _codecs.get(sel.codec)
+    data = None
+    if device_encode and getattr(codec, "device_encode", False):
+        data = codec.encode_device(view32, sel)
+    if data is None:
+        data = codec.encode(view32, sel)
     if len(data) >= view32.nbytes:
         return "raw", view32.tobytes()
     return sel.codec, data
 
 
-def encode_plan(x: Any, plan: FieldPlan, host: int | None = None) -> list[Segment]:
+def encode_plan(
+    x: Any,
+    plan: FieldPlan,
+    host: int | None = None,
+    *,
+    device_encode: bool = False,
+) -> list[Segment]:
     """Encode one field's bytes under its plan: per unique shard when the
     layout allows (each host touches only bytes it already holds), one
     gathered segment otherwise. Shard encoding reconstructs bit-identically
@@ -919,7 +934,7 @@ def encode_plan(x: Any, plan: FieldPlan, host: int | None = None) -> list[Segmen
         if host is not None and host != 0:
             return []
         view = _view_of(dist.to_numpy(x))
-        codec, data = encode_view_segment(view, sel)
+        codec, data = encode_view_segment(view, sel, device_encode=device_encode)
         return [Segment((0,) * view.ndim, view.shape, codec, data)]
     segs = []
     for s in plan.layout.segs:
@@ -929,7 +944,7 @@ def encode_plan(x: Any, plan: FieldPlan, host: int | None = None) -> list[Segmen
         view = np.asarray(local, dtype=np.float32).reshape(
             tuple(b - a for a, b in zip(s.start, s.stop))
         )
-        codec, data = encode_view_segment(view, sel)
+        codec, data = encode_view_segment(view, sel, device_encode=device_encode)
         segs.append(Segment(s.start, s.stop, codec, data))
     return segs
 

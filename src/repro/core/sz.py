@@ -31,6 +31,11 @@ RESIDUAL_RADIUS = 32767  # 2n-1 = 65535 bins, paper §6.3.2
 #: its zstd/raw flag byte, so streams from the old layout fail the magic
 #: check cleanly instead of erroring mid-decode
 _MAGIC = b"SZJ1"
+#: the device-encoded container version (DESIGN.md §3.7): byte layout is
+#: identical to SZJ1 — same table, same payload bit stream, same outlier
+#: section — but the quantization/Lorenzo stage ran in-graph (float32),
+#: so the flag records provenance. `sz_decompress` accepts both.
+DEVICE_MAGIC = b"SZJ2"
 
 
 # ---------------------------------------------------------------------------
@@ -90,36 +95,67 @@ def _lorenzo_inv_np(d: np.ndarray) -> np.ndarray:
     return out
 
 
+def sz_container(
+    shape: tuple[int, ...],
+    delta: float,
+    table: "_entropy.HuffmanTable",
+    payload: bytes,
+    outliers: np.ndarray,
+    *,
+    magic: bytes = _MAGIC,
+) -> bytes:
+    """Assemble the self-describing SZ container around an already-encoded
+    Huffman payload. Shared by the host Stage III (`sz_encode_residuals`)
+    and the device encode tier (`core/device_encode.py`), which packs the
+    same payload bits in-graph (DESIGN.md §3.7) and only assembles here."""
+    outliers = np.asarray(outliers, dtype=np.int64)
+    size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    hdr = struct.pack(
+        "<4sBdQI", magic, len(shape), float(delta), size, len(outliers)
+    ) + struct.pack(f"<{len(shape)}q", *shape)
+    tbl = table.to_bytes()
+    return b"".join(
+        [
+            hdr,
+            struct.pack("<I", len(tbl)), tbl,
+            struct.pack("<Q", len(payload)), payload,
+            outliers.tobytes(),
+        ]
+    )
+
+
+def sz_encode_residuals(
+    d: np.ndarray, shape: tuple[int, ...], delta: float, *, magic: bytes = _MAGIC
+) -> bytes:
+    """Stage III on precomputed Lorenzo residuals: symbols, Huffman table,
+    payload, outlier section, container. Split from `sz_compress` so the
+    device-encode parity suite can run the host coder on *device-computed*
+    residuals and compare streams byte for byte (DESIGN.md §3.7)."""
+    d = np.asarray(d).reshape(-1).astype(np.int64)
+    esc_mask = np.abs(d) > RESIDUAL_RADIUS
+    syms = np.where(esc_mask, 0, d + RESIDUAL_RADIUS + 1).astype(np.int64)
+    freqs = np.bincount(syms, minlength=2 * RESIDUAL_RADIUS + 2)
+    table = _entropy.build_table(freqs)
+    payload = _entropy.encode(syms, table)
+    return sz_container(shape, delta, table, payload, d[esc_mask], magic=magic)
+
+
 def sz_compress(x: np.ndarray, eb: float) -> bytes:
     """Error-bounded compression to a self-describing byte stream."""
     x = np.asarray(x, dtype=np.float32)
     assert eb > 0, "error bound must be positive"
     delta = 2.0 * float(eb)
     codes = np.round(np.nan_to_num(x.astype(np.float64) / delta)).astype(np.int64)
-    d = _lorenzo_fwd_np(codes).reshape(-1)
-    esc_mask = np.abs(d) > RESIDUAL_RADIUS
-    syms = np.where(esc_mask, 0, d + RESIDUAL_RADIUS + 1).astype(np.int64)
-    freqs = np.bincount(syms, minlength=2 * RESIDUAL_RADIUS + 2)
-    table = _entropy.build_table(freqs)
-    payload = _entropy.encode(syms, table)
-    outliers = d[esc_mask]
-    hdr = struct.pack(
-        "<4sBdQI", _MAGIC, x.ndim, delta, x.size, int(esc_mask.sum())
-    ) + struct.pack(f"<{x.ndim}q", *x.shape)
-    tbl = table.to_bytes()
-    parts = [
-        hdr,
-        struct.pack("<I", len(tbl)), tbl,
-        struct.pack("<Q", len(payload)), payload,
-        outliers.astype(np.int64).tobytes(),
-    ]
-    return b"".join(parts)
+    d = _lorenzo_fwd_np(codes)
+    return sz_encode_residuals(d, x.shape, delta)
 
 
 def sz_decompress(buf: bytes) -> np.ndarray:
     off = 0
     magic, ndim, delta, size, n_out = struct.unpack_from("<4sBdQI", buf, off)
-    assert magic == _MAGIC, "not an SZJ1 stream (old/foreign format?)"
+    assert magic in (_MAGIC, DEVICE_MAGIC), (
+        "not an SZJ1/SZJ2 stream (old/foreign format?)"
+    )
     off += struct.calcsize("<4sBdQI")
     shape = struct.unpack_from(f"<{ndim}q", buf, off)
     off += 8 * ndim

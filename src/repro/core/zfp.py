@@ -201,34 +201,72 @@ def _read_planes(bits: np.ndarray, pos: int, nblk: int, bsz: int, nsb: np.ndarra
     return m, neg, pos
 
 
-def zfp_compress(x: np.ndarray, eb: float, transform: str = "zfp") -> bytes:
-    x = np.asarray(x, dtype=np.float32)
-    n = x.ndim
-    q, e, step, padded, gain_n, _ = _prepare_blocks(x, eb, transform)
+def zfp_container(
+    shape: tuple[int, ...],
+    padded: tuple[int, ...],
+    eb: float,
+    transform: str,
+    e: np.ndarray,
+    nsb: np.ndarray,
+    nbits: int,
+    payload: bytes,
+) -> bytes:
+    """Assemble the ZFJX container around an already-packed plane payload.
+    Shared by the host Stage III (`zfp_encode_quantized`) and the device
+    encode tier (`core/device_encode.py`), whose in-graph plane emitter
+    produces the identical plane-major bit stream (DESIGN.md §3.7)."""
+    n = len(shape)
+    hdr = struct.pack("<4sBdQ", _MAGIC, n, float(eb), len(e)) + struct.pack(
+        f"<{n}q{n}q", *shape, *padded
+    )
+    return b"".join(
+        [
+            hdr,
+            transform.encode().ljust(16, b"\0"),
+            np.asarray(e, np.int16).tobytes(),
+            np.asarray(nsb, np.uint8).tobytes(),
+            struct.pack("<Q", int(nbits)),
+            payload,
+        ]
+    )
+
+
+def zfp_encode_quantized(
+    q: np.ndarray,
+    e: np.ndarray,
+    shape: tuple[int, ...],
+    padded: tuple[int, ...],
+    eb: float,
+    transform: str = "zfp",
+) -> bytes:
+    """Stage III on precomputed quantized block coefficients: degree
+    ordering, plane-sectioned emission, container. `q` is (nblk, 4^n) in
+    *raw* (pre-degree-order) layout, `e` the per-block exponents. Split
+    from `zfp_compress` so the device-encode parity suite can run the host
+    coder on *device-computed* codes and diff streams byte for byte
+    (DESIGN.md §3.7)."""
+    n = len(shape)
+    q = np.asarray(q, dtype=np.int64).reshape(len(e), 4**n)
     order = _degree_order(n)
     q = q[:, order]  # degree-ordered layout for the k-prefix coder
     m = np.abs(q)
     neg = q < 0
-    mx = m.max(axis=1)
+    mx = m.max(axis=1) if m.size else np.zeros(0, dtype=np.int64)
     nsb = np.zeros(len(m), dtype=np.uint8)
     nz = mx > 0
     nsb[nz] = np.floor(np.log2(mx[nz])).astype(np.uint8) + 1
     parts = _emit_planes(m, neg, nsb)
     allbits = np.concatenate(parts) if parts else np.zeros(0, dtype=np.uint8)
     payload = np.packbits(allbits).tobytes()
-    hdr = struct.pack("<4sBdQ", _MAGIC, n, float(eb), len(m)) + struct.pack(
-        f"<{n}q{n}q", *x.shape, *padded
+    return zfp_container(
+        shape, padded, eb, transform, e, nsb, int(allbits.size), payload
     )
-    return b"".join(
-        [
-            hdr,
-            transform.encode().ljust(16, b"\0"),
-            e.astype(np.int16).tobytes(),
-            nsb.tobytes(),
-            struct.pack("<Q", int(allbits.size)),
-            payload,
-        ]
-    )
+
+
+def zfp_compress(x: np.ndarray, eb: float, transform: str = "zfp") -> bytes:
+    x = np.asarray(x, dtype=np.float32)
+    q, e, step, padded, gain_n, _ = _prepare_blocks(x, eb, transform)
+    return zfp_encode_quantized(q, e, x.shape, padded, eb, transform)
 
 
 def zfp_decompress(buf: bytes) -> np.ndarray:

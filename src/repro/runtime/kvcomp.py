@@ -192,14 +192,17 @@ class CompressedPage:
 
     ``codec == 'raw'``: `payload` holds the exact page bytes — restore is
     bit-identical by construction (the `serving_page_parity` gate's
-    contract). ``codec == 'bot'``: `payload` holds the fused-kernel
-    reconstruction in the page dtype; `nbytes` is the exact
-    `ceil(sum(bits)/8)` accounting the kernel reports — what a bitpacked
-    store would hold once the device-resident encode tier (ROADMAP) lands,
-    and what the serving benchmark charges as resident bytes.
+    contract). ``codec == 'zfp'``: the device-resident encode tier
+    (DESIGN.md §3.7) packed the page in-graph and `payload` holds real
+    ZFJX container bytes — `nbytes == len(payload)` is the literal
+    resident footprint. ``codec == 'bot'``: `payload` holds the
+    fused-kernel reconstruction in the page dtype; `nbytes` is the exact
+    `ceil(sum(bits)/8)` accounting the kernel reports — what the
+    bitpacked store holds on the 'zfp' path, and what the serving
+    benchmark charges as resident bytes.
     """
 
-    codec: str                     # "raw" | "bot"
+    codec: str                     # "raw" | "zfp" | "bot"
     payload: bytes | np.ndarray
     shape: tuple[int, ...]
     dtype: str
@@ -228,6 +231,7 @@ def compress_page(
     *,
     cache=None,
     name: str | None = None,
+    device_encode: bool = False,
 ) -> CompressedPage:
     """Compress one KV page (2-D) or cross-layer page stack (3-D, riding
     the 4x4x4 kernel tier) for eviction from the serving arena
@@ -244,6 +248,13 @@ def compress_page(
     a content digest, so re-evicting an unchanged page replays the bound
     without re-scoring the fixed-ratio candidate grid — the warm-path
     discipline of DESIGN.md §8 on the serving path.
+
+    `device_encode` routes lossy pages through the device-resident ZFP
+    encoder (DESIGN.md §3.7): the page is bit-packed in-graph and the
+    evicted payload is real ZFJX container bytes instead of a
+    reconstruction array — the resident footprint becomes literal. Pages
+    the device tier declines (§3.7 fallback rules, or streams that fail
+    to beat raw) take the existing 'bot' path unchanged.
     """
     arr = np.asarray(page)
     if policy.mode == "raw":
@@ -265,6 +276,26 @@ def compress_page(
             eb = jnp.asarray(hit.selection["eb_abs"], jnp.float32)
     if eb is None:
         eb = _policy_eb(page32, vr, policy)
+    if device_encode:
+        from repro.core import device_encode as _de
+
+        payload = _de.zfp_encode_device(page32, float(eb))
+        if payload is not None and len(payload) < arr.nbytes:
+            if cache is not None and cache.events.get(name) != "hit":
+                cache.store(
+                    name, arr.shape, str(arr.dtype), policy, PAGE_TRANSFORM,
+                    fp,
+                    Selection(codec="zfp", eb_abs=float(eb), eb_sz=0.0,
+                              br_sz=0.0,
+                              br_zfp=8.0 * len(payload) / max(arr.size, 1),
+                              psnr_target=0.0, vr=float(vr),
+                              r_sp=policy.r_sp),
+                )
+            return CompressedPage(
+                codec="zfp", payload=payload, shape=arr.shape,
+                dtype=str(arr.dtype), nbytes=len(payload),
+                eb=float(eb), clean=False,
+            )
     from repro.kernels import ops
 
     recon, bits = ops.bot_fused(page32, eb)
@@ -286,11 +317,17 @@ def compress_page(
 
 def decompress_page(cp: CompressedPage) -> np.ndarray:
     """Restore an evicted page into arena form (DESIGN.md §9). Raw pages
-    reconstruct the exact bytes; BOT pages return the bounded-error
-    reconstruction the kernel produced at evict time."""
+    reconstruct the exact bytes; device-packed 'zfp' pages decode their
+    ZFJX stream through the host decoder; BOT pages return the
+    bounded-error reconstruction the kernel produced at evict time."""
     if cp.codec == "raw":
         buf = bytearray(cp.payload)  # writeable, like decompress_pytree
         return np.frombuffer(buf, dtype=np.dtype(cp.dtype)).reshape(cp.shape)
+    if cp.codec == "zfp":
+        from repro.core.zfp import zfp_decompress
+
+        rec = zfp_decompress(bytes(cp.payload))
+        return rec.reshape(cp.shape).astype(np.dtype(cp.dtype))
     if cp.codec == "bot":
         return np.asarray(cp.payload)
     raise ValueError(f"unknown page codec {cp.codec!r}")

@@ -174,6 +174,30 @@ def test_gate_multihost_check_skipped_without_metric(monkeypatch):
     assert not [c for c in checks if c["name"] == "multihost_save_parity"]
 
 
+def test_gate_device_encode_parity_is_absolute(monkeypatch):
+    """`device_encode_parity` needs no baseline: the mismatch list must be
+    empty — any device/host stream divergence (or an all-declined vacuous
+    run, which the bench reports as `(declined)` entries) fails the gate.
+    Decisions-only refreshes skip the bench; the check must then not emit."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    m = _metrics()
+    m["device_encode"] = {
+        "parity_mismatches": [], "speedups": {"sz": 3.0, "zfp": 2.0}, "fields": 2,
+    }
+    ok = bg.gate(m, _baseline())
+    assert [c for c in ok if c["name"] == "device_encode_parity"][0]["passed"]
+    m["device_encode"]["parity_mismatches"] = ["rho:zfp"]
+    bad = [c for c in bg.gate(m, _baseline()) if c["name"] == "device_encode_parity"][0]
+    assert not bad["passed"] and "rho:zfp" in bad["detail"]
+    m["device_encode"]["parity_mismatches"] = ["rho:sz (declined)"]
+    assert not [
+        c for c in bg.gate(m, _baseline()) if c["name"] == "device_encode_parity"
+    ][0]["passed"]
+    checks = bg.gate(_metrics(), _baseline())
+    assert not [c for c in checks if c["name"] == "device_encode_parity"]
+
+
 def test_gate_fails_closed_on_unbaselined_field(monkeypatch):
     """A field added to the smoke suite without --update-baseline must
     fail the decision check, not ride along ungated."""
@@ -215,5 +239,6 @@ def test_committed_baseline_covers_both_env_keys():
         "selection_batched_speedup",
         "sharded_save_speedup",
         "warm_save_speedup",
+        "device_encode_speedup",
     }
     assert base["estimation_error_b"] >= 0.0

@@ -28,7 +28,14 @@ when:
   `benchmarks/bench_serving.py` decodes the same workload with and
   without page pressure at `Policy.raw` and the `serving_page_parity`
   check — absolute — fails on any token mismatch, any raw round-trip
-  byte difference, or a vacuous run that never evicted.
+  byte difference, or a vacuous run that never evicted, or
+* the **device-resident encode tier** (ISSUE 9, DESIGN.md §3.7) drifts
+  from the host byte coders: `benchmarks/bench_device_encode.py` byte-
+  compares the device-packed SZ/ZFP streams against the host Stage III
+  over the device's own codes and the `device_encode_parity` check —
+  absolute — fails on any stream mismatch (an all-declined run counts
+  as vacuous and fails too); the end-to-end `device_encode_speedup`
+  geomean rides the 20% ratio rule.
 
 Throughput is tracked as *ratios* (batched-vs-per-field selection speedup,
 3-D-kernel-vs-fallback speedup, shard-local-vs-gather save speedup) and
@@ -36,7 +43,7 @@ estimation quality as bits/value error — machine-relative numbers a
 committed baseline can gate across runner generations; raw wall times are
 recorded in the report but never gated.
 
-  python tools/bench_gate.py --out BENCH_6.json     # gate (CI `bench` job)
+  python tools/bench_gate.py --out BENCH_9.json     # gate (CI `bench` job)
   python tools/bench_gate.py --update-baseline      # refresh the baseline
   REPRO_SZ_TABLE_BITS=5 python tools/bench_gate.py --update-baseline \
       --decisions-only                              # other env's decisions
@@ -216,6 +223,19 @@ def bench_serving() -> dict:
     return sv.run()
 
 
+def bench_device_encode(repeat: int) -> dict:
+    """Device-resident Stage III (DESIGN.md §3.7): byte parity of the
+    device packers against the host coders over the device's own codes,
+    plus the end-to-end encode speedup aggregate on 64^3 smoke volumes.
+    Gated absolutely by `device_encode_parity` — the mismatch list must
+    be empty, and an all-declined run counts as a (vacuous) mismatch;
+    `device_encode_speedup` (geomean over (field, codec) rows) rides the
+    20% ratio rule."""
+    from benchmarks import bench_device_encode as de
+
+    return de.run(size=64, n_fields=2, repeat=repeat)
+
+
 def gate(metrics: dict, baseline: dict) -> list[dict]:
     """Compare current metrics against the baseline -> list of checks."""
     checks: list[dict] = []
@@ -334,6 +354,24 @@ def gate(metrics: dict, baseline: dict) -> list[dict]:
                 ),
             )
         )
+    dev = metrics.get("device_encode")
+    if dev is not None:
+        # absolute: the device packers must emit byte-identical container
+        # streams to the host coders over the same quantized codes — any
+        # drift means the unchanged host decoders would misread a
+        # device-packed field (declined fields surface here too)
+        bad_dev = list(dev["parity_mismatches"])
+        checks.append(
+            dict(
+                name="device_encode_parity",
+                passed=not bad_dev,
+                detail=(
+                    f"device/host stream mismatch: {bad_dev[:6]}" if bad_dev
+                    else f"device streams byte-identical on {dev['fields']} "
+                    "smoke fields (sz+zfp)"
+                ),
+            )
+        )
     base_err = baseline.get("estimation_error_b")
     cur_err = metrics["estimation_error_b"]
     if base_err is None:
@@ -352,7 +390,7 @@ def gate(metrics: dict, baseline: dict) -> list[dict]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_6.json", help="report path")
+    ap.add_argument("--out", default="BENCH_9.json", help="report path")
     ap.add_argument("--update-baseline", action="store_true")
     ap.add_argument(
         "--decisions-only",
@@ -403,6 +441,22 @@ def main() -> int:
             f"token mismatches {metrics['serving']['token_mismatches']}, "
             f"store ratio {metrics['serving']['compression_store_ratio']:.2f}x, "
             f"tok/s ratio {metrics['serving']['compression_tok_s_ratio']:.2f}x",
+            flush=True,
+        )
+        dev = bench_device_encode(args.repeat)
+        raw["device_encode"] = dev["rows"]
+        metrics["device_encode"] = {
+            "parity_mismatches": dev["parity_mismatches"],
+            "speedups": dev["speedups"],
+            "fields": dev["fields"],
+        }
+        metrics["ratios"]["device_encode_speedup"] = float(
+            dev["device_encode_speedup"]
+        )
+        print(
+            f"  device_encode: {dev['device_encode_speedup']:.2f}x geomean "
+            f"(sz {dev['speedups']['sz']:.2f}x, zfp {dev['speedups']['zfp']:.2f}x), "
+            f"parity mismatches {dev['parity_mismatches'] or 'none'}",
             flush=True,
         )
 
