@@ -1,0 +1,129 @@
+"""Quality-metric targets (DESIGN.md §7.4): SSIM, Pearson correlation
+and the Kolmogorov-Smirnov statistic as first-class Policy targets.
+
+Four parts:
+
+1. solve + encode under each metric target and compare the MEASURED
+   metric of the real reconstruction against the target — every claimed
+   `on_target` field lands within `quality.TOLERANCE`, with zero trial
+   compressions in the search loop;
+2. the predicted metric-vs-bound curves (`quality.metric_curves`) that
+   the inversion walks: SSIM/correlation monotone non-increasing in the
+   error bound, KS non-decreasing, for both codecs;
+3. a mixed-metric `PolicySet` over one tree — each leaf carries its own
+   contract, exactly like mixing fixed_psnr and fixed_ratio;
+4. a checkpoint save whose v3 manifest records the per-field `quality`
+   audit row (mode / target / est_psnr / est_metric / on_target).
+
+  PYTHONPATH=src python examples/quality_metrics.py
+"""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.core import (
+    Policy,
+    PolicySet,
+    compress_pytree,
+    decompress,
+    encode_with_selection,
+    solve_many,
+)
+from repro.core import quality
+
+
+def make_fields(rng):
+    """Paper-style smooth fields plus one noisy one."""
+    return {
+        "temp2d": np.cumsum(
+            np.cumsum(rng.standard_normal((192, 192)), 0), 1
+        ).astype(np.float32),
+        "wind3d": np.cumsum(
+            rng.standard_normal((24, 48, 48)), axis=2
+        ).astype(np.float32),
+        "flux": (
+            np.cumsum(rng.standard_normal((160, 160)), 0)
+            + 0.1 * rng.standard_normal((160, 160))
+        ).astype(np.float32),
+    }
+
+
+def main():
+    rng = np.random.default_rng(0)
+    fields = make_fields(rng)
+    names, arrs = list(fields), list(fields.values())
+
+    # -- 1. solve, encode, measure ----------------------------------------
+    targets = [
+        ("ssim", Policy.fixed_ssim(0.97), 0.97),
+        ("correlation", Policy.fixed_correlation(0.999), 0.999),
+        ("ks", Policy.fixed_ks(0.05), 0.05),
+    ]
+    for metric, pol, target in targets:
+        sols = solve_many(arrs, pol)
+        print(f"\n{pol.mode}({target}):")
+        for name, a, sol in zip(names, arrs, sols):
+            cf = encode_with_selection(a, sol.selection)
+            rec = decompress(cf).reshape(a.shape)
+            achieved = quality.measured_metric(metric, a, rec)
+            gap = quality.metric_gap(metric, achieved, target)
+            ratio = a.nbytes / max(cf.nbytes, 1)
+            print(
+                f"  {name:8s} {sol.selection.codec:>4} "
+                f"est={sol.est_metric:.4f} measured={achieved:.4f} "
+                f"gap={gap:+.4f} (tol {quality.TOLERANCE[metric]}) "
+                f"ratio={ratio:.1f}x on_target={sol.on_target}"
+            )
+
+    # -- 2. the curves the inversion walks ---------------------------------
+    x = fields["temp2d"]
+    bounds = np.logspace(-4, -1, 8) * float(np.ptp(x))
+    curves = quality.metric_curves(x, bounds)
+    print("\nmetric-vs-bound curves on temp2d (SZ):")
+    print("  eb/vr      ssim     corr      ks")
+    for i, eb in enumerate(bounds):
+        print(
+            f"  {eb / np.ptp(x):7.1e} {curves['ssim_sz'][i]:.4f} "
+            f"{curves['correlation_sz'][i]:.4f} {curves['ks_sz'][i]:.4f}"
+        )
+
+    # -- 3. mixed-metric PolicySet over one tree ---------------------------
+    pset = PolicySet(
+        default=Policy.fixed_ssim(0.97),
+        rules=[
+            ("flux", Policy.fixed_psnr(55.0)),  # noisy field: plain dB floor
+            ("wind3d", Policy.fixed_ks(0.05)),  # distribution-critical
+        ],
+    )
+    ct = compress_pytree(dict(fields), pset)
+    print(
+        f"\nmixed tree: {sum(f.nbytes for f in ct.fields.values())} bytes "
+        f"vs {sum(a.nbytes for a in arrs)} raw"
+    )
+
+    # -- 4. the manifest audit row -----------------------------------------
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(CheckpointConfig(directory=d, policy=pset))
+        path = mgr.save(1, dict(fields))
+        man = json.load(open(os.path.join(path, "manifest.json")))
+        print("\nmanifest quality rows:")
+        for fl in man["fields"]:
+            q = fl.get("quality")
+            if q:
+                est = (
+                    f"est_metric={q['est_metric']:.4f} "
+                    if "est_metric" in q  # absent for non-metric modes
+                    else ""
+                )
+                print(
+                    f"  {fl['name']:8s} {q['mode']:18s} target={q['target']} "
+                    f"{est}on_target={q['on_target']}"
+                )
+
+
+if __name__ == "__main__":
+    main()

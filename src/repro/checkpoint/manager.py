@@ -40,7 +40,9 @@ replicated shard, no coordination needed) into its own `data.<host>.bin`
 plus a `segtable.<host>.json` row table and a `commit.<host>` marker.
 A bounded barrier (`CheckpointConfig.barrier_timeout_s`) fences the
 write phase — a dead or straggling host FAILS the save on every live
-host instead of hanging the job — after which host 0 merges the segment
+host instead of hanging the job (after up to `save_retries` bounded
+requeues of the write phase under fresh barrier keys, which absorbs
+transient stragglers) — after which host 0 merges the segment
 tables into one manifest (recording `hosts` and per-host `completion`
 byte counts) and atomically promotes the step directory. A save that
 dies mid-flight therefore never publishes: the tmp directory is simply
@@ -75,9 +77,14 @@ DESIGN.md §2, §7): `CheckpointConfig.policy` holds the per-tensor
 contract — the bound-centric default (``Policy.fixed_accuracy()``),
 ``Policy.fixed_psnr(db)`` / ``Policy.fixed_ratio(x)`` solved by the
 quality-target controller ("every checkpoint is 8x smaller" as a storage
-contract), or a `PolicySet` mixing contracts per tensor name
-("weights at eb_rel 1e-4, `opt/*` at 8x"). Tensors are grouped by
-resolved policy and each group rides one batched decision launch.
+contract), the §7.4 metric targets (``Policy.fixed_ssim(s)`` /
+``Policy.fixed_correlation(rho)`` / ``Policy.fixed_ks(d)``), or a
+`PolicySet` mixing contracts per tensor name ("weights at eb_rel 1e-4,
+`opt/*` at 8x"). Tensors are grouped by resolved policy and each group
+rides one batched decision launch. Every target-mode field row records
+a `quality` dict (resolved target, estimated PSNR/bitrate/metric,
+on_target) in the manifest, so what each tensor was promised — and what
+the controller believes it got — audits from the manifest alone.
 
 With a bare `Policy`, weights default to lossy and optimizer state
 (`opt/*`) to raw (Adam moments are cheap to compress but sensitive near
@@ -118,6 +125,7 @@ from repro.core import codecs, controller
 from repro.core import selector as sel
 from repro.runtime import dist
 from repro.core.policy import (
+    TARGET_FIELD,
     Policy,
     PolicySet,
     as_policy_set,
@@ -163,6 +171,14 @@ class CheckpointConfig:
     # the write/publish barriers before FAILING the save (a straggler or
     # dead host must surface as an exception, never as a hang)
     barrier_timeout_s: float = 120.0
+    # bounded requeue on `BarrierTimeout` (DESIGN.md §6.2): a transiently
+    # straggling host (GC pause, FS hiccup) fails the attempt on every
+    # live host; each retry re-runs the write phase under a FRESH save
+    # sequence number — fresh KV barrier keys, so a late arrival at the
+    # abandoned attempt's barrier can never satisfy the new one. 0
+    # disables. The count actually used is `manager.last_save_retries`
+    # (and `thread.save_result["retries"]` for async saves).
+    save_retries: int = 1
     # deprecated kwarg spelling (None = unset) — shimmed onto `policy`
     eb_rel: float | None = None
     r_sp: float | None = None
@@ -234,6 +250,24 @@ _RAW_SPEC = {"mode": "raw"}
 
 def _field_policy_spec(pol: Policy | None) -> dict:
     return pol.spec() if pol is not None else dict(_RAW_SPEC)
+
+
+def _quality_record(sol: Any) -> dict | None:
+    """Manifest field row `quality` key for a §7 target solve: the resolved
+    target next to what the controller estimates it achieved — restore-side
+    tooling can audit the quality contract per tensor without re-deciding.
+    `est_metric` appears only for the §7.4 metric modes (fixed_ssim /
+    fixed_correlation / fixed_ks); None for fixed_accuracy/raw rows (no
+    solve happened, the bound in `eb` is the whole contract)."""
+    if sol is None:
+        return None
+    rec = dict(
+        mode=sol.mode, target=sol.target, est_psnr=sol.est_psnr,
+        est_bitrate=sol.est_bitrate, on_target=sol.on_target,
+    )
+    if sol.est_metric is not None:
+        rec["est_metric"] = sol.est_metric
+    return rec
 
 
 class _HostBlobs:
@@ -330,6 +364,8 @@ class CheckpointManager:
         # ops introspection): {"segments_decoded", "segments_total",
         # "hosts_opened"}
         self.last_restore_stats: dict | None = None
+        # BarrierTimeout requeues the last completed save needed (§6.2)
+        self.last_save_retries = 0
         # resolve cfg.cache -> DecisionCache | None (DESIGN.md §8)
         cache = cfg.cache
         if cache is True:
@@ -372,17 +408,51 @@ class CheckpointManager:
             pol_of[i] = pol
         return pol_of
 
+    def _retry_barrier_timeout(self, attempt_fn: Callable[[], str]) -> str:
+        """Bounded `BarrierTimeout` requeue (DESIGN.md §6.2). Each attempt
+        consumes its own `_save_seq` value — the counter stays in lockstep
+        on every host (all hosts run the same attempt loop), so the retry's
+        KV barrier keys (`ckpt:{step}:{seq}:*`) are fresh on every host and
+        a straggler arriving late at an abandoned attempt's barrier cannot
+        satisfy the new one. Only the write/publish phase is retried —
+        device collectives (plan/gather) run once, upstream. Exhausting
+        `cfg.save_retries` re-raises the timeout: a persistently dead host
+        must fail the save, not loop. `last_save_retries` records how many
+        requeues the returning attempt needed."""
+        retries = max(0, int(self.cfg.save_retries))
+        self.last_save_retries = 0
+        for attempt in range(retries + 1):
+            try:
+                return attempt_fn()
+            except dist.BarrierTimeout:
+                if attempt >= retries:
+                    raise
+                self.last_save_retries = attempt + 1
+        raise AssertionError("unreachable")
+
     def save(self, step: int, tree: Any, lossy: Callable[[str], bool] | None = None) -> str:
         """Synchronous atomic save. Each tensor's quality policy comes from
         `cfg.policy` (a `PolicySet` resolves per name); `lossy(name)` is a
         hard per-call override forcing names to raw (default: with a bare
         Policy, float leaves under 'opt/' ride raw). With `cfg.sharded`,
         writes the per-shard segment layout via the shard-local engine
-        (DESIGN.md §6) — no full-tensor gather."""
+        (DESIGN.md §6) — no full-tensor gather. Saves that die at a
+        multi-host barrier are requeued up to `cfg.save_retries` times
+        under fresh barrier keys before the `BarrierTimeout` surfaces."""
         if lossy is None:
             lossy = self._default_lossy()
         if self.cfg.sharded:
             return self._save_sharded(step, tree, lossy)
+        return self._retry_barrier_timeout(
+            lambda: self._save_flat(step, tree, lossy)
+        )
+
+    def _save_flat(self, step: int, tree: Any, lossy: Callable[[str], bool]) -> str:
+        """One attempt of the flat (gathered) writer — `save` wraps it in
+        the bounded BarrierTimeout requeue. `_leaf_items` is a collective
+        only for leaves not yet on host; the async path materializes the
+        snapshot on the calling thread first, so a worker-thread retry
+        re-walks plain host arrays."""
         cfg = self.cfg
         final = os.path.join(cfg.directory, f"step_{step:09d}")
         t0 = time.time()
@@ -408,6 +478,7 @@ class CheckpointManager:
         # copy materializes; a single-policy tree is one group, exactly
         # the pre-policy batch composition)
         sel_of: dict[int, sel.Selection] = {}
+        sol_of: dict[int, controller.TargetSolution] = {}
         for pol, idxs in group_by_policy(pol_of).items():
             arrs = [items[i][1] for i in idxs]
             names = [items[i][0] for i in idxs] if self.cache is not None else None
@@ -419,6 +490,7 @@ class CheckpointManager:
                 sols = controller.solve_many(
                     arrs, pol, cache=self.cache, names=names
                 )
+                sol_of.update(zip(idxs, sols))
                 sels = [s.selection for s in sols]
             sel_of.update(zip(idxs, sels))
 
@@ -438,13 +510,15 @@ class CheckpointManager:
                 zip(items, self._encoded_in_order(items, _encode))
             ):
                 f.write(data)
-                fields.append(
-                    dict(
-                        name=name, codec=codec, shape=list(arr.shape),
-                        dtype=str(arr.dtype), offset=off, nbytes=len(data), eb=eb,
-                        policy=_field_policy_spec(pol_of.get(i)),
-                    )
+                row = dict(
+                    name=name, codec=codec, shape=list(arr.shape),
+                    dtype=str(arr.dtype), offset=off, nbytes=len(data), eb=eb,
+                    policy=_field_policy_spec(pol_of.get(i)),
                 )
+                q = _quality_record(sol_of.get(i))
+                if q is not None:
+                    row["quality"] = q
+                fields.append(row)
                 off += len(data)
         manifest = self._manifest(step, fields, off, t0, extra=dict(layout="flat"))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -488,14 +562,17 @@ class CheckpointManager:
         legacy `mode`/`target` keys mirror the DEFAULT policy so pre-v3
         tooling keeps reading something sensible)."""
         default = self.cfg.policy_set.default
+        # legacy `target` mirror: every target mode (fixed_psnr / ratio /
+        # the §7.4 metric modes) reports its policy target via
+        # TARGET_FIELD; fixed_accuracy reports the bound, raw None
+        tgt_attr = TARGET_FIELD.get(default.mode)
         man = dict(
             step=step,
             version=3,
             policy=policy_set_spec(self.cfg.policy_set),
             mode=default.mode,
             target=(
-                default.target_psnr if default.mode == "fixed_psnr"
-                else default.target_ratio if default.mode == "fixed_ratio"
+                getattr(default, tgt_attr) if tgt_attr is not None
                 else default.eb_rel if default.eb_rel is not None
                 else default.eb_abs
             ),
@@ -541,7 +618,11 @@ class CheckpointManager:
         tensor that the engine's layout analysis can keep sharded."""
         t0 = time.time()
         items, pol_of, plan_of = self._plan_sharded(tree, lossy)
-        return self._write_sharded(step, t0, items, pol_of, plan_of)
+        # only the write phase retries: `_plan_sharded` holds the device
+        # collectives, which must not re-issue out of program order
+        return self._retry_barrier_timeout(
+            lambda: self._write_sharded(step, t0, items, pol_of, plan_of)
+        )
 
     def _plan_sharded(self, tree: Any, lossy: Callable[[str], bool]):
         """Stage I/II for the segment writer: resolve policies and run the
@@ -646,15 +727,18 @@ class CheckpointManager:
                         )
                     )
                     off += len(data)
-                fields.append(
-                    dict(
-                        name=name, sel_codec=sel_codec,
-                        shape=list(np.shape(leaf)), dtype=str(leaf.dtype),
-                        view_shape=list(view_shape), eb=eb, eb_sz=eb_sz,
-                        segments=seg_rows,
-                        policy=_field_policy_spec(pol_of.get(i)),
-                    )
+                row = dict(
+                    name=name, sel_codec=sel_codec,
+                    shape=list(np.shape(leaf)), dtype=str(leaf.dtype),
+                    view_shape=list(view_shape), eb=eb, eb_sz=eb_sz,
+                    segments=seg_rows,
+                    policy=_field_policy_spec(pol_of.get(i)),
                 )
+                plan = plan_of.get(i)
+                q = _quality_record(plan.solution if plan is not None else None)
+                if q is not None:
+                    row["quality"] = q
+                fields.append(row)
             if nproc > 1:
                 f.flush()
                 os.fsync(f.fileno())
@@ -739,8 +823,11 @@ class CheckpointManager:
         collectives in program order on the main thread — while
         encode→drain→barrier→publish (`_write_sharded`: host IO plus
         KV-service fences, all thread-safe) overlaps with step N+1 on the
-        worker. A straggler host surfaces as `BarrierTimeout` from
-        `wait()`, never as a hang."""
+        worker. A transiently straggling host is requeued up to
+        `cfg.save_retries` times under fresh barrier keys; a persistent
+        one surfaces as `BarrierTimeout` from `wait()`, never as a hang.
+        On success the returned thread carries
+        ``thread.save_result = {"path", "retries"}``."""
         self.wait()
         self._exc = None
         lossy = kw.pop("lossy", None)
@@ -767,7 +854,9 @@ class CheckpointManager:
                 else (name, leaf)
                 for i, (name, leaf) in enumerate(items)
             ]
-            run = lambda: self._write_sharded(step, t0, items, pol_of, plan_of)  # noqa: E731
+            run = lambda: self._retry_barrier_timeout(  # noqa: E731
+                lambda: self._write_sharded(step, t0, items, pol_of, plan_of)
+            )
         else:
             # flat snapshot: `dist.to_numpy` is itself a collective for
             # leaves this process cannot fully address — calling thread too
@@ -776,13 +865,21 @@ class CheckpointManager:
 
         def _run() -> None:
             try:
-                run()
+                path = run()
+                # surfaced on the returned thread object: the async
+                # caller's view of where the save landed and how many
+                # BarrierTimeout requeues it needed (§6.2)
+                thread.save_result = dict(
+                    path=path, retries=self.last_save_retries
+                )
             except BaseException as e:  # noqa: BLE001 - surfaced by wait()
                 self._exc = e
 
-        self._thread = threading.Thread(target=_run, daemon=True)
-        self._thread.start()
-        return self._thread
+        thread = threading.Thread(target=_run, daemon=True)
+        thread.save_result = None
+        self._thread = thread
+        thread.start()
+        return thread
 
     def wait(self) -> None:
         """Join the async save, re-raising whatever it raised: a failed

@@ -2,7 +2,7 @@
 selection between SZ-style (prediction-based) and ZFP-style (transform-based)
 error-bounded lossy compression, plus the estimators that make it cheap."""
 
-from . import codecs
+from . import codecs, quality
 from .api import (
     CompressedField,
     CompressedTree,
@@ -52,6 +52,7 @@ __all__ = [
     "estimate_curves",
     "predict_curves",
     "predict_selection",
+    "quality",
     "select",
     "select_and_compress",
     "select_many",

@@ -12,6 +12,12 @@ rate, and the codec allowlist — instead of a spray of per-call kwargs:
   solves for the per-field bound that lands on the target dB.
 * ``Policy.fixed_ratio(x)`` — the controller solves for the bound whose
   estimated rate meets the byte budget (x vs 32-bit raw).
+* ``Policy.fixed_ssim(s)`` / ``Policy.fixed_correlation(rho)`` /
+  ``Policy.fixed_ks(d)`` — the §7.4 quality-metric targets: the
+  controller inverts the per-field metric curve (`core/quality.py`) to an
+  equivalent-PSNR target and solves that with the same machinery — SSIM
+  and correlation are floors, KS a ceiling, all with zero trial
+  compressions.
 * ``Policy.raw()`` — store verbatim (exact bytes, original dtype).
 
 `compress_pytree` additionally takes a `PolicySet` — ordered
@@ -217,12 +223,16 @@ def compress(
       policy: the quality contract (`core/policy.py`):
         `Policy.fixed_accuracy(eb_rel=...)` (default, at eb_rel 1e-4) |
         `Policy.fixed_psnr(db)` | `Policy.fixed_ratio(x)` |
-        `Policy.raw()`. Fixed-accuracy bounds are pointwise and guaranteed
-        on every value of the reconstruction (`eb_rel` scales by the
-        field's value range); fixed_psnr lands on the target dB (not
-        merely above it); fixed_ratio meets the estimated byte budget
-        within ~10% with the chosen bound reported in
-        `.selection.eb_abs`. The policy's `codecs` allowlist restricts
+        `Policy.fixed_ssim(s)` | `Policy.fixed_correlation(rho)` |
+        `Policy.fixed_ks(d)` | `Policy.raw()`. Fixed-accuracy bounds are
+        pointwise and guaranteed on every value of the reconstruction
+        (`eb_rel` scales by the field's value range); fixed_psnr lands on
+        the target dB (not merely above it); fixed_ratio meets the
+        estimated byte budget within ~10% with the chosen bound reported
+        in `.selection.eb_abs`; the §7.4 metric modes land on the metric
+        target within the documented tolerances (`quality.TOLERANCE`),
+        SSIM/correlation as floors and KS as a ceiling. The policy's
+        `codecs` allowlist restricts
         which registered codecs compete; `r_sp` is the estimator block
         sampling rate (paper default 5%).
       device_encode: finish Stage III in-graph where the selected codec
@@ -326,10 +336,12 @@ def compress_pytree(
         resolved policy is `Policy.raw()` — and all non-float leaves —
         ride through raw (exact bytes, original dtype). Per-leaf targets
         are independent: in fixed_psnr every leaf lands on the target dB
-        against its own value range; in fixed_ratio every compressible
-        leaf meets the ratio, so the tree-level ratio can exceed the
-        target when raw-fallback leaves are rare and undershoot it when
-        they dominate.
+        against its own value range; in the §7.4 metric modes
+        (fixed_ssim / fixed_correlation / fixed_ks) every leaf lands on
+        the metric target against its own sampled statistics; in
+        fixed_ratio every compressible leaf meets the ratio, so the
+        tree-level ratio can exceed the target when raw-fallback leaves
+        are rare and undershoot it when they dominate.
       workers: thread-pool width for the per-field byte encoders (0 forces
         serial; default: cpu-count-bounded). Selection/solving is batched
         regardless: leaves are grouped by resolved policy and each group's

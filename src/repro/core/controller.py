@@ -22,8 +22,15 @@ rate-distortion curve:
   by a high-rate-model seed (rate moves ~1 bit/value per octave of bound)
   plus clamped secant steps, and the codec with the higher estimated PSNR
   at the budget wins — the rate-distortion dual of Algorithm 1.
+* ``fixed_ssim`` / ``fixed_correlation`` / ``fixed_ks`` — metric targets
+  (DESIGN.md §7.4). Every metric is a monotone function of the error
+  variance, so `core/quality.py` converts the metric target into a
+  per-field *equivalent-PSNR* target (closed form for SSIM/correlation
+  from the sampled variance; a bisection on the sample-measured KS curve)
+  and the fixed_psnr machinery solves it — same seeds, same secant, same
+  min-rate-at-target codec choice, zero trial compressions.
 * ``fixed_accuracy`` — the paper's bound-centric mode, delegated to
-  `select_many` so the three modes share one call signature.
+  `select_many` so all the modes share one call signature.
 
 All candidate bounds for all fields are evaluated by ONE jitted launch
 per round: the packed block batches of `select_many` gain a vmapped
@@ -46,7 +53,8 @@ import numpy as np
 
 from . import codecs as _codecs
 from . import estimator as est
-from .policy import Policy, policy_from_kwargs
+from . import quality as qual
+from .policy import TARGET_FIELD, Policy, policy_from_kwargs
 from .selector import (
     MAX_BATCH_FIELDS,
     Selection,
@@ -98,9 +106,16 @@ DB_PER_OCTAVE = 20.0 * math.log10(2.0)
 PSNR_SLOPE_CLAMP = (-30.0, -1.0)
 RATE_SLOPE_CLAMP = (-4.0, -0.25)
 
-#: refinement evals after the seed eval, by mode (fixed_psnr rounds are
-#: light-sweep; fixed_ratio rounds are full; both end in one full eval)
-DEFAULT_ROUNDS = {"fixed_psnr": 3, "fixed_ratio": 3}
+#: refinement evals after the seed eval, by mode (fixed_psnr and the
+#: §7.4 metric modes ride light sweeps; fixed_ratio rounds are full-rate
+#: probes; every mode ends in one full pricing eval)
+DEFAULT_ROUNDS = {
+    "fixed_psnr": 3,
+    "fixed_ratio": 3,
+    "fixed_ssim": 3,
+    "fixed_correlation": 3,
+    "fixed_ks": 3,
+}
 
 
 @dataclass
@@ -110,10 +125,15 @@ class TargetSolution:
 
     selection: Selection
     mode: str
-    target: float        # dB (fixed_psnr), ratio (fixed_ratio), eb (fixed_accuracy)
+    target: float        # dB (fixed_psnr), ratio (fixed_ratio), eb (fixed_accuracy),
+                         # metric value (fixed_ssim / fixed_correlation / fixed_ks)
     est_psnr: float      # estimated/measured PSNR of the chosen codec
     est_bitrate: float   # estimated bits/value of the chosen codec
     on_target: bool      # False when the solve could only get best-effort close
+    #: predicted metric value of the chosen codec (§7.4 metric modes only;
+    #: None elsewhere — the default keeps pre-metric cache entries and
+    #: manifests deserializing unchanged)
+    est_metric: float | None = None
 
     @property
     def est_ratio(self) -> float:
@@ -361,7 +381,7 @@ def _warm_seeds(warm, x0_s, x0_z, x_lo, x_hi):
 
 
 def _solve_fixed_psnr(
-    sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target: float, rounds: int,
+    sweep: _Sweep, refine: _Sweep, vr: np.ndarray, target, rounds: int,
     r_sp: float, allowed: tuple[str, ...] = _codecs.DEFAULT_CODECS,
     warm=None,
 ) -> list[tuple[Selection, float, float, bool]]:
@@ -375,10 +395,20 @@ def _solve_fixed_psnr(
     both codecs' *observed* curves (measured quantization error for SZ,
     estimated truncation PSNR for ZFP) onto the target; one final full
     eval prices the two solutions for the min-rate choice.
+
+    `target` is a scalar dB value, or a per-field (F,) array — the §7.4
+    metric modes feed per-field equivalent-PSNR targets through the same
+    solve (the secant, snap and eligibility tests are all elementwise, so
+    the scalar path's numerics are untouched).
     """
-    tq = round(target / est.PSNR_MATCH_QUANTUM) * est.PSNR_MATCH_QUANTUM
+    tq = (
+        np.round(np.asarray(target, np.float64) / est.PSNR_MATCH_QUANTUM)
+        * est.PSNR_MATCH_QUANTUM
+    )
     delta_star = np.asarray(
-        est.sz_delta_for_psnr(jnp.float32(target), jnp.asarray(vr, np.float32)),
+        est.sz_delta_for_psnr(
+            jnp.asarray(target, jnp.float32), jnp.asarray(vr, np.float32)
+        ),
         np.float32,
     )
     lvr = np.log2(np.maximum(vr, 1e-30)).astype(np.float64)
@@ -408,7 +438,9 @@ def _solve_fixed_psnr(
     zfp_ok = s_z.found & (ps_z <= tq + PSNR_TOL_DB) & (ps_z >= tq - PSNR_SLACK_DB)
     out = []
     F = len(vr)
+    tq_f = np.broadcast_to(np.asarray(tq, np.float64), (F,))
     for f in range(F):
+        tqf = float(tq_f[f])
         eb_s = float(np.exp2(x_s[f])) / 2.0
         cands = []
         if "sz" in allowed:
@@ -425,10 +457,10 @@ def _solve_fixed_psnr(
             codec, br, ps = "raw", RAW_BITS, math.inf
         # raw is lossless (target exceeded by construction); a lossy codec
         # is on-target only when it actually landed within the contract
-        on_target = codec == "raw" or abs(ps - tq) <= 2.0 * PSNR_TOL_DB
+        on_target = codec == "raw" or abs(ps - tqf) <= 2.0 * PSNR_TOL_DB
         sel = Selection(
             codec, eb, eb_s, float(br_s[f]), float(br_z[f]),
-            ps if codec != "raw" else tq, float(vr[f]), r_sp,
+            ps if codec != "raw" else tqf, float(vr[f]), r_sp,
         )
         out.append((sel, ps, br, on_target))
     return out
@@ -543,6 +575,50 @@ def _solve_fixed_ratio(
     return out
 
 
+def _solve_fixed_metric(
+    sweep: _Sweep, refine: _Sweep, batch: list[_Member], nd: int,
+    vr: np.ndarray, mode: str, target: float, rounds: int, r_sp: float,
+    allowed: tuple[str, ...] = _codecs.DEFAULT_CODECS, warm=None,
+) -> list[tuple[Selection, float, float, bool, float]]:
+    """Per field: (Selection, est_psnr, est_bitrate, on_target, est_metric)
+    for the §7.4 metric modes (fixed_ssim / fixed_correlation / fixed_ks).
+
+    Every supported metric is a monotone function of the error variance
+    given the field's sampled statistics (`core/quality.py`), so the solve
+    is: (1) compute per-field metric sufficient statistics from the same
+    halo blocks the rate estimators use; (2) invert the metric target into
+    a per-field equivalent-PSNR target — closed form for SSIM/correlation,
+    an interpolation on the sample-measured KS curve for fixed_ks; (3) run
+    the fixed-PSNR solve on the per-field target array (closed-form seed,
+    clamped light-sweep secant, min-rate codec choice *at the metric
+    target* — Algorithm 1's rule anchored on the caller's contract instead
+    of at matched eb); (4) read the achieved metric back off the solved
+    PSNR for telemetry and the on-target check. Zero trial compressions,
+    same launch profile as fixed_psnr.
+    """
+    metric = qual.MODE_METRIC[mode]
+    stats = [qual.stats_from_blocks(m.blocks, nd, m.vr) for m in batch]
+    psnr_t = np.asarray(
+        [qual.equivalent_psnr(metric, target, s) for s in stats], np.float64
+    )
+    solved = _solve_fixed_psnr(
+        sweep, refine, vr, psnr_t, rounds, r_sp, allowed, warm=warm
+    )
+    tol = qual.TOLERANCE[metric]
+    out = []
+    for f, (sel, ps, br, _on) in enumerate(solved):
+        if sel.codec == "raw":
+            m_a = qual.LOSSLESS_VALUE[metric]
+            on = True
+        else:
+            m_a = qual.metric_from_psnr(metric, ps, stats[f])
+            # SSIM/correlation are floors (overshoot is free quality), KS a
+            # ceiling; within-tolerance misses still count as on target
+            on = qual.metric_gap(metric, m_a, float(target)) <= tol
+        out.append((sel, ps, br, on, float(m_a)))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
@@ -569,8 +645,13 @@ def solve_many(
     * `Policy.fixed_psnr(db)`   — target dB, relative to each field's
                                   value range (as everywhere else);
     * `Policy.fixed_ratio(x)`   — x vs 32-bit raw;
+    * `Policy.fixed_ssim(s)` / `Policy.fixed_correlation(rho)` /
+      `Policy.fixed_ks(d)`      — §7.4 metric targets, inverted to
+                                  per-field equivalent-PSNR targets via
+                                  `core/quality.py` (solutions carry the
+                                  predicted metric in `est_metric`);
     * `Policy.fixed_accuracy(...)` — delegates to `select_many` (the
-                                  paper's bound-centric path) so the three
+                                  paper's bound-centric path) so all the
                                   modes share one entry point.
 
     The policy's `codecs` allowlist restricts which registered codecs
@@ -620,9 +701,13 @@ def solve_many(
             )
             for s in sels
         ]
-    target = float(
-        policy.target_psnr if mode == "fixed_psnr" else policy.target_ratio
-    )
+    attr = TARGET_FIELD.get(mode)
+    if attr is None:  # a future Policy mode this controller predates
+        raise ValueError(
+            f"solve_many cannot solve mode {mode!r}; supported target "
+            f"modes: {', '.join(TARGET_FIELD)}"
+        )
+    target = float(getattr(policy, attr))
     n_rounds = DEFAULT_ROUNDS[mode] if rounds is None else rounds
 
     results: list[TargetSolution | None] = [None] * len(fields)
@@ -733,8 +818,14 @@ def _build_solve_members(
         vr = float(np.max(view) - np.min(view)) if view.size else 0.0
         sel0 = _degenerate_selection(view, vr, None, None, r_sp)
         if sel0 is not None:
-            on = mode == "fixed_psnr"  # raw is lossless: PSNR inf >= target
-            results[i] = TargetSolution(sel0, mode, target, math.inf, RAW_BITS, on)
+            # raw is lossless, so every quality-floor contract (PSNR and
+            # the §7.4 metrics) is met by construction; only a *rate*
+            # budget is genuinely missed (raw pins the ratio to 1)
+            on = mode != "fixed_ratio"
+            results[i] = TargetSolution(
+                sel0, mode, target, math.inf, RAW_BITS, on,
+                est_metric=qual.lossless_metric(mode),
+            )
             continue
         starts = est.block_starts(view.shape, r_sp)
         cap = _max_batch_blocks(view.ndim)
@@ -805,13 +896,25 @@ def _solve_groups(
                         warm_s[f], warm_z[f] = warm[m.idx]
                 if np.isfinite(warm_s).any() or np.isfinite(warm_z).any():
                     warm_batch = (warm_s, warm_z)
-            solver = _solve_fixed_psnr if mode == "fixed_psnr" else _solve_fixed_ratio
-            solved = solver(
-                sweep, refine, vr_arr, target, n_rounds, r_sp, codecs,
-                warm=warm_batch,
-            )
-            for m, (sel, ps, br, on) in zip(batch, solved):
-                results[m.idx] = TargetSolution(sel, mode, target, ps, br, on)
+            if mode in qual.MODE_METRIC:
+                solved_m = _solve_fixed_metric(
+                    sweep, refine, batch, nd, vr_arr, mode, target, n_rounds,
+                    r_sp, codecs, warm=warm_batch,
+                )
+                for m, (sel, ps, br, on, met) in zip(batch, solved_m):
+                    results[m.idx] = TargetSolution(
+                        sel, mode, target, ps, br, on, est_metric=met
+                    )
+            else:
+                solver = (
+                    _solve_fixed_psnr if mode == "fixed_psnr" else _solve_fixed_ratio
+                )
+                solved = solver(
+                    sweep, refine, vr_arr, target, n_rounds, r_sp, codecs,
+                    warm=warm_batch,
+                )
+                for m, (sel, ps, br, on) in zip(batch, solved):
+                    results[m.idx] = TargetSolution(sel, mode, target, ps, br, on)
             lo = hi
 
 

@@ -13,6 +13,11 @@ An entry is keyed by the tuple the decision is a pure function of:
 
     (field name, original shape, original dtype, Policy.spec(), transform)
 
+`Policy.spec()` carries the mode AND its target value — including the
+§7.4 metric targets (`target_ssim` / `target_correlation` / `target_ks`) —
+so a `fixed_ssim(0.98)` entry can never collide with a `fixed_psnr(60)`
+(or a `fixed_ssim(0.95)`) entry for the same field.
+
 and guarded by a **stats fingerprint** (`core/predictor.py`): a content
 digest over the exact sampled halo blocks Stage I consumes (plus vr, size
 and the r_sp grid), together with the cheap residual moments. With the
@@ -236,7 +241,7 @@ class DecisionCache:
             sol = dict(
                 mode=solution.mode, target=solution.target,
                 est_psnr=solution.est_psnr, est_bitrate=solution.est_bitrate,
-                on_target=solution.on_target,
+                on_target=solution.on_target, est_metric=solution.est_metric,
             )
         e = CacheEntry(
             name=name, shape=tuple(int(s) for s in shape), dtype=str(dtype),

@@ -13,6 +13,9 @@ contract as one frozen, validated value object:
     Policy.fixed_accuracy(eb_rel=1e-4)      # the paper's bound-centric mode
     Policy.fixed_psnr(60.0)                 # §7 controller solves the bound
     Policy.fixed_ratio(8.0)                 # §7 iso-rate dual
+    Policy.fixed_ssim(0.98)                 # §7.4 metric targets: structural
+    Policy.fixed_correlation(0.999)         #   similarity / Pearson rho /
+    Policy.fixed_ks(0.05)                   #   KS distribution distance
     Policy.raw()                            # store verbatim (exact bytes)
 
 plus the estimator sampling rate (`r_sp`) and a codec *allowlist*
@@ -57,7 +60,28 @@ DEFAULT_R_SP = 0.05
 #: the bound-centric default of `compress_pytree` since PR 1
 DEFAULT_EB_REL = 1e-4
 
-MODES = ("fixed_accuracy", "fixed_psnr", "fixed_ratio", "raw")
+MODES = (
+    "fixed_accuracy",
+    "fixed_psnr",
+    "fixed_ratio",
+    "fixed_ssim",
+    "fixed_correlation",
+    "fixed_ks",
+    "raw",
+)
+#: the DESIGN.md §7.4 metric modes (solved via metric -> equivalent-PSNR
+#: inversion in core/quality.py + core/controller.py)
+METRIC_MODES = ("fixed_ssim", "fixed_correlation", "fixed_ks")
+#: mode -> the Policy field holding its target (every solver-backed mode);
+#: the single registry controller / sharded / checkpoint target extraction
+#: reads, so adding a mode here is what makes it resolvable everywhere.
+TARGET_FIELD = {
+    "fixed_psnr": "target_psnr",
+    "fixed_ratio": "target_ratio",
+    "fixed_ssim": "target_ssim",
+    "fixed_correlation": "target_correlation",
+    "fixed_ks": "target_ks",
+}
 
 
 @dataclass(frozen=True)
@@ -65,9 +89,10 @@ class Policy:
     """One field's quality contract: mode + target + sampling + codec set.
 
     Construct through the classmethods (`fixed_accuracy` / `fixed_psnr` /
-    `fixed_ratio` / `raw`) — the bare constructor validates but does not
-    default the mode-specific target fields. Frozen and hashable, so
-    policies are usable as grouping keys and jit-static arguments.
+    `fixed_ratio` / `fixed_ssim` / `fixed_correlation` / `fixed_ks` /
+    `raw`) — the bare constructor validates but does not default the
+    mode-specific target fields. Frozen and hashable, so policies are
+    usable as grouping keys and jit-static arguments.
     """
 
     mode: str
@@ -75,6 +100,9 @@ class Policy:
     eb_rel: float | None = None
     target_psnr: float | None = None
     target_ratio: float | None = None
+    target_ssim: float | None = None
+    target_correlation: float | None = None
+    target_ks: float | None = None
     r_sp: float = DEFAULT_R_SP
     codecs: tuple[str, ...] = _codecs.DEFAULT_CODECS
 
@@ -107,6 +135,19 @@ class Policy:
         elif self.mode == "fixed_ratio":
             if self.target_ratio is None or not self.target_ratio > 0:
                 raise ValueError("fixed_ratio needs target_ratio > 0")
+        elif self.mode == "fixed_ssim":
+            if self.target_ssim is None or not (0.0 < self.target_ssim < 1.0):
+                raise ValueError("fixed_ssim needs target_ssim in (0, 1)")
+        elif self.mode == "fixed_correlation":
+            if self.target_correlation is None or not (
+                0.0 < self.target_correlation < 1.0
+            ):
+                raise ValueError(
+                    "fixed_correlation needs target_correlation in (0, 1)"
+                )
+        elif self.mode == "fixed_ks":
+            if self.target_ks is None or not (0.0 < self.target_ks < 1.0):
+                raise ValueError("fixed_ks needs target_ks in (0, 1)")
         if self.mode != "raw" and not any(
             c for c in cods if c != "raw" and not _codecs.get(c).lossless
         ):
@@ -161,6 +202,47 @@ class Policy:
                    codecs=tuple(codecs))
 
     @classmethod
+    def fixed_ssim(
+        cls,
+        target: float,
+        *,
+        r_sp: float = DEFAULT_R_SP,
+        codecs: Iterable[str] = _codecs.DEFAULT_CODECS,
+    ) -> "Policy":
+        """Land on a structural-similarity floor in (0, 1); the §7.4 metric
+        inversion converts it to a per-field PSNR target and the §7
+        controller solves the bound (achieved within ±0.02)."""
+        return cls("fixed_ssim", target_ssim=float(target), r_sp=r_sp,
+                   codecs=tuple(codecs))
+
+    @classmethod
+    def fixed_correlation(
+        cls,
+        target: float,
+        *,
+        r_sp: float = DEFAULT_R_SP,
+        codecs: Iterable[str] = _codecs.DEFAULT_CODECS,
+    ) -> "Policy":
+        """Land on a Pearson-correlation floor in (0, 1) between original and
+        reconstruction (§7.4 metric inversion; achieved within ±0.005)."""
+        return cls("fixed_correlation", target_correlation=float(target),
+                   r_sp=r_sp, codecs=tuple(codecs))
+
+    @classmethod
+    def fixed_ks(
+        cls,
+        max_stat: float,
+        *,
+        r_sp: float = DEFAULT_R_SP,
+        codecs: Iterable[str] = _codecs.DEFAULT_CODECS,
+    ) -> "Policy":
+        """Cap the Kolmogorov-Smirnov distance between the original and
+        reconstructed value distributions at `max_stat` in (0, 1) (§7.4
+        sample-measured inversion; achieved within ±0.02)."""
+        return cls("fixed_ks", target_ks=float(max_stat), r_sp=r_sp,
+                   codecs=tuple(codecs))
+
+    @classmethod
     def raw(cls) -> "Policy":
         """Store verbatim — exact bytes, original dtype (replaces the old
         `predicate`-rejected path)."""
@@ -171,7 +253,8 @@ class Policy:
     def spec(self) -> dict:
         """Compact JSON-safe form recorded per field in manifest v3."""
         out: dict = {"mode": self.mode}
-        for k in ("eb_abs", "eb_rel", "target_psnr", "target_ratio"):
+        for k in ("eb_abs", "eb_rel", "target_psnr", "target_ratio",
+                  "target_ssim", "target_correlation", "target_ks"):
             v = getattr(self, k)
             if v is not None:
                 out[k] = v
@@ -184,7 +267,12 @@ class Policy:
     @classmethod
     def from_spec(cls, spec: dict) -> "Policy":
         kw = dict(spec)
-        mode = kw.pop("mode")
+        mode = kw.pop("mode", None)
+        if mode not in MODES:
+            raise ValueError(
+                f"unknown quality mode {mode!r} in policy spec; supported "
+                f"modes: {', '.join(MODES)}"
+            )
         if "codecs" in kw:
             kw["codecs"] = tuple(kw["codecs"])
         if mode == "raw":
@@ -330,8 +418,15 @@ def policy_from_kwargs(
         if target_ratio is None:
             raise ValueError("fixed_ratio needs target_ratio")
         pol = Policy.fixed_ratio(target_ratio, r_sp=r_sp)
+    elif mode in METRIC_MODES:
+        raise ValueError(
+            f"mode {mode!r} has no legacy-kwarg spelling; pass "
+            f"policy=Policy.{mode}(target) instead (repro.core.policy)"
+        )
     else:
-        raise ValueError(f"unknown mode {mode!r}; one of {MODES[:3]}")
+        raise ValueError(
+            f"unknown quality mode {mode!r}; supported modes: {', '.join(MODES)}"
+        )
     warnings.warn(
         f"{where}: mode/eb/target keyword arguments are deprecated; pass "
         f"policy={_policy_repr(pol)} instead (repro.core.policy)",
@@ -349,13 +444,18 @@ def _policy_repr(p: Policy) -> str:
         return f"Policy.fixed_psnr({p.target_psnr!r})"
     if p.mode == "fixed_ratio":
         return f"Policy.fixed_ratio({p.target_ratio!r})"
+    attr = TARGET_FIELD.get(p.mode)
+    if attr is not None:
+        return f"Policy.{p.mode}({getattr(p, attr)!r})"
     return "Policy.raw()"
 
 
 __all__ = [
     "DEFAULT_EB_REL",
     "DEFAULT_R_SP",
+    "METRIC_MODES",
     "MODES",
+    "TARGET_FIELD",
     "Policy",
     "PolicySet",
     "as_policy_set",

@@ -11,6 +11,13 @@ Per field:
 Note (DESIGN.md §1): Algorithm 1 line 11 prints "error bound 2*delta"; the
 derivation requires eb_sz = delta/2 (clamped to eb_abs so the user's bound
 always holds). We implement the consistent reading.
+
+The quality-target modes (fixed_psnr and the §7.4 metric targets) reuse
+the same min-rate rule but anchor it at the caller's contract instead of
+at matched eb: the controller solves each codec's bound onto the target
+first, then the cheapest candidate *inside the target's tolerance band*
+wins (`core/controller.py`). `select_many` therefore only accepts
+fixed_accuracy policies and points target modes at `solve_many`.
 """
 
 from __future__ import annotations
@@ -217,7 +224,8 @@ def select_many(
         if policy.mode != "fixed_accuracy":
             raise ValueError(
                 f"select_many takes a fixed_accuracy policy, got {policy.mode!r} "
-                "(use controller.solve_many for target modes)"
+                "(use controller.solve_many for the target modes: fixed_psnr, "
+                "fixed_ratio, fixed_ssim, fixed_correlation, fixed_ks)"
             )
         if any(v is not None for v in (eb_abs, eb_rel, r_sp, codecs)):
             raise ValueError(

@@ -78,9 +78,10 @@ from repro.runtime import sharding as rsh
 from . import codecs as _codecs
 from . import controller as ctl
 from . import estimator as est
+from . import quality as qual
 from . import selector as select_mod
 from .embedded import exact_coder_bits_blocks, plane_step
-from .policy import Policy, policy_from_kwargs
+from .policy import TARGET_FIELD, Policy, policy_from_kwargs
 from .selector import (
     Selection,
     _degenerate_selection,
@@ -571,7 +572,14 @@ def plan_tree(
     fixed_accuracy and the sample-block gather (bit-identical decisions)
     for the target modes; 'stats' / 'samples' force a strategy for
     fixed_accuracy ('stats' is invalid for target modes — the §7 secant
-    needs the sampled curves). Fields whose sharding the engine cannot
+    needs the sampled curves). The §7.4 metric modes (fixed_ssim /
+    fixed_correlation / fixed_ks) need no extra collectives: their
+    sufficient statistics (sample variance + the sorted value sample for
+    the KS quantization curve, `core/quality.py`) are derived from the
+    SAME device-extracted halo blocks the secant already gathers, so
+    metric solves decide bit-identically to the host path and the warm
+    path guards them with the psum-reconciled moments fingerprint like
+    any other target mode. Fields whose sharding the engine cannot
     carry (see `analyze`) gather and ride the ordinary host path; their
     decisions are by definition the unsharded ones.
 
@@ -603,11 +611,16 @@ def plan_tree(
         reconcile_eff = "samples"
     else:
         reconcile_eff = "stats" if reconcile in ("auto", "stats") else "samples"
-    target = {
-        "fixed_accuracy": eb_abs if eb_abs is not None else eb_rel,
-        "fixed_psnr": policy.target_psnr,
-        "fixed_ratio": policy.target_ratio,
-    }[mode]
+    if mode == "fixed_accuracy":
+        target = eb_abs if eb_abs is not None else eb_rel
+    else:
+        attr = TARGET_FIELD.get(mode)
+        if attr is None:
+            raise ValueError(
+                f"plan_tree cannot solve mode {mode!r}; supported modes: "
+                f"fixed_accuracy, {', '.join(TARGET_FIELD)}"
+            )
+        target = float(getattr(policy, attr))
 
     arrs = list(arrs)
     n = len(arrs)
@@ -657,9 +670,12 @@ def plan_tree(
         if sel0 is not None:
             sol = None
             if mode != "fixed_accuracy":
+                # raw storage is exact: every quality floor is met (PSNR,
+                # SSIM, correlation, KS) — only fixed_ratio misses target
                 sol = ctl.TargetSolution(
                     sel0, mode, float(target), math.inf, ctl.RAW_BITS,
-                    mode == "fixed_psnr",
+                    mode != "fixed_ratio",
+                    est_metric=qual.lossless_metric(mode),
                 )
             plans[i] = FieldPlan(sel0, sol, lay, view_shape, "degenerate")
             continue

@@ -242,3 +242,101 @@ def test_committed_baseline_covers_both_env_keys():
         "device_encode_speedup",
     }
     assert base["estimation_error_b"] >= 0.0
+
+
+def _quality(violations=None, frac=None, lossy=42, overhead=1.4):
+    return {
+        "violations": {"ssim": 0.01, "correlation": 0.002, "ks": 0.005}
+        if violations is None
+        else violations,
+        "on_target_frac": {"ssim": 1.0, "correlation": 1.0, "ks": 0.95}
+        if frac is None
+        else frac,
+        "lossy_fields": lossy,
+        "solve_overhead_ratio": overhead,
+    }
+
+
+def test_gate_quality_passes_within_tolerance(monkeypatch):
+    """quality_target_accuracy / quality_solve_overhead are ABSOLUTE checks
+    (no baseline key): within-tolerance worst gaps + high claimed fraction
+    + a non-vacuous run + a bounded overhead ratio all pass."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    m = _metrics()
+    m["quality"] = _quality()
+    checks = bg.gate(m, _baseline())
+    acc = [c for c in checks if c["name"] == "quality_target_accuracy"][0]
+    ovh = [c for c in checks if c["name"] == "quality_solve_overhead"][0]
+    assert acc["passed"] and ovh["passed"]
+
+
+def test_gate_quality_fails_on_violation(monkeypatch):
+    """A claimed-on-target field measuring outside quality.TOLERANCE fails,
+    per metric and with the offending gap in the detail."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    for metric, tol in bg.QUALITY_TOLERANCE.items():
+        m = _metrics()
+        m["quality"] = _quality()
+        m["quality"]["violations"][metric] = tol + 0.001
+        acc = [
+            c for c in bg.gate(m, _baseline())
+            if c["name"] == "quality_target_accuracy"
+        ][0]
+        assert not acc["passed"] and metric in acc["detail"]
+        # exactly at tolerance still passes (<=, not <)
+        m["quality"]["violations"][metric] = tol
+        acc = [
+            c for c in bg.gate(m, _baseline())
+            if c["name"] == "quality_target_accuracy"
+        ][0]
+        assert acc["passed"]
+
+
+def test_gate_quality_fails_on_low_claim_fraction_or_vacuous(monkeypatch):
+    """A solver that stops claiming targets (honest misses everywhere) or a
+    run that solved nothing lossy must fail — both would otherwise make
+    the violation number vacuously green."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    m = _metrics()
+    m["quality"] = _quality(frac={"ssim": 0.5, "correlation": 1.0, "ks": 1.0})
+    acc = [
+        c for c in bg.gate(m, _baseline()) if c["name"] == "quality_target_accuracy"
+    ][0]
+    assert not acc["passed"] and "claimed on_target" in acc["detail"]
+    m["quality"] = _quality(lossy=0)
+    acc = [
+        c for c in bg.gate(m, _baseline()) if c["name"] == "quality_target_accuracy"
+    ][0]
+    assert not acc["passed"] and "vacuous" in acc["detail"]
+    # an unmeasured metric fails closed too
+    m["quality"] = _quality(violations={"ssim": 0.01, "correlation": 0.002})
+    acc = [
+        c for c in bg.gate(m, _baseline()) if c["name"] == "quality_target_accuracy"
+    ][0]
+    assert not acc["passed"] and "ks: not measured" in acc["detail"]
+
+
+def test_gate_quality_solve_overhead_ceiling(monkeypatch):
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    m = _metrics()
+    m["quality"] = _quality(overhead=bg.QUALITY_SOLVE_OVERHEAD_MAX)
+    assert [
+        c for c in bg.gate(m, _baseline()) if c["name"] == "quality_solve_overhead"
+    ][0]["passed"]
+    m["quality"] = _quality(overhead=bg.QUALITY_SOLVE_OVERHEAD_MAX + 0.01)
+    assert not [
+        c for c in bg.gate(m, _baseline()) if c["name"] == "quality_solve_overhead"
+    ][0]["passed"]
+
+
+def test_gate_quality_checks_skipped_without_metric(monkeypatch):
+    """Decisions-only baseline refreshes skip the quality bench; the gate
+    must not emit (or fail) the quality checks when the metric is absent."""
+    bg = _load_gate()
+    monkeypatch.setattr(bg, "_env_key", lambda: "table40")
+    checks = bg.gate(_metrics(), _baseline())
+    assert not [c for c in checks if c["name"].startswith("quality_")]

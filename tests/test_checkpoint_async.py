@@ -66,3 +66,104 @@ def test_sync_save_propagates_inline(tmp_path, monkeypatch):
     monkeypatch.setattr(sel, "encode_with_selection", boom)
     with pytest.raises(ValueError, match="encoder exploded"):
         mgr.save(1, _tree())
+
+
+# ---------------------------------------------------------------------------
+# BarrierTimeout requeue (DESIGN.md §6.2): a transiently straggling host
+# fails the attempt; the manager re-runs the write phase under a FRESH
+# save sequence (fresh KV barrier keys) up to cfg.save_retries times.
+# ---------------------------------------------------------------------------
+
+from repro.runtime import dist  # noqa: E402
+
+
+def _flaky_barrier(fail_first_n):
+    """A dist.barrier stand-in that times out on its first N calls and
+    records every barrier key it saw."""
+    calls = []
+
+    def barrier(name, timeout_s):
+        calls.append(name)
+        if len(calls) <= fail_first_n:
+            raise dist.BarrierTimeout(f"barrier {name!r} timed out (injected)")
+
+    return barrier, calls
+
+
+def test_save_requeues_once_on_barrier_timeout(tmp_path, monkeypatch):
+    mgr = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), policy=Policy.fixed_psnr(50.0))
+    )
+    barrier, calls = _flaky_barrier(fail_first_n=1)
+    monkeypatch.setattr(dist, "barrier", barrier)
+    path = mgr.save(1, _tree())
+    assert mgr.last_save_retries == 1
+    # each attempt consumed its own save sequence -> fresh barrier keys,
+    # so a late arrival at the abandoned attempt can never satisfy the new one
+    assert len(calls) == 2 and calls[0] != calls[1]
+    step, flat = mgr.restore()
+    assert step == 1 and flat["w"].shape == (96, 96)
+    assert path.endswith("step_000000001")
+
+
+def test_save_persistent_barrier_timeout_raises(tmp_path, monkeypatch):
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            directory=str(tmp_path), policy=Policy.fixed_psnr(50.0), save_retries=2
+        )
+    )
+    barrier, calls = _flaky_barrier(fail_first_n=10**9)
+    monkeypatch.setattr(dist, "barrier", barrier)
+    with pytest.raises(dist.BarrierTimeout):
+        mgr.save(1, _tree())
+    assert len(calls) == 3  # initial attempt + save_retries requeues
+    assert len(set(calls)) == 3  # every attempt under its own seq
+
+
+def test_save_retries_zero_disables_requeue(tmp_path, monkeypatch):
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            directory=str(tmp_path), policy=Policy.fixed_psnr(50.0), save_retries=0
+        )
+    )
+    barrier, calls = _flaky_barrier(fail_first_n=10**9)
+    monkeypatch.setattr(dist, "barrier", barrier)
+    with pytest.raises(dist.BarrierTimeout):
+        mgr.save(1, _tree())
+    assert len(calls) == 1
+
+
+def test_async_save_result_reports_retries(tmp_path, monkeypatch):
+    """The async caller's view: wait() is clean after a requeued save and
+    thread.save_result carries the landing path + retry count."""
+    mgr = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), policy=Policy.fixed_psnr(50.0))
+    )
+    barrier, _calls = _flaky_barrier(fail_first_n=1)
+    monkeypatch.setattr(dist, "barrier", barrier)
+    thread = mgr.async_save(4, _tree())
+    mgr.wait()  # no raise: the single injected timeout was absorbed
+    assert thread.save_result == {
+        "path": thread.save_result["path"],
+        "retries": 1,
+    }
+    assert thread.save_result["path"].endswith("step_000000004")
+    step, _ = mgr.restore()
+    assert step == 4
+
+
+def test_async_save_persistent_timeout_surfaces_in_wait(tmp_path, monkeypatch):
+    mgr = CheckpointManager(
+        CheckpointConfig(
+            directory=str(tmp_path), policy=Policy.fixed_psnr(50.0), save_retries=1
+        )
+    )
+    barrier, calls = _flaky_barrier(fail_first_n=10**9)
+    monkeypatch.setattr(dist, "barrier", barrier)
+    thread = mgr.async_save(5, _tree())
+    with pytest.raises(dist.BarrierTimeout):
+        mgr.wait()
+    assert thread.save_result is None
+    assert len(calls) == 2
+    # host 0 publishes BEFORE the final fence, so the bytes may be on disk
+    # — but the save still FAILED loudly: no silent success, no hang

@@ -1,0 +1,127 @@
+"""Hypothesis property tests for the quality-metrics subsystem
+(core/quality.py, DESIGN.md §7.4) — optional dependency.
+
+Two property families, per the subsystem's contract:
+
+* predicted metric-vs-bound curves are monotone in the error bound for
+  BOTH codecs: SSIM and correlation non-increasing, KS non-decreasing
+  (target inversion relies on this — `metric_curves` forces it, and
+  these tests pin the promise across field families and scales);
+* on synthetic fields where the residual models apply (Gaussian white
+  noise, random walks, noisy ramps), the §7.4 estimators agree with the
+  metric MEASURED on the real encode+decode reconstruction in the
+  contract's direction: floors (SSIM/correlation) never over-promised by
+  more than the tolerance, the KS ceiling never under-promised.
+
+`pytest.importorskip` keeps a bare jax+numpy+pytest environment green;
+the CI `property` job installs hypothesis and runs these for real.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Policy, decompress, encode_with_selection, solve_many
+from repro.core import quality as qual
+
+pytestmark = pytest.mark.property
+
+
+def _field(kind, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    if kind == "white2d":
+        x = scale * rng.standard_normal((96, 96))
+    elif kind == "walk2d":
+        x = np.cumsum(scale * rng.standard_normal((96, 96)), axis=0)
+    elif kind == "walk3d":
+        x = np.cumsum(scale * rng.standard_normal((16, 32, 32)), axis=2)
+    else:  # ramp3d
+        x = np.linspace(0.0, 4.0 * scale, 12 * 32 * 32).reshape(12, 32, 32)
+        x = x + 0.05 * scale * rng.standard_normal(x.shape)
+    return x.astype(np.float32)
+
+
+KINDS = ["white2d", "walk2d", "walk3d", "ramp3d"]
+BOUNDS = np.logspace(-4, 0, 12)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    kind=st.sampled_from(KINDS),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(0.25, 16.0),
+)
+def test_metric_curves_monotone_in_bound(kind, seed, scale):
+    """SSIM/correlation non-increasing, KS non-decreasing in eb, for both
+    codec curves — exactly the invariant the §7.4 inversion needs."""
+    x = _field(kind, seed, scale)
+    bounds = BOUNDS * float(np.ptp(x))
+    curves = qual.metric_curves(x, bounds)
+    for codec in ("sz", "zfp"):
+        ssim = np.asarray(curves[f"ssim_{codec}"])
+        corr = np.asarray(curves[f"correlation_{codec}"])
+        ks = np.asarray(curves[f"ks_{codec}"])
+        assert np.all(np.diff(ssim) <= 1e-12)
+        assert np.all(np.diff(corr) <= 1e-12)
+        assert np.all(np.diff(ks) >= -1e-12)
+        # SSIM's true range is [-1, 1]: coarse quantization can flip the
+        # mean's sign and take the luminance term slightly negative
+        assert np.all((-1.0 - 1e-9 <= ssim) & (ssim <= 1.0 + 1e-9))
+        assert np.all((-1.0 - 1e-9 <= corr) & (corr <= 1.0 + 1e-9))
+        assert np.all((0.0 - 1e-12 <= ks) & (ks <= 1.0 + 1e-12))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    kind=st.sampled_from(KINDS),
+    seed=st.integers(0, 2**16),
+    metric=st.sampled_from(["ssim", "correlation", "ks"]),
+)
+def test_estimator_agrees_with_measured(kind, seed, metric):
+    """Solve a mid-range target, encode+decode for real, and check the
+    solver's `est_metric` against the measured metric in the contract's
+    one-sided direction (floors may only overshoot, the KS ceiling may
+    only undershoot) within quality.TOLERANCE."""
+    x = _field(kind, seed)
+    target = {"ssim": 0.95, "correlation": 0.995, "ks": 0.1}[metric]
+    pol = {
+        "ssim": Policy.fixed_ssim,
+        "correlation": Policy.fixed_correlation,
+        "ks": Policy.fixed_ks,
+    }[metric](target)
+    sol = solve_many([x], pol)[0]
+    assert sol.est_metric is not None
+    cf = encode_with_selection(x, sol.selection)
+    rec = decompress(cf).reshape(x.shape)
+    achieved = qual.measured_metric(metric, x, rec)
+    # estimate honest against measurement...
+    assert qual.metric_gap(metric, achieved, sol.est_metric) <= qual.TOLERANCE[metric]
+    # ...and a claimed-on-target solve honest against the TARGET
+    if sol.on_target:
+        assert qual.metric_gap(metric, achieved, target) <= qual.TOLERANCE[metric]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    scale=st.floats(0.5, 8.0),
+    var_frac=st.floats(1e-6, 0.25),
+)
+def test_sampled_ssim_inversion_consistent(seed, scale, var_frac):
+    """mse_for_ssim_sampled and ssim_from_mse_sampled are mutual inverses
+    along the measured quantization curve, and the sampled SSIM never
+    exceeds the independent-error closed form (correlated quantization
+    error only depresses contrast/structure)."""
+    x = _field("walk2d", seed, scale)
+    stats = qual.stats_from_field(x)
+    mse = var_frac * stats.var
+    s = qual.ssim_from_mse_sampled(stats, mse)
+    assert -1.0 <= s <= 1.0
+    assert s <= qual.ssim_from_mse(mse, stats.var, stats.vr) + 1e-9
+    if 0.0 < s < 1.0:
+        mse_back = qual.mse_for_ssim_sampled(stats, s)
+        s_back = qual.ssim_from_mse_sampled(stats, mse_back)
+        assert abs(s_back - s) <= 1e-6 + 1e-3 * (1.0 - s)

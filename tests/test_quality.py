@@ -1,0 +1,255 @@
+"""Quality-metrics subsystem (DESIGN.md §7.4): SSIM / correlation / KS as
+first-class Policy targets.
+
+Covers the new-subsystem surface end to end: targets actually achieved on
+real encode+decode round-trips (one-sided `metric_gap` within the
+documented tolerances), Policy spec/from_spec JSON round-trips and the
+unknown-mode errors, PolicySet grouping with mixed PSNR/SSIM/correlation
+trees, manifest-v3 `quality` rows + restore, decision-cache key
+separation and warm bit-identity, and sharded `plan_tree` parity with the
+host solver.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Policy,
+    PolicySet,
+    compress_pytree,
+    decompress,
+    decompress_pytree,
+    encode_with_selection,
+    solve_many,
+)
+from repro.core import quality as qual
+from repro.core.decision_cache import DecisionCache
+from repro.core.policy import METRIC_MODES, policy_from_kwargs
+
+
+def _fields():
+    rng = np.random.default_rng(11)
+    smooth = np.cumsum(
+        np.cumsum(rng.standard_normal((48, 48)).astype(np.float32), 0), 1
+    )
+    noisy = (
+        np.cumsum(rng.standard_normal((40, 40)).astype(np.float32), 0)
+        + 0.05 * rng.standard_normal((40, 40)).astype(np.float32)
+    )
+    vol = np.cumsum(rng.standard_normal((12, 24, 24)).astype(np.float32), 1)
+    return {"smooth": smooth, "noisy": noisy, "vol": vol}
+
+
+POLICY_OF = {
+    "ssim": Policy.fixed_ssim,
+    "correlation": Policy.fixed_correlation,
+    "ks": Policy.fixed_ks,
+}
+TARGET_OF = {"ssim": 0.97, "correlation": 0.995, "ks": 0.1}
+
+
+@pytest.mark.parametrize("metric", sorted(TARGET_OF))
+def test_metric_targets_achieved_on_roundtrip(metric):
+    """Solve -> encode -> decode -> measure: every claimed-on-target field
+    must land within quality.TOLERANCE, one-sided (floors for
+    SSIM/correlation, ceiling for KS). Zero trial compressions by
+    construction — solve_many runs before any encode."""
+    target = TARGET_OF[metric]
+    fields = _fields()
+    sols = solve_many(list(fields.values()), POLICY_OF[metric](target))
+    claimed = 0
+    for (name, a), sol in zip(fields.items(), sols):
+        assert sol.mode == f"fixed_{metric}" and sol.target == target
+        assert sol.est_metric is not None
+        cf = encode_with_selection(a, sol.selection)
+        rec = decompress(cf).reshape(a.shape)
+        achieved = qual.measured_metric(metric, a, rec)
+        gap = qual.metric_gap(metric, achieved, target)
+        if sol.on_target:
+            claimed += 1
+            assert gap <= qual.TOLERANCE[metric], (
+                f"{name}: measured {metric} {achieved:.4f} misses "
+                f"target {target} by {gap:+.4f}"
+            )
+        # the estimate must be honest in the contract's direction: for
+        # floors (ssim/correlation) measured quality may exceed the
+        # estimate freely but not undershoot it; for the KS ceiling the
+        # estimate is conservative, so measured may only be lower
+        assert (
+            qual.metric_gap(metric, achieved, sol.est_metric)
+            <= qual.TOLERANCE[metric]
+        )
+    assert claimed >= 2, "solver claimed almost nothing on-target"
+
+
+def test_metric_spec_json_roundtrip():
+    """spec() -> JSON -> from_spec reproduces each metric policy exactly."""
+    for pol in (
+        Policy.fixed_ssim(0.98),
+        Policy.fixed_correlation(0.999),
+        Policy.fixed_ks(0.05, r_sp=0.1),
+    ):
+        spec = json.loads(json.dumps(pol.spec()))
+        assert Policy.from_spec(spec) == pol
+
+
+def test_unknown_mode_errors_name_supported_modes():
+    with pytest.raises(ValueError, match="unknown quality mode 'fixed_vibes'"):
+        Policy.from_spec({"mode": "fixed_vibes", "target_ssim": 0.9})
+    with pytest.raises(ValueError, match="fixed_ssim"):
+        # the message must enumerate the supported modes
+        Policy.from_spec({"mode": "nope"})
+    with pytest.raises(ValueError, match="no legacy-kwarg spelling"):
+        policy_from_kwargs("test", mode="fixed_ssim")
+    with pytest.raises(ValueError, match="unknown quality mode"):
+        policy_from_kwargs("test", mode="fixed_nonsense")
+
+
+def test_metric_policy_validation():
+    for ctor in (Policy.fixed_ssim, Policy.fixed_correlation, Policy.fixed_ks):
+        with pytest.raises(ValueError):
+            ctor(0.0)
+        with pytest.raises(ValueError):
+            ctor(1.5)
+
+
+def test_mixed_policyset_tree_grouping():
+    """One tree, three contracts: each leaf resolves its own mode and the
+    manifest of selections reflects per-mode targets."""
+    fields = _fields()
+    pset = PolicySet(
+        default=Policy.fixed_ssim(0.97),
+        rules=[
+            ("noisy", Policy.fixed_psnr(50.0)),
+            ("vol", Policy.fixed_correlation(0.995)),
+        ],
+    )
+    ct = compress_pytree(dict(fields), pset, workers=0)
+    out = decompress_pytree(ct)
+    for name, a in fields.items():
+        assert out[name].shape == a.shape
+    rec = out["vol"]
+    assert qual.measured_correlation(fields["vol"], rec) >= 0.995 - qual.TOLERANCE[
+        "correlation"
+    ]
+
+
+def test_solve_many_unknown_mode_raises():
+    from repro.core import controller as ctl
+
+    pol = Policy.fixed_ssim(0.97)
+    object.__setattr__(pol, "mode", "fixed_mystery")
+    with pytest.raises(ValueError, match="fixed_mystery"):
+        ctl.solve_many([_fields()["noisy"]], pol)
+
+
+def test_decision_cache_keys_separate_metric_targets():
+    """fixed_ssim(0.98), fixed_ssim(0.95) and fixed_psnr(60) must never
+    share a cache entry for the same field."""
+    cache = DecisionCache()
+    x = _fields()["smooth"]
+    for pol in (
+        Policy.fixed_ssim(0.98),
+        Policy.fixed_ssim(0.95),
+        Policy.fixed_psnr(60.0),
+    ):
+        solve_many([x], pol, cache=cache, names=["f"])
+    # one name -> latest entry only, but lookups under the other policies miss
+    sols = solve_many([x], Policy.fixed_psnr(60.0), cache=cache, names=["f"])
+    assert cache.events["f"] == "hit"
+    solve_many([x], Policy.fixed_ssim(0.98), cache=cache, names=["f"])
+    assert cache.events["f"] == "invalidated"  # key mismatch, not a stale hit
+    assert sols[0].mode == "fixed_psnr"
+
+
+def test_warm_metric_solve_bit_identical():
+    """Second solve through a validating cache replays the cold decision
+    exactly (selection AND solution scalars), with est_metric persisted."""
+    cache = DecisionCache()
+    fields = _fields()
+    arrs, names = list(fields.values()), list(fields)
+    pol = Policy.fixed_ks(0.1)
+    cold = solve_many(arrs, pol, cache=cache, names=names)
+    warm = solve_many(arrs, pol, cache=cache, names=names)
+    assert all(cache.events[n] == "hit" for n in names)
+    for c, w in zip(cold, warm):
+        assert c.selection == w.selection
+        assert (c.mode, c.target, c.est_psnr, c.est_bitrate, c.on_target,
+                c.est_metric) == (
+            w.mode, w.target, w.est_psnr, w.est_bitrate, w.on_target,
+            w.est_metric,
+        )
+
+
+def test_manifest_v3_quality_rows_and_restore(tmp_path):
+    """Flat manifests record per-field quality rows (mode / target /
+    est_metric / on_target) and the legacy top-level target mirrors the
+    metric target; restore round-trips."""
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+
+    fields = _fields()
+    mgr = CheckpointManager(
+        CheckpointConfig(directory=str(tmp_path), policy=Policy.fixed_ssim(0.97))
+    )
+    path = mgr.save(3, dict(fields))
+    man = json.load(open(f"{path}/manifest.json"))
+    assert man["mode"] == "fixed_ssim" and man["target"] == 0.97
+    rows = {fl["name"]: fl for fl in man["fields"]}
+    for name in fields:
+        q = rows[name]["quality"]
+        assert q["mode"] == "fixed_ssim" and q["target"] == 0.97
+        assert 0.0 < q["est_metric"] <= 1.0
+        assert isinstance(q["on_target"], bool)
+        assert rows[name]["policy"]["mode"] == "fixed_ssim"
+    step, flat = mgr.restore()
+    assert step == 3
+    for name, a in fields.items():
+        assert flat[name].shape == a.shape and flat[name].dtype == a.dtype
+
+
+def test_sharded_plan_tree_matches_host_solver(emulated_devices):
+    """Metric-mode plan_tree decisions on sharded arrays are bit-identical
+    to the host solve_many path (the §6 sample-gather reconciliation)."""
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    from repro.core import sharded as shd
+
+    fields = _fields()
+    mesh = Mesh(np.array(jax.devices()[:2]), ("x",))
+    arrs = []
+    for name, a in fields.items():
+        if a.ndim == 2:
+            arrs.append(
+                jax.device_put(a, NamedSharding(mesh, PartitionSpec("x", None)))
+            )
+        else:
+            arrs.append(a)
+    pol = Policy.fixed_correlation(0.995)
+    plans = shd.plan_tree(arrs, pol)
+    host = solve_many(list(fields.values()), pol)
+    for plan, sol in zip(plans, host):
+        assert plan.selection == sol.selection
+        assert plan.solution.est_metric == sol.est_metric
+        assert plan.solution.on_target == sol.on_target
+
+
+def test_degenerate_fields_report_lossless_metric():
+    """Tiny/constant fields ride raw and report the metric's lossless value
+    with on_target=True (raw meets every floor/ceiling except a ratio)."""
+    tiny = np.ones((2, 2), np.float32)
+    for metric, pol in (
+        ("ssim", Policy.fixed_ssim(0.9)),
+        ("ks", Policy.fixed_ks(0.05)),
+    ):
+        sol = solve_many([tiny], pol)[0]
+        assert sol.selection.codec == "raw"
+        assert sol.on_target is True
+        assert sol.est_metric == qual.LOSSLESS_VALUE[metric]
+
+
+def test_metric_modes_tuple_exported():
+    assert METRIC_MODES == ("fixed_ssim", "fixed_correlation", "fixed_ks")
+    assert set(qual.MODE_METRIC) == set(METRIC_MODES)

@@ -35,7 +35,16 @@ when:
   over the device's own codes and the `device_encode_parity` check —
   absolute — fails on any stream mismatch (an all-declined run counts
   as vacuous and fails too); the end-to-end `device_encode_speedup`
-  geomean rides the 20% ratio rule.
+  geomean rides the 20% ratio rule, or
+* the **quality-metric targets** (DESIGN.md §7.4) stop landing:
+  `benchmarks/bench_quality.py` solves SSIM / correlation / KS targets on
+  the smoke suites, really encodes+decodes, and measures the metrics; the
+  `quality_target_accuracy` check — absolute — fails when any
+  claimed-on-target field measures outside `quality.TOLERANCE`, when the
+  solver claims fewer than `QUALITY_ON_TARGET_MIN` of the fields, or when
+  the run is vacuous; `quality_solve_overhead` — absolute — fails when the
+  metric solves cost more than `QUALITY_SOLVE_OVERHEAD_MAX` x the
+  fixed_ratio solve on the same fields (the §7 envelope).
 
 Throughput is tracked as *ratios* (batched-vs-per-field selection speedup,
 3-D-kernel-vs-fallback speedup, shard-local-vs-gather save speedup) and
@@ -43,7 +52,7 @@ estimation quality as bits/value error — machine-relative numbers a
 committed baseline can gate across runner generations; raw wall times are
 recorded in the report but never gated.
 
-  python tools/bench_gate.py --out BENCH_9.json     # gate (CI `bench` job)
+  python tools/bench_gate.py --out BENCH_10.json    # gate (CI `bench` job)
   python tools/bench_gate.py --update-baseline      # refresh the baseline
   REPRO_SZ_TABLE_BITS=5 python tools/bench_gate.py --update-baseline \
       --decisions-only                              # other env's decisions
@@ -85,6 +94,19 @@ EST_ABS_SLACK = 0.05
 #: (measured ~1.4-1.6%); the ceiling adds headroom for runner noise
 #: while still failing if the warm path ever grows real per-field work.
 WARM_OVERHEAD_MAX_PCT = 3.0
+#: quality-metric targets (DESIGN.md §7.4) — all absolute, no baseline.
+#: Tolerances mirror `repro.core.quality.TOLERANCE`; the measurement half
+#: asserts they match so the copies cannot drift (gate() itself must stay
+#: importable without PYTHONPATH=src for the comparator unit tests).
+QUALITY_TOLERANCE = {"ssim": 0.02, "correlation": 0.005, "ks": 0.02}
+#: the solver must CLAIM on_target on at least this fraction of smoke
+#: fields (claimed misses are honest — see bench_quality — but a solver
+#: that stops landing anywhere has regressed)
+QUALITY_ON_TARGET_MIN = 0.9
+#: metric solves may cost at most this multiple of fixed_ratio's solve
+#: time on the same fields (geomean; the §7 overhead envelope — the
+#: metric modes add only per-field numpy statistics to the shared secant)
+QUALITY_SOLVE_OVERHEAD_MAX = 3.0
 
 
 def _env_key() -> str:
@@ -236,6 +258,28 @@ def bench_device_encode(repeat: int) -> dict:
     return de.run(size=64, n_fields=2, repeat=repeat)
 
 
+def bench_quality() -> tuple[dict, dict]:
+    """Quality-metric target accuracy (DESIGN.md §7.4): smoke-scale
+    achieved-vs-target with real encode+decode+measure, gated absolutely
+    by `quality_target_accuracy` / `quality_solve_overhead`."""
+    from benchmarks import bench_quality as bq
+    from repro.core import quality as qual
+
+    assert QUALITY_TOLERANCE == qual.TOLERANCE, (
+        "tools/bench_gate.QUALITY_TOLERANCE drifted from "
+        "repro.core.quality.TOLERANCE — update the gate copy"
+    )
+    out = bq.run(smoke=True)
+    summary = {
+        k: out[k]
+        for k in (
+            "violations", "on_target_frac", "lossy_fields",
+            "solve_overhead_ratio",
+        )
+    }
+    return summary, {"quality": out["rows"]}
+
+
 def gate(metrics: dict, baseline: dict) -> list[dict]:
     """Compare current metrics against the baseline -> list of checks."""
     checks: list[dict] = []
@@ -372,6 +416,46 @@ def gate(metrics: dict, baseline: dict) -> list[dict]:
                 ),
             )
         )
+    q = metrics.get("quality")
+    if q is not None:
+        # absolute, two-part: claimed-on-target fields must MEASURE within
+        # tolerance (SSIM/correlation floors, KS ceiling — one-sided
+        # `metric_gap`), and the solver must keep claiming most fields;
+        # a run that solved nothing lossy is vacuous and fails
+        bad_q = []
+        for m, tol in QUALITY_TOLERANCE.items():
+            v = q["violations"].get(m)
+            if v is None:
+                bad_q.append(f"{m}: not measured")
+            elif v > tol:
+                bad_q.append(f"{m}: worst gap {v:+.4f} > tol {tol}")
+            frac = q["on_target_frac"].get(m, 0.0)
+            if frac < QUALITY_ON_TARGET_MIN:
+                bad_q.append(
+                    f"{m}: claimed on_target {frac:.2f} < "
+                    f"{QUALITY_ON_TARGET_MIN}"
+                )
+        if not q.get("lossy_fields"):
+            bad_q.append("vacuous: no lossy fields solved")
+        checks.append(
+            dict(
+                name="quality_target_accuracy",
+                passed=not bad_q,
+                detail=("; ".join(bad_q) if bad_q else
+                        "worst gaps " + ", ".join(
+                            f"{m} {q['violations'][m]:+.4f}<=+{t}"
+                            for m, t in QUALITY_TOLERANCE.items()
+                        )),
+            )
+        )
+        checks.append(
+            dict(
+                name="quality_solve_overhead",
+                passed=q["solve_overhead_ratio"] <= QUALITY_SOLVE_OVERHEAD_MAX,
+                detail=f"{q['solve_overhead_ratio']:.2f}x fixed_ratio solve "
+                f"(ceiling {QUALITY_SOLVE_OVERHEAD_MAX:.0f}x)",
+            )
+        )
     base_err = baseline.get("estimation_error_b")
     cur_err = metrics["estimation_error_b"]
     if base_err is None:
@@ -390,7 +474,7 @@ def gate(metrics: dict, baseline: dict) -> list[dict]:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_9.json", help="report path")
+    ap.add_argument("--out", default="BENCH_10.json", help="report path")
     ap.add_argument("--update-baseline", action="store_true")
     ap.add_argument(
         "--decisions-only",
@@ -457,6 +541,15 @@ def main() -> int:
             f"  device_encode: {dev['device_encode_speedup']:.2f}x geomean "
             f"(sz {dev['speedups']['sz']:.2f}x, zfp {dev['speedups']['zfp']:.2f}x), "
             f"parity mismatches {dev['parity_mismatches'] or 'none'}",
+            flush=True,
+        )
+        qsum, q_raw = bench_quality()
+        raw.update(q_raw)
+        metrics["quality"] = qsum
+        print(
+            "  quality: worst gaps "
+            + ", ".join(f"{m} {v:+.4f}" for m, v in qsum["violations"].items())
+            + f", solve overhead {qsum['solve_overhead_ratio']:.2f}x",
             flush=True,
         )
 
